@@ -1,0 +1,360 @@
+"""One benchmark per paper figure/table (see DESIGN.md §7 for the index).
+
+Each ``figNN_*`` function takes the shared setup and returns CSV rows.
+All structural metrics (recall, I/O, tunnels) are measured; device-time
+columns are io_model-derived (constants from the paper's Table 5).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import SearchConfig, recall_at_k
+from repro.core.graph import beam_search_batch, build_filtered_vamana
+from repro.core.io_model import DEFAULT_COST_MODEL, GEN5_COST_MODEL, IOCostModel
+from repro.data import (
+    filtered_ground_truth,
+    kmeans_correlated_labels,
+    norm_bin_attribute,
+    zipf_labels,
+)
+from repro.data.labels import multilabel_queries, multilabel_tags
+from repro.core.filter_store import pack_tags
+
+
+def fig01_motivation(ctx):
+    """Post-filter plateau vs naive pre-filter recall collapse."""
+    rows = []
+    for mode in ("post", "pre_naive"):
+        for r in common.sweep(ctx["engine"], ctx["queries"], ctx["gt"], mode=mode):
+            rows.append(dict(name=f"fig01_{mode}_L{r['L']}", lat1_us=r["lat1_us"],
+                             derived=r["recall"], qps32=r["qps32"]))
+    return rows
+
+
+def fig05_main(ctx):
+    """Main tradeoff curves: DiskANN(sync W=8) / PipeANN(W=32) / GateANN."""
+    rows = []
+    systems = {
+        "diskann": dict(mode="post", beam_width=8, pipe=1),   # sync batch: no overlap
+        "pipeann": dict(mode="post", beam_width=8, pipe=32),
+        "gateann": dict(mode="gate", beam_width=8, pipe=32),
+    }
+    for name, s in systems.items():
+        for r in common.sweep(ctx["engine"], ctx["queries"], ctx["gt"], mode=s["mode"],
+                              beam_width=s["beam_width"]):
+            m = IOCostModel(pipeline_depth=s["pipe"])
+            lat = m.latency_us(r["ios"], r["tunnels"], r["exact"])
+            qps = m.qps(r["ios"], r["tunnels"], n_exact=r["exact"])
+            rows.append(dict(name=f"fig05_{name}_L{r['L']}", lat1_us=lat,
+                             derived=r["recall"], qps32=qps))
+    return rows
+
+
+def fig06_scaling(ctx):
+    """Thread scaling at L=200: gate breaks the ~430K IOPS ceiling."""
+    rows = []
+    for mode in ("post", "gate"):
+        r = common.sweep(ctx["engine"], ctx["queries"], ctx["gt"], mode=mode,
+                         l_values=(200,))[0]
+        for t in (1, 2, 4, 8, 16, 32):
+            qps = DEFAULT_COST_MODEL.qps(r["ios"], r["tunnels"], n_threads=t,
+                                         n_exact=r["exact"])
+            rows.append(dict(name=f"fig06_{mode}_T{t}", lat1_us=r["lat1_us"],
+                             derived=qps))
+    return rows
+
+
+def fig07_io(ctx):
+    """Measured I/O reduction vs the 1/s expectation at s = 5/10/20%."""
+    rows = []
+    # (a) ios vs L — the two curves stay parallel (structural property)
+    for mode in ("post", "gate"):
+        for r in common.sweep(ctx["engine"], ctx["queries"], ctx["gt"], mode=mode):
+            rows.append(dict(name=f"fig07a_{mode}_L{r['L']}", lat1_us=r["lat1_us"],
+                             derived=r["ios"]))
+    # (b) measured reduction vs expected 1/s at s = 5/10/20%
+    labels = ctx["labels"]
+    half = (labels == 0) & (np.arange(len(labels)) % 2 == 0)
+    configs = {
+        5: np.where(half, 0, 1).astype(np.int32),     # class 0 -> ~5%
+        10: labels,                                    # 10 uniform classes
+        20: (labels // 2).astype(np.int32),            # 5 classes of ~20%
+    }
+    for s_pct, labs in configs.items():
+        eng = (ctx["engine"] if s_pct == 10
+               else common.build_engine(ctx["corpus"], ctx["graph"], labels=labs))
+        res = {}
+        for mode in ("post", "gate"):
+            out = eng.search(ctx["queries"], filter_kind="label",
+                             filter_params=np.zeros(common.NQ, np.int32),
+                             search_config=SearchConfig(mode=mode, search_l=100,
+                                                        beam_width=8))
+            res[mode] = float(np.mean(np.asarray(out.stats.n_ios)))
+        rows.append(dict(name=f"fig07b_s{s_pct}", lat1_us=0.0,
+                         derived=res["post"] / max(res["gate"], 1e-9)))
+    return rows
+
+
+def fig08_scale(ctx):
+    """N-sweep: the I/O reduction is scale-invariant (paper: 100M -> 1B)."""
+    rows = []
+    for n in (5_000, 10_000, 20_000):
+        corpus, graph = common.cached_graph(n=n, tag="scale")
+        labels = common.uniform_labels(n, 10, seed=0)
+        queries = common.make_queries(corpus, 32, seed=1)
+        eng = common.build_engine(corpus, graph, labels=labels)
+        got = {}
+        for mode in ("post", "gate"):
+            out = eng.search(queries, filter_kind="label",
+                             filter_params=np.zeros(32, np.int32),
+                             search_config=SearchConfig(mode=mode, search_l=100,
+                                                        beam_width=8))
+            got[mode] = float(np.mean(np.asarray(out.stats.n_ios)))
+        rows.append(dict(name=f"fig08_n{n}", lat1_us=0.0,
+                         derived=got["post"] / max(got["gate"], 1e-9)))
+    return rows
+
+
+def fig09_multilabel(ctx):
+    """YFCC-style multi-label subset predicates, variable selectivity."""
+    import jax.numpy as jnp
+
+    n = len(ctx["labels"])
+    tags = multilabel_tags(n, vocab=2048, mean_tags=6.0, seed=0)
+    bits = pack_tags(tags, 2048)
+    eng = common.build_engine(ctx["corpus"], ctx["graph"], tag_bits=bits)
+    qtags = multilabel_queries(tags, common.NQ, n_tags=(1, 2), seed=2)
+    qbits = jnp.asarray(pack_tags(qtags, 2048))
+    # ground truth per query
+    tagsets = [set(t) for t in tags]
+    mask = np.stack([
+        np.asarray([set(qt) <= ts for ts in tagsets]) for qt in qtags
+    ])
+    gt = filtered_ground_truth(ctx["corpus"], ctx["queries"], mask, k=10)
+    sel = mask.mean()
+    rows = []
+    for mode in ("post", "gate"):
+        for r in common.sweep(eng, ctx["queries"], gt, mode=mode,
+                              filter_kind="tags", filter_params=qbits,
+                              l_values=(40, 100, 200)):
+            rows.append(dict(name=f"fig09_{mode}_L{r['L']}", lat1_us=r["lat1_us"],
+                             derived=r["recall"], qps32=r["qps32"]))
+    rows.append(dict(name="fig09_mean_selectivity", lat1_us=0.0, derived=sel))
+    return rows
+
+
+def fig10_vamana(ctx):
+    """In-memory Vamana (full-precision post-filter) vs GateANN."""
+    import jax.numpy as jnp
+
+    rows = []
+    labels = ctx["labels"]
+    corpus_j = jnp.asarray(ctx["corpus"])
+    queries_j = jnp.asarray(ctx["queries"])
+    for L in (60, 100, 200):
+        res = beam_search_batch(
+            ctx["graph"].neighbors, corpus_j, ctx["graph"].medoid, queries_j,
+            search_l=L, beam_width=8, max_expand=4 * L,
+        )
+        ids = np.asarray(res.ids)
+        keep = np.where(labels[np.maximum(ids, 0)] == 0, ids, -1)
+        rec = recall_at_k(jnp.asarray(keep), ctx["gt"], 10)
+        n_exp = float(np.mean(np.asarray(res.n_expanded)))
+        # in-memory: exact distance per expansion, no I/O
+        lat = n_exp * (DEFAULT_COST_MODEL.exact_dist_us + DEFAULT_COST_MODEL.list_mgmt_us)
+        rows.append(dict(name=f"fig10_vamana_L{L}", lat1_us=lat, derived=rec))
+    for r in common.sweep(ctx["engine"], ctx["queries"], ctx["gt"], mode="gate",
+                          l_values=(60, 100, 200)):
+        rows.append(dict(name=f"fig10_gateann_L{r['L']}", lat1_us=r["lat1_us"],
+                         derived=r["recall"]))
+    return rows
+
+
+def fig11_fdiskann(ctx):
+    """F-DiskANN: label-aware FilteredVamana vs GateANN on the standard graph."""
+    fg = build_filtered_vamana(ctx["corpus"], ctx["labels"], degree=common.DEGREE,
+                               build_l=common.BUILD_L, batch_size=512)
+    import jax.numpy as jnp
+    from repro.core.graph import VamanaGraph
+
+    eng_f = common.build_engine(
+        ctx["corpus"], VamanaGraph(neighbors=fg.neighbors, medoid=fg.medoid),
+        labels=ctx["labels"],
+    )
+    rows = []
+    for r in common.sweep(eng_f, ctx["queries"], ctx["gt"], mode="post",
+                          l_values=(60, 100, 200)):
+        rows.append(dict(name=f"fig11_fdiskann_L{r['L']}", lat1_us=r["lat1_us"],
+                         derived=r["recall"], ios=r["ios"]))
+    for r in common.sweep(ctx["engine"], ctx["queries"], ctx["gt"], mode="post",
+                          l_values=(60, 100, 200)):
+        rows.append(dict(name=f"fig11_diskann_L{r['L']}", lat1_us=r["lat1_us"],
+                         derived=r["recall"], ios=r["ios"]))
+    for r in common.sweep(ctx["engine"], ctx["queries"], ctx["gt"], mode="gate",
+                          l_values=(60, 100, 200)):
+        rows.append(dict(name=f"fig11_gateann_L{r['L']}", lat1_us=r["lat1_us"],
+                         derived=r["recall"], ios=r["ios"]))
+    return rows
+
+
+def fig12_selectivity(ctx):
+    """Gain scales like 1/s (5/10/20%) while post is s-independent."""
+    rows = []
+    labels = ctx["labels"]
+    half = (labels == 0) & (np.arange(len(labels)) % 2 == 0)
+    configs = {
+        5: np.where(half, 0, 1).astype(np.int32),
+        10: labels,
+        20: (labels // 2).astype(np.int32),  # merge pairs: 5 classes of ~20%
+    }
+    for s_pct, labs in configs.items():
+        eng = (ctx["engine"] if s_pct == 10
+               else common.build_engine(ctx["corpus"], ctx["graph"], labels=labs))
+        gt = filtered_ground_truth(ctx["corpus"], ctx["queries"], labs == 0, k=10)
+        for mode in ("post", "gate"):
+            r = common.sweep(eng, ctx["queries"], gt, mode=mode, l_values=(100,))[0]
+            rows.append(dict(name=f"fig12_{mode}_s{s_pct}", lat1_us=r["lat1_us"],
+                             derived=r["qps32"], recall=r["recall"]))
+    return rows
+
+
+def fig13_rmax(ctx):
+    """DRAM-performance tradeoff: sweep R_max (runtime knob, no rebuild)."""
+    rows = []
+    for r_max in (4, 8, 16, 32):
+        eng = common.build_engine(ctx["corpus"], ctx["graph"], labels=ctx["labels"],
+                                  r_max=r_max)
+        r = common.sweep(eng, ctx["queries"], ctx["gt"], mode="gate", l_values=(100,))[0]
+        dram = eng.neighbor_store.memory_bytes()
+        rows.append(dict(name=f"fig13_rmax{r_max}", lat1_us=r["lat1_us"],
+                         derived=r["recall"], qps32=r["qps32"], dram_bytes=dram))
+    return rows
+
+
+def fig14_zipf(ctx):
+    """Zipf(1.0) labels, queries uniform over classes (mixed selectivity)."""
+    labs = zipf_labels(len(ctx["labels"]), 10, alpha=1.0, seed=0)
+    eng = common.build_engine(ctx["corpus"], ctx["graph"], labels=labs)
+    rng = np.random.default_rng(0)
+    targets = rng.integers(0, 10, common.NQ).astype(np.int32)
+    mask = labs[None, :] == targets[:, None]
+    gt = filtered_ground_truth(ctx["corpus"], ctx["queries"], mask, k=10)
+    rows = []
+    for mode in ("post", "gate"):
+        for r in common.sweep(eng, ctx["queries"], gt, mode=mode,
+                              filter_params=targets, l_values=(60, 100, 200)):
+            rows.append(dict(name=f"fig14_{mode}_L{r['L']}", lat1_us=r["lat1_us"],
+                             derived=r["recall"], qps32=r["qps32"]))
+    return rows
+
+
+def fig15_correlation(ctx):
+    """Label–vector correlation alpha in {0, 0.5, 1.0} via k-means labels."""
+    rows = []
+    for alpha in (0.0, 0.5, 1.0):
+        labs = kmeans_correlated_labels(ctx["corpus"], 10, alpha=alpha, seed=0)
+        eng = common.build_engine(ctx["corpus"], ctx["graph"], labels=labs)
+        gt = filtered_ground_truth(ctx["corpus"], ctx["queries"], labs == 0, k=10)
+        for mode in ("post", "gate"):
+            r = common.sweep(eng, ctx["queries"], gt, mode=mode, l_values=(150,))[0]
+            rows.append(dict(name=f"fig15_{mode}_a{alpha}", lat1_us=r["lat1_us"],
+                             derived=r["recall"], ios=r["ios"]))
+    return rows
+
+
+def fig16_range(ctx):
+    """Range predicate over L2-norm equal-frequency bins (~10% selectivity)."""
+    norms, edges = norm_bin_attribute(ctx["corpus"], 10)
+    eng = common.build_engine(ctx["corpus"], ctx["graph"], attributes=norms)
+    lo, hi = edges[4], edges[5]
+    mask = (norms >= lo) & (norms <= hi)
+    gt = filtered_ground_truth(ctx["corpus"], ctx["queries"], mask, k=10)
+    b = common.NQ
+    fp = (np.full(b, lo, np.float32), np.full(b, hi, np.float32))
+    rows = []
+    for mode in ("post", "gate"):
+        for r in common.sweep(eng, ctx["queries"], gt, mode=mode, filter_kind="range",
+                              filter_params=fp, l_values=(60, 100, 200)):
+            rows.append(dict(name=f"fig16_{mode}_L{r['L']}", lat1_us=r["lat1_us"],
+                             derived=r["recall"], qps32=r["qps32"]))
+    return rows
+
+
+def fig17_pipeline(ctx):
+    """W sweep: recall invariant; modeled QPS plateaus by W=8."""
+    rows = []
+    for w in (1, 2, 4, 8, 16, 32):
+        r = common.sweep(ctx["engine"], ctx["queries"], ctx["gt"], mode="gate",
+                         beam_width=w, l_values=(100,))[0]
+        m = IOCostModel(pipeline_depth=w)
+        rows.append(dict(name=f"fig17_W{w}",
+                         lat1_us=m.latency_us(r["ios"], r["tunnels"], r["exact"]),
+                         derived=r["recall"], qps32=m.qps(r["ios"], r["tunnels"],
+                                                          n_exact=r["exact"])))
+    return rows
+
+
+def fig18_ablation(ctx):
+    """I/O elimination vs CPU-savings-only (early filter)."""
+    rows = []
+    for mode, label in (("post", "post"), ("early", "early"), ("gate", "pre")):
+        r = common.sweep(ctx["engine"], ctx["queries"], ctx["gt"], mode=mode,
+                         l_values=(100,))[0]
+        rows.append(dict(name=f"fig18_{label}", lat1_us=r["lat1_us"],
+                         derived=r["qps32"], recall=r["recall"]))
+    return rows
+
+
+def table2_memory(ctx):
+    """Analytic memory overhead at paper scale (N=100M, 1B)."""
+    rows = []
+    for n, nm in ((100_000_000, "100m"), (1_000_000_000, "1b")):
+        nbr = n * (1 + 16) * 4
+        pq = n * 32
+        filt = n
+        rows.append(dict(name=f"table2_nbr_store_{nm}_gb", lat1_us=0.0,
+                         derived=nbr / 1e9))
+        rows.append(dict(name=f"table2_pq_{nm}_gb", lat1_us=0.0, derived=pq / 1e9))
+        rows.append(dict(name=f"table2_filter_{nm}_gb", lat1_us=0.0,
+                         derived=filt / 1e9))
+    return rows
+
+
+def table4_ssd_speed(ctx):
+    """Gen4 vs Gen5 SSD: gate is device-speed-independent."""
+    rows = []
+    for mode in ("post", "gate"):
+        r = common.sweep(ctx["engine"], ctx["queries"], ctx["gt"], mode=mode,
+                         l_values=(100,))[0]
+        g4 = DEFAULT_COST_MODEL.qps(r["ios"], r["tunnels"], n_exact=r["exact"])
+        g5 = GEN5_COST_MODEL.qps(r["ios"], r["tunnels"], n_exact=r["exact"])
+        rows.append(dict(name=f"table4_{mode}_gen5_over_gen4", lat1_us=0.0,
+                         derived=g5 / max(g4, 1e-9)))
+    return rows
+
+
+def table5_breakdown(ctx):
+    """Per-query time decomposition (modeled with Table-5 constants)."""
+    rows = []
+    m = DEFAULT_COST_MODEL
+    for mode in ("post", "gate"):
+        r = common.sweep(ctx["engine"], ctx["queries"], ctx["gt"], mode=mode,
+                         l_values=(100,))[0]
+        io_us = np.ceil(r["ios"] / m.pipeline_depth) * m.ssd_read_us \
+            + r["ios"] * m.submit_poll_us
+        tun_us = r["tunnels"] * m.tunnel_us
+        proc_us = r["exact"] * m.exact_dist_us
+        other_us = (r["ios"] + r["tunnels"]) * m.list_mgmt_us
+        for comp, v in (("io", io_us), ("tunnel", tun_us), ("processing", proc_us),
+                        ("other", other_us)):
+            rows.append(dict(name=f"table5_{mode}_{comp}_us", lat1_us=v, derived=v))
+    return rows
+
+
+ALL_FIGURES = [
+    fig01_motivation, fig05_main, fig06_scaling, fig07_io, fig08_scale,
+    fig09_multilabel, fig10_vamana, fig11_fdiskann, fig12_selectivity,
+    fig13_rmax, fig14_zipf, fig15_correlation, fig16_range, fig17_pipeline,
+    fig18_ablation, table2_memory, table4_ssd_speed, table5_breakdown,
+]

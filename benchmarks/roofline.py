@@ -1,0 +1,278 @@
+"""Roofline analysis from the dry-run artifacts (deliverable (g)).
+
+For every (arch x shape x mesh) cell this derives the three terms:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs        (197 TF/s bf16, v5e)
+  memory     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+  collective = collective_bytes_per_device / link_bw    (50 GB/s/link, 1 link
+                                                         conservative)
+
+HLO_FLOPs / bytes / collective bytes come from the loop-aware parse of the
+compiled partitioned HLO (repro.launch.hlo_analysis) — XLA's own
+cost_analysis counts while bodies once and is reported alongside as "raw".
+
+Also reported per cell: MODEL_FLOPS (6·N_active·D train / 2·N_active·D
+inference), the MODEL_FLOPS/HLO_FLOPs usefulness ratio, the dominant term,
+and a one-line action that would move it.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [--dryrun-dir results/dryrun]
+      [--format md|csv]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link (conservative single-link)
+
+
+def _param_split(cfg):
+    """(dense_params, routed_expert_params) — EP shards only the latter."""
+    total = cfg.param_count()
+    if cfg.n_experts == 0:
+        return total, 0
+    moe_layers = sum(1 for k in cfg.layer_kinds if k == "moe")
+    experts = moe_layers * cfg.n_experts * 3 * cfg.d_model * cfg.moe_d_ff
+    return total - experts, experts
+
+
+def model_bytes_per_device(rep: dict, variants: set | None = None) -> float:
+    """Analytic HBM-traffic model (fusion-independent cross-check).
+
+    train    — replicated-compute layers: each chip reads full gathered
+               bf16 weights ~4x (fwd, remat-fwd, dgrad, wgrad); EP experts
+               1/16; optimizer rw at the ZeRO shard; stored activations.
+    prefill  — one weight pass + activation stream + emitted KV.
+    decode   — TP weight shard (1/16) + this chip's KV-cache slice.
+    """
+    from repro.configs import get_config
+    from repro.configs.base import ALL_SHAPES
+
+    variants = variants or set()
+    if rep["arch"].startswith("gateann"):
+        return rep.get("hbm_bytes_per_device", 0.0)
+    cfg = get_config(rep["arch"])
+    shape = next(s for s in ALL_SHAPES if s.name == rep["shape"])
+    n_dev = rep["n_devices"]
+    tp = 16
+    dense_p, expert_p = _param_split(cfg)
+    d = cfg.d_model
+    # int8 KV: 1 B codes + f32 scale per (slot, kv head) => ~0.53x of bf16
+    kv_factor = (1.0 + 4.0 / cfg.head_dim) / 2.0 if "kv_int8" in variants else 1.0
+    w_factor = 0.52 if "w_int8" in variants else 1.0  # int8 + per-channel scales
+
+    def cache_bytes_total(batch, length):
+        total = 0
+        for kind, win in zip(cfg.layer_kinds, cfg.layer_windows):
+            if kind in ("attn", "moe"):
+                l_eff = min(win, length) if win else length
+                total += batch * l_eff * cfg.n_kv_heads * cfg.head_dim * 2 * 2 * kv_factor
+            elif kind == "rglru":
+                total += batch * (cfg.lru_width or d) * 4
+            elif kind in ("mlstm", "slstm"):
+                total += batch * 2 * d * max(cfg.head_dim, 1) // 64 * 4
+        return total
+
+    if shape.kind == "train":
+        b_loc = shape.global_batch / (n_dev / tp)
+        t_loc = shape.seq_len / tp
+        w = 4 * 2 * (dense_p + expert_p / tp)
+        opt = 2 * 12 * cfg.param_count() / n_dev
+        act = 40 * b_loc * t_loc * d * 2 * cfg.n_layers
+        return w + opt + act
+    if shape.kind == "prefill":
+        b_loc = shape.global_batch / (n_dev / tp)
+        t_loc = shape.seq_len / tp
+        w = 2 * (dense_p + expert_p / tp)
+        act = 20 * b_loc * t_loc * d * 2 * cfg.n_layers
+        kv = cache_bytes_total(shape.global_batch, shape.seq_len) / n_dev
+        return w + act + kv
+    # decode / long
+    w = 2 * (dense_p + expert_p) / tp * w_factor
+    kv = cache_bytes_total(shape.global_batch, shape.seq_len) / n_dev
+    return w + kv
+
+
+def analytic_collective_bytes(rep: dict, variants: set | None = None) -> dict:
+    """Variant-aware collective model with *logical* dtypes.
+
+    The CPU backend float-normalizes bf16 to f32 before partitioning
+    (verified on a micro-case, EXPERIMENTS §Perf), so parsed HLO bytes
+    overstate bf16 traffic 2x and cannot show bf16-vs-fp32 deltas.  This
+    model reproduces the HLO's op *structure* (which the parse does
+    verify: per-layer forward+backward weight gathers, K/V gathers, one
+    full-gradient reduction per layer, MoE dispatch/combine) with the
+    dtype each tensor logically carries.
+
+    Ring traffic per device: all-gather/reduce-scatter ~ bytes x (g-1)/g;
+    all-reduce ~ 2x that.
+    """
+    from repro.configs import get_config
+    from repro.configs.base import ALL_SHAPES
+
+    variants = variants or set()
+    if rep["arch"].startswith("gateann"):
+        return {"total": rep.get("collective_bytes_total", 0.0)}
+    cfg = get_config(rep["arch"])
+    shape = next(s for s in ALL_SHAPES if s.name == rep["shape"])
+    n_dev = rep["n_devices"]
+    tp = 16
+    dense_p, expert_p = _param_split(cfg)
+    cast_early = "cast_early" in variants
+    grad_shard = "grad_shard" in variants
+    w_bytes = 2 if cast_early else 4  # gathered compute weights
+    g_bytes = 2 if cast_early else 4  # reduced gradients
+    ring = lambda b, g: b * (g - 1) / max(g, 1)
+
+    out = {}
+    if shape.kind == "train":
+        b_loc = shape.global_batch / (n_dev / tp)
+        # per-layer weight gathers: fwd + remat-recomputed bwd (2 passes)
+        out["ag_params"] = 2 * ring((dense_p + expert_p / tp) * w_bytes, n_dev)
+        # K/V all-gather over `model` per attn layer, fwd + bwd recompute
+        n_attn = sum(1 for k in cfg.layer_kinds if k in ("attn", "moe"))
+        kv = b_loc * shape.seq_len * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+        out["ag_kv"] = 2 * ring(kv * n_attn, tp)
+        # gradient reduction: all-reduce (2x) vs reduce-scatter (1x).
+        # Expert grads are born EP-sharded (verified in HLO: group=16
+        # reductions) — they reduce over `data` only at 1/tp size.
+        red = ring(dense_p * g_bytes, n_dev) + ring(
+            (expert_p / tp) * g_bytes, n_dev // tp)
+        out["grad_reduce"] = red if grad_shard else 2 * red
+        # MoE dispatch/combine all-to-alls (bf16 tokens), fwd + bwd
+        n_moe = sum(1 for k in cfg.layer_kinds if k == "moe")
+        if n_moe:
+            tok = b_loc * (shape.seq_len / tp) * cfg.d_model * 2
+            out["moe_a2a"] = 2 * 2 * 2 * ring(tok * n_moe, tp)
+        if rep.get("multi_pod"):
+            out["pod_allreduce"] = 2 * ring(cfg.param_count() * g_bytes / (n_dev // 2), 2)
+    elif shape.kind == "prefill":
+        out["ag_params"] = ring((dense_p + expert_p / tp) * 2, n_dev)
+        n_attn = sum(1 for k in cfg.layer_kinds if k in ("attn", "moe"))
+        b_loc = shape.global_batch / (n_dev / tp)
+        kv = b_loc * shape.seq_len * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+        out["ag_kv"] = ring(kv * n_attn, tp)
+    else:  # decode: per-layer activation psums (tiny) + distributed softmax
+        b_loc = max(shape.global_batch / (n_dev / tp), 1)
+        per_layer = b_loc * (cfg.d_model + cfg.n_heads * cfg.head_dim) * 4 * 4
+        out["act_psums"] = 2 * per_layer * cfg.n_layers
+    out["total"] = sum(v for k, v in out.items())
+    return out
+
+
+def model_flops_per_device(rep: dict) -> float:
+    from repro.configs import get_config
+    from repro.configs.base import ALL_SHAPES
+
+    if rep["arch"].startswith("gateann"):
+        return 0.0
+    cfg = get_config(rep["arch"])
+    shape = next(s for s in ALL_SHAPES if s.name == rep["shape"])
+    n_act = cfg.active_param_count()
+    n_dev = rep["n_devices"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens / n_dev
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens / n_dev
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch / n_dev
+
+
+def suggestion(dom: str, rep: dict) -> str:
+    kind = rep.get("layout", "")
+    if dom == "collective":
+        return "cut gather volume (reshard params/KV; overlap behind layer compute)"
+    if dom == "memory":
+        if kind in ("decode", "long"):
+            return "quantize weights+KV (int8) or raise per-chip batch to amortize weight reads"
+        return "reduce remat traffic / fuse optimizer update"
+    return "compute-bound: improve MFU (block-causal attention, remat policy)"
+
+
+def analyze_cell(rep: dict) -> dict:
+    t_c = rep["flops_per_device"] / PEAK_FLOPS
+    # memory: min(parsed-HLO bytes, analytic model) — the parse is an upper
+    # bound because CPU-backend fusion is weaker than TPU's (EXPERIMENTS §R)
+    hlo_m = rep.get("hbm_bytes_per_device", 0.0) / HBM_BW
+    ana_m = model_bytes_per_device(rep) / HBM_BW
+    t_m = min(hlo_m, ana_m) if ana_m else hlo_m
+    # dtype-corrected collective model (CPU HLO is f32-normalized); the
+    # HLO parse bounds it from above and verifies the op structure.
+    t_x_model = analytic_collective_bytes(rep)["total"] / LINK_BW
+    t_x_hlo = rep.get("collective_bytes_total", 0.0) / LINK_BW
+    t_x = min(t_x_model, t_x_hlo) if t_x_model else t_x_hlo
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_device(rep)
+    bound = max(terms.values())
+    return {
+        "arch": rep["arch"],
+        "shape": rep["shape"],
+        "mesh": "x".join(map(str, rep["mesh"])),
+        "t_compute_s": t_c,
+        "t_memory_s": t_m,
+        "t_memory_hlo_s": hlo_m,
+        "t_memory_analytic_s": ana_m,
+        "t_collective_s": t_x,
+        "t_collective_hlo_s": t_x_hlo,
+        "bottleneck": dom,
+        "model_flops_per_dev": mf,
+        "useful_ratio": (mf / rep["flops_per_device"]) if rep["flops_per_device"] else 0.0,
+        "roofline_fraction": (t_c / bound) if bound else 0.0,
+        "mfu_bound": (mf / PEAK_FLOPS / bound) if bound and mf else 0.0,
+        "suggestion": suggestion(dom, rep),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    ap.add_argument("--format", default="md", choices=["md", "csv"])
+    ap.add_argument("--mesh", default="16x16", help="16x16 | 2x16x16 | all")
+    args = ap.parse_args()
+
+    rows = []
+    for path in sorted(glob.glob(os.path.join(args.dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rep = json.load(f)
+        mesh = "x".join(map(str, rep["mesh"]))
+        if args.mesh != "all" and mesh != args.mesh:
+            continue
+        rows.append(analyze_cell(rep))
+
+    if args.format == "csv":
+        cols = ["arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+                "t_collective_s", "bottleneck", "useful_ratio",
+                "roofline_fraction", "mfu_bound"]
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(
+                f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c]) for c in cols
+            ))
+        return
+
+    print("| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+          "| bottleneck | useful | roofline frac | MFU bound | next move |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|"[: -4] + "|")
+    for r in rows:
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3f} | {r['t_memory_s']:.3f} "
+            f"| {r['t_collective_s']:.3f} | **{r['bottleneck']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} "
+            f"| {r['mfu_bound']:.2f} | {r['suggestion']} |"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Diagnose graph quality: unfiltered + filtered recall vs L."""
+import sys, time
+import numpy as np
+
+sys.path.insert(0, "src")
+from repro.core import EngineConfig, GateANNEngine, SearchConfig, recall_at_k
+from repro.data import make_bigann_like, make_queries, uniform_labels, filtered_ground_truth
+
+N, D, B = 5000, 32, 32
+corpus = make_bigann_like(N, D, seed=0)
+labels = uniform_labels(N, 10, seed=0)
+queries = make_queries(corpus, B, seed=1)
+
+t0 = time.time()
+eng = GateANNEngine.build(
+    corpus, config=EngineConfig(degree=32, build_l=64, pq_chunks=8, r_max=16), labels=labels
+)
+print(f"build: {time.time()-t0:.1f}s")
+
+gt_all = filtered_ground_truth(corpus, queries, np.ones(N, bool), k=10)
+gt_f = filtered_ground_truth(corpus, queries, np.asarray(labels) == 0, k=10)
+tgt = np.zeros(B, dtype=np.int32)
+
+for L in [16, 32, 64, 128]:
+    out_u = eng.search(queries, search_config=SearchConfig(mode="unfiltered", search_l=L, result_k=10, beam_width=4))
+    r_u = recall_at_k(out_u.ids, gt_all, 10)
+    out_g = eng.search(queries, filter_kind="label", filter_params=tgt,
+                       search_config=SearchConfig(mode="gate", search_l=L, result_k=10, beam_width=4))
+    r_g = recall_at_k(out_g.ids, gt_f, 10)
+    out_p = eng.search(queries, filter_kind="label", filter_params=tgt,
+                       search_config=SearchConfig(mode="post", search_l=L, result_k=10, beam_width=4))
+    r_p = recall_at_k(out_p.ids, gt_f, 10)
+    print(
+        f"L={L:4d} unfilt={r_u:.3f} (ios {float(np.mean(out_u.stats.n_ios)):5.1f}) | "
+        f"gate={r_g:.3f} (ios {float(np.mean(out_g.stats.n_ios)):5.1f}, tun {float(np.mean(out_g.stats.n_tunnels)):6.1f}) | "
+        f"post={r_p:.3f} (ios {float(np.mean(out_p.stats.n_ios)):5.1f})"
+    )

@@ -1,0 +1,45 @@
+"""Per-arch smoke: reduced config, train loss + one decode step, no NaNs."""
+import sys, time, traceback
+
+sys.path.insert(0, "src")
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.distributed.sharding import NULL_LAYOUT
+from repro.models import transformer as tfm
+from repro.models import zoo
+from repro.configs.base import ShapeConfig
+
+ok = True
+for arch in ARCH_IDS:
+    t0 = time.time()
+    try:
+        cfg = get_smoke_config(arch)
+        import dataclasses
+        cfg = dataclasses.replace(cfg, dtype="float32")
+        params, axes = tfm.init_model(jax.random.PRNGKey(0), cfg)
+        shape = ShapeConfig("smoke", 32, 2, "train")
+        batch = zoo.make_concrete_batch(cfg, shape)
+        loss = jax.jit(lambda p, b: tfm.lm_loss(p, cfg, NULL_LAYOUT, b))(params, batch)
+        assert jnp.isfinite(loss), f"{arch}: loss not finite: {loss}"
+        # grads
+        g = jax.jit(jax.grad(lambda p, b: tfm.lm_loss(p, cfg, NULL_LAYOUT, b)))(params, batch)
+        gnorm = jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(g)))
+        assert jnp.isfinite(gnorm), f"{arch}: grad norm not finite"
+        # decode
+        caches = tfm.init_caches(cfg, 2, 32, jnp.float32)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        logits, caches = jax.jit(
+            lambda p, c, t, pos: tfm.forward_decode(p, cfg, NULL_LAYOUT, t, c, pos)
+        )(params, caches, tok, jnp.int32(0))
+        assert jnp.all(jnp.isfinite(logits)), f"{arch}: decode logits not finite"
+        n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        print(f"OK   {arch:28s} loss={float(loss):7.3f} gnorm={float(gnorm):9.3f} "
+              f"params={n_params:,} ({time.time()-t0:.1f}s)")
+    except Exception as e:
+        ok = False
+        print(f"FAIL {arch}: {e}")
+        traceback.print_exc()
+print("ALL OK" if ok else "FAILURES")

@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpointer import Checkpointer, CheckpointConfig
+
+__all__ = ["Checkpointer", "CheckpointConfig"]

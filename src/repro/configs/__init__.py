@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, ShapeConfig, ALL_SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K, shapes_for
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config

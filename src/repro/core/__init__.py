@@ -1,0 +1,21 @@
+from repro.core.engine import EngineConfig, GateANNEngine, recall_at_k
+from repro.core.search import SearchConfig, SearchOutput, SearchStats, filtered_search
+from repro.core.graph import VamanaGraph, build_vamana, build_filtered_vamana, beam_search_batch
+from repro.core.io_model import IOCostModel, DEFAULT_COST_MODEL, GEN5_COST_MODEL
+
+__all__ = [
+    "EngineConfig",
+    "GateANNEngine",
+    "recall_at_k",
+    "SearchConfig",
+    "SearchOutput",
+    "SearchStats",
+    "filtered_search",
+    "VamanaGraph",
+    "build_vamana",
+    "build_filtered_vamana",
+    "beam_search_batch",
+    "IOCostModel",
+    "DEFAULT_COST_MODEL",
+    "GEN5_COST_MODEL",
+]

@@ -1,0 +1,186 @@
+"""Distributed GateANN: filtered search sharded over the production mesh.
+
+Deployment layout (DESIGN.md §2):
+
+  * queries           — sharded over ``data`` (and ``pod``): query DP.
+  * record tier       — full-precision vectors + full adjacency sharded
+                        row-wise over ``model`` *within each data group*
+                        (serving replicas).  A fetch = masked local gather
+                        + ``psum`` over ``model`` — remote HBM over ICI,
+                        the TPU-native "SSD read".
+  * traversal metadata— PQ codes, neighbor store, filter store replicated
+                        per device (the paper's "in-memory" tier; ~13 GB
+                        at 100M scale, Table 2).
+
+Graph tunneling therefore eliminates *collective* traffic: non-matching
+nodes never reach the psum fetch path.  The loop is a fixed-hop
+``fori_loop`` inside ``shard_map``; the visited set is a bounded ring
+buffer (bitmaps don't scale to 100M x batch).
+
+The multi-pod dry-run lowers this step at BigANN-100M scale on both
+production meshes (see ``repro.launch.dryrun --retrieval``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+INVALID = jnp.int32(-1)
+INF = jnp.float32(3.4e38)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistSearchConfig:
+    search_l: int = 64
+    result_k: int = 10
+    beam_width: int = 8
+    n_hops: int = 48  # fixed rounds (SPMD-friendly)
+    visited_cap: int = 2048
+    mode: str = "gate"  # gate | post
+
+
+def _adc(lut, codes_rows):
+    """lut (B, C, K) f32; codes_rows (B, M, C) int32 -> (B, M) f32."""
+    return jnp.take_along_axis(lut.transpose(0, 2, 1), codes_rows, axis=1).sum(-1)
+
+
+def make_retrieve_step(
+    mesh: Mesh, cfg: DistSearchConfig, *, rows_per_shard: int, multi_pod: bool = False,
+):
+    """Builds the jitted distributed retrieve step.
+
+    Args (global shapes):
+      queries (B, D) f32          sharded (batch_axes, None)
+      lut     (B, C, K) f32       per-query ADC tables, sharded like queries
+      codes   (N, C) i32          replicated
+      nbr_store (N, R_max) i32    replicated
+      labels  (N,) i32            replicated
+      rec_vecs (N, Dv) f32        sharded ('model', None)
+      rec_graph (N, R) i32        sharded ('model', None)
+      entry   () i32              replicated
+      targets (B,) i32            per-query equality filter target
+    """
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    L, W, K_res = cfg.search_l, cfg.beam_width, cfg.result_k
+
+    def step(queries, lut, codes, nbr_store, labels, rec_vecs, rec_graph, entry, targets):
+        b = queries.shape[0]
+        r = rec_graph.shape[1]
+        r_max = nbr_store.shape[1]
+        shard = jax.lax.axis_index("model")
+        lo = shard * rows_per_shard
+
+        def fetch(ids):  # (B, W) -> vecs (B, W, Dv), nbrs (B, W, R)
+            local = ids - lo
+            mine = (ids >= 0) & (local >= 0) & (local < rows_per_shard)
+            safe = jnp.clip(local, 0, rec_vecs.shape[0] - 1)
+            vecs = jnp.where(mine[..., None], rec_vecs[safe], 0.0)
+            nbrs = jnp.where(mine[..., None], rec_graph[safe] + 1, 0)
+            vecs = jax.lax.psum(vecs, "model")
+            nbrs = jax.lax.psum(nbrs, "model") - 1
+            return vecs, jnp.where(ids[..., None] >= 0, nbrs, INVALID)
+
+        # frontier + results + ring-buffer visited set
+        f_ids = jnp.full((b, L), INVALID)
+        f_d = jnp.full((b, L), INF)
+        f_exp = jnp.zeros((b, L), bool)
+        res_ids = jnp.full((b, K_res), INVALID)
+        res_d = jnp.full((b, K_res), INF)
+        vis = jnp.full((b, cfg.visited_cap), INVALID)
+        vis_n = jnp.zeros((b,), jnp.int32)
+
+        e = jnp.broadcast_to(entry, (b,))
+        ed = _adc(lut, codes[e[:, None]])[:, 0]
+        f_ids = f_ids.at[:, 0].set(e)
+        f_d = f_d.at[:, 0].set(ed)
+        vis = vis.at[:, 0].set(e)
+        vis_n = vis_n + 1
+
+        n_ios = jnp.zeros((b,), jnp.int32)
+        n_tun = jnp.zeros((b,), jnp.int32)
+
+        def is_visited(vis, ids):  # (B, M) membership against the buffer
+            return jnp.any(ids[:, :, None] == vis[:, None, :], axis=-1) & (ids >= 0)
+
+        def push_visited(vis, vis_n, ids):  # append (ring overwrite)
+            m = ids.shape[1]
+            slots = (vis_n[:, None] + jnp.cumsum(jnp.ones_like(ids), axis=1) - 1)
+            slots = jnp.where(ids >= 0, slots % cfg.visited_cap, cfg.visited_cap - 1)
+            vis = vis.at[jnp.arange(b)[:, None], slots].set(
+                jnp.where(ids >= 0, ids, vis[jnp.arange(b)[:, None], slots])
+            )
+            vis_n = vis_n + jnp.sum(ids >= 0, axis=1).astype(jnp.int32)
+            return vis, vis_n
+
+        def body(_, state):
+            f_ids, f_d, f_exp, res_ids, res_d, vis, vis_n, n_ios, n_tun = state
+            sel_d = jnp.where((~f_exp) & (f_ids >= 0), f_d, INF)
+            order = jnp.argsort(sel_d, axis=1)[:, :W]
+            sel = jnp.take_along_axis(f_ids, order, axis=1)
+            valid = jnp.take_along_axis(sel_d, order, axis=1) < INF
+            sel = jnp.where(valid, sel, INVALID)
+            upd = jnp.zeros_like(f_exp).at[jnp.arange(b)[:, None], order].set(valid)
+            f_exp = f_exp | upd
+
+            passes = (labels[jnp.maximum(sel, 0)] == targets[:, None]) & valid
+            if cfg.mode == "gate":
+                fetch_mask = passes
+                tunnel_mask = valid & (~passes)
+            else:  # post-filter baseline
+                fetch_mask = valid
+                tunnel_mask = jnp.zeros_like(valid)
+
+            vecs, disk_nbrs = fetch(jnp.where(fetch_mask, sel, INVALID))
+            exact = jnp.sum((vecs - queries[:, None, :]) ** 2, axis=-1)
+            exact = jnp.where(passes & fetch_mask, exact, INF)
+            # results insert
+            cat_i = jnp.concatenate([res_ids, jnp.where(passes & fetch_mask, sel, INVALID)], 1)
+            cat_d = jnp.concatenate([res_d, exact], 1)
+            ordr = jnp.argsort(cat_d, axis=1)[:, :K_res]
+            res_ids = jnp.take_along_axis(cat_i, ordr, axis=1)
+            res_d = jnp.take_along_axis(cat_d, ordr, axis=1)
+
+            tun_nbrs = jnp.where(
+                tunnel_mask[..., None], nbr_store[jnp.maximum(sel, 0)], INVALID
+            ) if cfg.mode == "gate" else jnp.full((b, W, r_max), INVALID)
+
+            new = jnp.concatenate([disk_nbrs.reshape(b, -1), tun_nbrs.reshape(b, -1)], 1)
+            fresh = (new >= 0) & (~is_visited(vis, new))
+            new = jnp.where(fresh, new, INVALID)
+            vis, vis_n = push_visited(vis, vis_n, new)
+            nd = jnp.where(new >= 0, _adc(lut, codes[jnp.maximum(new, 0)]), INF)
+            ci = jnp.concatenate([f_ids, new], 1)
+            cd = jnp.concatenate([f_d, nd], 1)
+            ce = jnp.concatenate([f_exp, jnp.zeros_like(new, bool)], 1)
+            ci = jnp.where(cd >= INF, INVALID, ci)  # dead slots carry no id
+            o2 = jnp.argsort(cd, axis=1)[:, :L]
+            f_ids = jnp.take_along_axis(ci, o2, axis=1)
+            f_d = jnp.take_along_axis(cd, o2, axis=1)
+            f_exp = jnp.take_along_axis(ce, o2, axis=1)
+
+            n_ios = n_ios + jnp.sum(fetch_mask, 1).astype(jnp.int32)
+            n_tun = n_tun + jnp.sum(tunnel_mask, 1).astype(jnp.int32)
+            return f_ids, f_d, f_exp, res_ids, res_d, vis, vis_n, n_ios, n_tun
+
+        state = (f_ids, f_d, f_exp, res_ids, res_d, vis, vis_n, n_ios, n_tun)
+        state = jax.lax.fori_loop(0, cfg.n_hops, body, state)
+        _, _, _, res_ids, res_d, _, _, n_ios, n_tun = state
+        return {"ids": res_ids, "dists": res_d, "n_ios": n_ios, "n_tunnels": n_tun}
+
+    qspec = P(batch_axes, None)
+    rep = P(None, None)
+    mapped = shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(qspec, P(batch_axes, None, None), rep, rep, P(None),
+                  P("model", None), P("model", None), P(), P(batch_axes)),
+        out_specs={"ids": qspec, "dists": qspec, "n_ios": P(batch_axes),
+                   "n_tunnels": P(batch_axes)},
+        check_rep=False,
+    )
+    return jax.jit(mapped)

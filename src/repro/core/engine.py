@@ -1,0 +1,181 @@
+"""GateANN engine — the public API.
+
+Build once from a corpus (+ optional metadata), then search with any
+predicate and any mode.  The engine owns the four tiers of §3:
+
+  fast tier ("memory"):   PQ codes, neighbor store, filter store
+  slow tier ("SSD"):      record store (full vectors + full adjacency)
+
+and exposes the paper's baselines through ``SearchConfig.mode``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graph as graphm
+from repro.core import pq as pqm
+from repro.core import search as searchm
+from repro.core.filter_store import CheckFn, EqualityFilter, RangeFilter, SubsetFilter, match_all
+from repro.core.io_model import DEFAULT_COST_MODEL, IOCostModel
+from repro.core.neighbor_store import NeighborStore
+from repro.store.vector_store import HostOffloadRecordStore, InMemoryRecordStore
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    degree: int = 32  # graph degree R (paper: 96 at 100M, 128 at 1B)
+    build_l: int = 64  # L_build
+    alpha: float = 1.2
+    pq_chunks: int = 16  # paper default 32 on 128-dim; scaled with D
+    r_max: int = 16  # in-memory neighbors per node (runtime knob)
+    store_tier: str = "memory"  # memory | host
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class GateANNEngine:
+    config: EngineConfig
+    vectors: jax.Array  # (N, D) — kept for ground-truth/debug only
+    record_store: Any
+    neighbor_store: NeighborStore
+    codec: pqm.PQCodec
+    codes: jax.Array
+    medoid: jax.Array
+    filters: dict
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def build(
+        cls,
+        vectors: np.ndarray,
+        *,
+        config: EngineConfig | None = None,
+        labels: np.ndarray | None = None,
+        attributes: np.ndarray | None = None,
+        tag_bits: np.ndarray | None = None,
+        graph: graphm.VamanaGraph | None = None,
+    ) -> "GateANNEngine":
+        config = config or EngineConfig()
+        vecs = jnp.asarray(vectors, dtype=jnp.float32)
+        n, d = vecs.shape
+        if graph is None:
+            graph = graphm.build_vamana(
+                vecs,
+                degree=config.degree,
+                build_l=config.build_l,
+                alpha=config.alpha,
+                seed=config.seed,
+            )
+        pq_chunks = min(config.pq_chunks, d)
+        while d % pq_chunks:
+            pq_chunks -= 1
+        codec = pqm.train_pq(vecs, n_chunks=pq_chunks, key=jax.random.PRNGKey(config.seed))
+        codes = pqm.encode_pq(codec, vecs)
+        nbr_store = NeighborStore.from_graph(graph.neighbors, config.r_max)
+        if config.store_tier == "host":
+            record_store = HostOffloadRecordStore.create(vecs, graph.neighbors)
+        else:
+            record_store = InMemoryRecordStore(vectors=vecs, neighbors=graph.neighbors)
+        filters = {}
+        if labels is not None:
+            filters["label"] = EqualityFilter(labels=jnp.asarray(labels, dtype=jnp.int32))
+        if attributes is not None:
+            filters["range"] = RangeFilter(values=jnp.asarray(attributes, dtype=jnp.float32))
+        if tag_bits is not None:
+            filters["tags"] = SubsetFilter(tag_bits=jnp.asarray(tag_bits))
+        return cls(
+            config=config,
+            vectors=vecs,
+            record_store=record_store,
+            neighbor_store=nbr_store,
+            codec=codec,
+            codes=codes,
+            medoid=graph.medoid,
+            filters=filters,
+        )
+
+    # -- search ------------------------------------------------------------
+    def make_filter(self, kind: str | None, params) -> CheckFn:
+        if kind is None:
+            return match_all(int(self.codes.shape[0]))
+        return self.filters[kind].bind(*params) if isinstance(params, tuple) else self.filters[
+            kind
+        ].bind(params)
+
+    def search(
+        self,
+        queries: np.ndarray | jax.Array,
+        *,
+        filter_kind: str | None = None,
+        filter_params=None,
+        search_config: searchm.SearchConfig | None = None,
+    ) -> searchm.SearchOutput:
+        cfg = search_config or searchm.SearchConfig()
+        q = jnp.asarray(queries, dtype=jnp.float32)
+        lut = pqm.build_lut(self.codec, q)
+        check = self.make_filter(filter_kind, filter_params)
+        return searchm.filtered_search(
+            fetch=self.record_store.fetch_fn(),
+            neighbor_store=self.neighbor_store,
+            filter_check=check,
+            lut=lut,
+            codes=self.codes,
+            entry=self.medoid,
+            queries=q,
+            config=cfg,
+        )
+
+    # -- reporting ---------------------------------------------------------
+    def memory_report(self) -> dict:
+        n, d = self.vectors.shape
+        rep = {
+            "n": n,
+            "dim": d,
+            "pq_bytes": int(self.codes.shape[0] * self.codes.shape[1]),
+            "neighbor_store_bytes": self.neighbor_store.memory_bytes(),
+            "filter_store_bytes": {k: f.memory_bytes() for k, f in self.filters.items()},
+        }
+        if isinstance(self.record_store, InMemoryRecordStore):
+            rep["record_tier_bytes"] = self.record_store.record_bytes()
+        return rep
+
+    def modeled_qps(
+        self, stats: searchm.SearchStats, *, n_threads: int = 32,
+        cost_model: IOCostModel = DEFAULT_COST_MODEL,
+    ) -> float:
+        return cost_model.qps(
+            float(jnp.mean(stats.n_ios)),
+            float(jnp.mean(stats.n_tunnels)),
+            n_threads=n_threads,
+            n_exact=float(jnp.mean(stats.n_exact)),
+        )
+
+    def modeled_latency_us(
+        self, stats: searchm.SearchStats, *,
+        cost_model: IOCostModel = DEFAULT_COST_MODEL, pipeline_depth: int | None = None,
+    ) -> float:
+        return cost_model.latency_us(
+            float(jnp.mean(stats.n_ios)),
+            float(jnp.mean(stats.n_tunnels)),
+            float(jnp.mean(stats.n_exact)),
+            pipeline_depth=pipeline_depth,
+        )
+
+
+def recall_at_k(result_ids: jax.Array, gt_ids: np.ndarray, k: int = 10) -> float:
+    """Recall@k against exact filtered ground truth (rows -1-padded)."""
+    res = np.asarray(result_ids)[:, :k]
+    hits = 0
+    denom = 0
+    for r, g in zip(res, np.asarray(gt_ids)[:, :k]):
+        gset = set(int(x) for x in g if x >= 0)
+        if not gset:
+            continue
+        hits += len(gset & set(int(x) for x in r if x >= 0))
+        denom += len(gset)
+    return hits / max(denom, 1)

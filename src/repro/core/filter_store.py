@@ -1,0 +1,146 @@
+"""Filter store — O(1) in-memory predicate evaluation by node id (§3.2).
+
+The store is deliberately decoupled from the graph index: it is built from
+a separate metadata array and can be swapped without touching the graph.
+Supported predicate families (paper §3.2 "equality, range, multi-label
+subset, or conjunctions thereof"):
+
+  * ``EqualityFilter``   — single categorical label per node.
+  * ``RangeFilter``      — continuous attribute per node, per-query [lo, hi].
+  * ``SubsetFilter``     — multi-label bitset per node; query passes when
+                           its tag set is a subset of the node's tags
+                           (the YFCC-10M semantics, §5.2.5).
+  * ``AndFilter``        — conjunction of the above.
+
+``bind`` returns a ``jax.tree_util.Partial`` — a pytree whose function
+identity is a stable module-level callable and whose bound metadata /
+per-query parameters are traced leaves.  The search loop therefore
+evaluates predicates on whole dispatch beams with zero host round-trips
+and *without retracing* across query batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.tree_util import Partial
+
+# A CheckFn maps (B, K) int32 node ids -> (B, K) bool matches.
+CheckFn = Partial
+
+
+def _eq_check(labels, targets, ids):
+    lab = labels[jnp.maximum(ids, 0)]
+    return (lab == targets[:, None]) & (ids >= 0)
+
+
+def _range_check(values, lo, hi, ids):
+    v = values[jnp.maximum(ids, 0)]
+    return (v >= lo[:, None]) & (v <= hi[:, None]) & (ids >= 0)
+
+
+def _subset_check(tag_bits, query_bits, ids):
+    node = tag_bits[jnp.maximum(ids, 0)]  # (B, K, W)
+    q = query_bits[:, None, :]
+    return jnp.all((node & q) == q, axis=-1) & (ids >= 0)
+
+
+def _and_check(fns, ids):
+    out = fns[0](ids)
+    for f in fns[1:]:
+        out = out & f(ids)
+    return out
+
+
+def _all_check(ids):
+    return ids >= 0
+
+
+@dataclasses.dataclass(frozen=True)
+class EqualityFilter:
+    """Single fixed-width label per node (1 B/node in the paper's Table 2)."""
+
+    labels: jax.Array  # (N,) int32
+
+    def bind(self, target_labels) -> CheckFn:
+        t = jnp.asarray(target_labels, dtype=jnp.int32)
+        return Partial(_eq_check, self.labels, t)
+
+    def memory_bytes(self) -> int:
+        return int(self.labels.shape[0])  # 1 B/node logical
+
+    def selectivity(self, target_label: int) -> float:
+        return float(jnp.mean(self.labels == target_label))
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeFilter:
+    """Continuous attribute; per-query closed interval [lo, hi]."""
+
+    values: jax.Array  # (N,) float32
+
+    def bind(self, lo, hi=None) -> CheckFn:
+        if hi is None:
+            lo, hi = lo  # allow bind((lo, hi))
+        return Partial(
+            _range_check,
+            self.values,
+            jnp.asarray(lo, dtype=jnp.float32),
+            jnp.asarray(hi, dtype=jnp.float32),
+        )
+
+    def memory_bytes(self) -> int:
+        return int(self.values.shape[0] * 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class SubsetFilter:
+    """Multi-label bitsets packed into uint32 words: (N, n_words).
+
+    Query tags (B, n_words) pass node n iff q_tags ⊆ node_tags, i.e.
+    (q & node) == q word-wise.
+    """
+
+    tag_bits: jax.Array  # (N, W) uint32
+
+    def bind(self, query_bits) -> CheckFn:
+        return Partial(_subset_check, self.tag_bits, jnp.asarray(query_bits, dtype=jnp.uint32))
+
+    def memory_bytes(self) -> int:
+        return int(self.tag_bits.shape[0] * self.tag_bits.shape[1] * 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class AndFilter:
+    parts: tuple
+
+    def bind(self, *args) -> CheckFn:
+        fns = tuple(
+            p.bind(*a) if isinstance(a, tuple) else p.bind(a)
+            for p, a in zip(self.parts, args)
+        )
+        return Partial(_and_check, fns)
+
+    def memory_bytes(self) -> int:
+        return sum(p.memory_bytes() for p in self.parts)
+
+
+def pack_tags(tag_lists: Sequence[Sequence[int]], vocab_size: int) -> np.ndarray:
+    """Pack per-node tag lists into uint32 bitset rows (N, ceil(V/32))."""
+    n_words = (vocab_size + 31) // 32
+    out = np.zeros((len(tag_lists), n_words), dtype=np.uint32)
+    for i, tags in enumerate(tag_lists):
+        for t in tags:
+            out[i, t // 32] |= np.uint32(1) << np.uint32(t % 32)
+    return out
+
+
+pack_query_tags = pack_tags
+
+
+def match_all(n: int | None = None) -> CheckFn:
+    """Unfiltered search (selectivity 1.0)."""
+    return Partial(_all_check)

@@ -1,0 +1,110 @@
+"""Sorted candidate frontier — batched, jittable list operations.
+
+Both GateANN paths (SSD fetch and in-memory tunnel) feed the same sorted
+frontier (§3.3 "Putting it together"), so these helpers are shared by the
+engine and all baselines.  The frontier is a fixed-size structure-of-arrays
+``(ids, dists, expanded)`` sorted by distance, padded with (-1, INF).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INVALID = jnp.int32(-1)
+INF = jnp.float32(3.4e38)
+
+
+class Frontier(NamedTuple):
+    ids: jax.Array  # (B, L) int32
+    dists: jax.Array  # (B, L) float32 (PQ distances — priority signal only)
+    expanded: jax.Array  # (B, L) bool — dispatched or tunneled already
+
+
+def make_frontier(batch: int, size: int) -> Frontier:
+    return Frontier(
+        ids=jnp.full((batch, size), INVALID),
+        dists=jnp.full((batch, size), INF),
+        expanded=jnp.zeros((batch, size), dtype=bool),
+    )
+
+
+def _dedup_mask(ids: jax.Array) -> jax.Array:
+    """True where this slot duplicates an earlier slot with the same id."""
+    m = ids.shape[-1]
+    lt = jnp.tril(jnp.ones((m, m), dtype=bool), k=-1)
+    same = ids[..., None, :] == ids[..., :, None]
+    return jnp.any(same & lt & (ids[..., None, :] >= 0), axis=-1)
+
+
+def insert(frontier: Frontier, new_ids: jax.Array, new_dists: jax.Array) -> Frontier:
+    """Merge (B, M) new candidates, dedup by id, keep the best L."""
+    l = frontier.ids.shape[-1]
+    ids = jnp.concatenate([frontier.ids, new_ids], axis=-1)
+    dists = jnp.concatenate([frontier.dists, new_dists], axis=-1)
+    expanded = jnp.concatenate(
+        [frontier.expanded, jnp.zeros_like(new_ids, dtype=bool)], axis=-1
+    )
+    dists = jnp.where(_dedup_mask(ids), INF, dists)
+    dists = jnp.where(ids < 0, INF, dists)
+    ids = jnp.where(dists >= INF, INVALID, ids)  # INF slots are dead slots
+    order = jnp.argsort(dists, axis=-1)[..., :l]
+    return Frontier(
+        ids=jnp.take_along_axis(ids, order, axis=-1),
+        dists=jnp.take_along_axis(dists, order, axis=-1),
+        expanded=jnp.take_along_axis(expanded, order, axis=-1),
+    )
+
+
+def best_unexpanded(frontier: Frontier, width: int):
+    """Select up to `width` best unexpanded candidates.
+
+    Returns (sel_ids (B, W), sel_slots (B, W), valid (B, W)).
+    """
+    sel_d = jnp.where((~frontier.expanded) & (frontier.ids >= 0), frontier.dists, INF)
+    slots = jnp.argsort(sel_d, axis=-1)[..., :width]
+    ids = jnp.take_along_axis(frontier.ids, slots, axis=-1)
+    valid = jnp.take_along_axis(sel_d, slots, axis=-1) < INF
+    return jnp.where(valid, ids, INVALID), slots, valid
+
+
+def mark_expanded(frontier: Frontier, slots: jax.Array, valid: jax.Array) -> Frontier:
+    b = frontier.ids.shape[0]
+    upd = jnp.zeros_like(frontier.expanded)
+    upd = upd.at[jnp.arange(b)[:, None], slots].set(valid)
+    return frontier._replace(expanded=frontier.expanded | upd)
+
+
+def has_unexpanded(frontier: Frontier, top: int | None = None) -> jax.Array:
+    """(B,) — does the (top-`top` of the) frontier hold unexpanded work?"""
+    ids, dists, expanded = frontier
+    if top is not None and top < ids.shape[-1]:
+        ids, dists, expanded = ids[..., :top], dists[..., :top], expanded[..., :top]
+    return jnp.any((~expanded) & (ids >= 0), axis=-1)
+
+
+class ResultList(NamedTuple):
+    """Top-K filter-passing candidates scored with *exact* distances."""
+
+    ids: jax.Array  # (B, K)
+    dists: jax.Array  # (B, K)
+
+
+def make_results(batch: int, k: int) -> ResultList:
+    return ResultList(
+        ids=jnp.full((batch, k), INVALID), dists=jnp.full((batch, k), INF)
+    )
+
+
+def results_insert(res: ResultList, new_ids: jax.Array, new_dists: jax.Array) -> ResultList:
+    k = res.ids.shape[-1]
+    ids = jnp.concatenate([res.ids, new_ids], axis=-1)
+    dists = jnp.concatenate([res.dists, new_dists], axis=-1)
+    dists = jnp.where(_dedup_mask(ids) | (ids < 0), INF, dists)
+    ids = jnp.where(dists >= INF, INVALID, ids)
+    order = jnp.argsort(dists, axis=-1)[..., :k]
+    return ResultList(
+        ids=jnp.take_along_axis(ids, order, axis=-1),
+        dists=jnp.take_along_axis(dists, order, axis=-1),
+    )

@@ -1,0 +1,69 @@
+"""Calibrated I/O cost model.
+
+The container has no NVMe device (and the TPU target has no SSD at all),
+so device-time claims from the paper are validated through a calibrated
+cost model with the constants the paper itself measures:
+
+  * random 4 KB SSD read        ~100 us   (§3.3: "on the order of 100 us")
+  * tunnel hop (PQ + AdjIndex)  ~1 us     (§3.3: "sub-microsecond",
+                                           Table 5: 338 us / ~350 tunnels)
+  * exact-distance + parse      per-node CPU cost from Table 5
+  * aggregate IOPS ceiling      ~430 K    (§5.2.2 / §5.4.4)
+
+`estimate` turns per-query operation counts (measured for real by the
+search engine) into modeled latency / QPS, including the multi-thread
+regime where throughput is bounded by the CPU-side per-I/O budget.
+Structural metrics (I/O counts, recall, tunnels) are never modeled —
+they are measured.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class IOCostModel:
+    ssd_read_us: float = 100.0       # device latency per 4 KB random read
+    tunnel_us: float = 1.0           # neighbor-store lookup + PQ per tunneled node
+    exact_dist_us: float = 4.8       # per fetched node: parse + exact distance
+                                     #   (Table 5: 1041 us / ~206 I/Os ≈ 5 us)
+    submit_poll_us: float = 0.31     # per I/O submit+poll (64 us / 206 I/Os)
+    list_mgmt_us: float = 1.3        # frontier maintenance per expanded node
+    iops_ceiling: float = 430_000.0  # aggregate CPU-side I/O processing budget
+    pipeline_depth: int = 32         # W — concurrent in-flight reads
+
+    def latency_us(self, n_ios: float, n_tunnels: float, n_exact: float | None = None,
+                   pipeline_depth: int | None = None) -> float:
+        """Modeled single-thread per-query latency.
+
+        I/O latency is overlapped across W in-flight reads (PipeANN-style):
+        device time contributes ceil(n_ios / W) * ssd_read_us; CPU-side
+        per-node work is serial on one thread.
+        """
+        w = pipeline_depth or self.pipeline_depth
+        n_exact = n_ios if n_exact is None else n_exact
+        device = np.ceil(n_ios / max(w, 1)) * self.ssd_read_us
+        cpu = (
+            n_ios * (self.submit_poll_us + self.exact_dist_us * (n_exact / max(n_ios, 1e-9)))
+            + n_tunnels * self.tunnel_us
+            + (n_ios + n_tunnels) * self.list_mgmt_us
+        )
+        return float(device + cpu)
+
+    def qps(self, n_ios: float, n_tunnels: float, n_threads: int = 32,
+            n_exact: float | None = None) -> float:
+        """Modeled throughput: min(CPU-scaling limit, aggregate IOPS ceiling)."""
+        if n_ios <= 0 and n_tunnels <= 0:
+            return 0.0  # degenerate query that did no work
+        lat_s = max(self.latency_us(n_ios, n_tunnels, n_exact), 1e-3) / 1e6
+        cpu_bound = n_threads / lat_s
+        if n_ios > 0:
+            io_bound = self.iops_ceiling / n_ios
+            return float(min(cpu_bound, io_bound))
+        return float(cpu_bound)
+
+
+DEFAULT_COST_MODEL = IOCostModel()
+GEN5_COST_MODEL = IOCostModel(ssd_read_us=50.0)  # §5.4.3: ~2x faster random reads

@@ -1,0 +1,231 @@
+"""GateANN search loop (Algorithm 1) and the paper's baselines.
+
+One batched, jittable loop implements all five search modes:
+
+  * ``gate``      — GateANN: pre-I/O filter check; filter-passing nodes
+                    follow the fetch path (record read + exact distance),
+                    filter-failing nodes are *tunneled* in memory
+                    (neighbor-store expansion + PQ scoring). §3.3.
+  * ``post``      — DiskANN/PipeANN post-filtering: fetch every dispatched
+                    node, apply the predicate afterwards. §2.2.
+  * ``early``     — the Fig.18 ablation: fetch every node but skip exact
+                    distance on non-matching ones (CPU saving, no I/O
+                    saving); neighbors expanded normally.
+  * ``pre_naive`` — naive pre-filtering: non-matching nodes are dropped
+                    outright (no fetch, no expansion) — breaks
+                    connectivity, Fig.1(b).
+  * ``unfiltered``— plain beam search (selectivity 1.0).
+
+The frontier is ordered by PQ distance; results are always drawn from
+filter-passing fetched nodes ranked by exact distance (§3.4).  DiskANN's
+synchronous beam and PipeANN's asynchronous pipeline both map to the
+W-wide dispatch: on TPU a round's W fetches execute as one batched
+gather/collective — the hardware-native form of "W in-flight reads".
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import frontier as fr
+from repro.core import pq as pqm
+from repro.core.filter_store import CheckFn
+from repro.core.neighbor_store import NeighborStore
+from repro.store.vector_store import RecordFetchFn
+
+MODES = ("gate", "post", "early", "pre_naive", "unfiltered")
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    mode: str = "gate"
+    search_l: int = 64  # frontier size L
+    result_k: int = 10  # top-K
+    beam_width: int = 8  # W — dispatch width / pipeline depth
+    max_hops: int = 512  # safety bound on rounds
+    use_kernel: bool = False  # route PQ scoring through the Pallas kernel
+
+    def __post_init__(self):
+        assert self.mode in MODES, self.mode
+
+
+class SearchStats(NamedTuple):
+    n_ios: jax.Array  # (B,) records fetched from the expensive tier
+    n_tunnels: jax.Array  # (B,) nodes traversed purely in memory
+    n_exact: jax.Array  # (B,) exact distance computations
+    n_hops: jax.Array  # (B,) dispatch rounds
+
+
+class SearchOutput(NamedTuple):
+    ids: jax.Array  # (B, K) result ids (filter-passing, exact-ranked)
+    dists: jax.Array  # (B, K)
+    stats: SearchStats
+
+
+def _adc_ids(lut: jax.Array, codes: jax.Array, ids: jax.Array, use_kernel: bool) -> jax.Array:
+    """PQ distances for gathered ids. lut (B,C,K), codes (N,C), ids (B,M)."""
+    got = codes[jnp.maximum(ids, 0)]  # (B, M, C)
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        d = kops.pq_lookup_gathered(lut, got)
+    else:
+        # sum_c lut[b, c, got[b, m, c]]
+        b, m, c = got.shape
+        d = jnp.take_along_axis(
+            lut.transpose(0, 2, 1),  # (B, K, C)
+            got,  # (B, M, C) indexes K axis
+            axis=1,
+        ).sum(axis=-1)
+    return jnp.where(ids >= 0, d, fr.INF)
+
+
+def _exact_dist(queries: jax.Array, vecs: jax.Array, use_kernel: bool) -> jax.Array:
+    """(B, D) queries vs (B, W, D) fetched rows -> (B, W) squared L2."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        return kops.l2_dist(queries, vecs)
+    diff = vecs - queries[:, None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def filtered_search(
+    *,
+    fetch: RecordFetchFn,
+    neighbor_store: NeighborStore,
+    filter_check: CheckFn,
+    lut: jax.Array,  # (B, C, K) per-query ADC tables
+    codes: jax.Array,  # (N, C) PQ codes (the in-memory compressed tier)
+    entry: jax.Array,  # () int32 medoid (or (B,) per-query entries)
+    queries: jax.Array,  # (B, D) full-precision queries
+    config: SearchConfig,
+) -> SearchOutput:
+    b, d = queries.shape
+    n = codes.shape[0]
+    L, W, K = config.search_l, config.beam_width, config.result_k
+    mode = config.mode
+    r_max = neighbor_store.r_max
+
+    if entry.ndim == 0:
+        entry = jnp.broadcast_to(entry, (b,))
+
+    frontier = fr.make_frontier(b, L)
+    entry_d = _adc_ids(lut, codes, entry[:, None], config.use_kernel)[:, 0]
+    frontier = frontier._replace(
+        ids=frontier.ids.at[:, 0].set(entry),
+        dists=frontier.dists.at[:, 0].set(entry_d),
+    )
+    results = fr.make_results(b, K)
+
+    nw = (n + 31) // 32
+    visited = jnp.zeros((b, nw), dtype=jnp.uint32)
+
+    def set_visited(vis, idx):
+        word = jnp.clip(idx // 32, 0, nw - 1)
+        bit = jnp.where(idx >= 0, jnp.uint32(1) << (idx % 32).astype(jnp.uint32), 0)
+        upd = jnp.zeros_like(vis)
+
+        def body(c, upd):
+            return upd.at[jnp.arange(b), word[:, c]].set(
+                upd[jnp.arange(b), word[:, c]] | bit[:, c]
+            )
+
+        upd = jax.lax.fori_loop(0, idx.shape[1], body, upd)
+        return vis | upd
+
+    def is_visited(vis, idx):
+        word = jnp.clip(idx // 32, 0, nw - 1)
+        bit = jnp.uint32(1) << (idx % 32).astype(jnp.uint32)
+        return (jnp.take_along_axis(vis, word, axis=1) & bit) != 0
+
+    visited = set_visited(visited, entry[:, None])
+
+    stats0 = SearchStats(
+        n_ios=jnp.zeros((b,), jnp.int32),
+        n_tunnels=jnp.zeros((b,), jnp.int32),
+        n_exact=jnp.zeros((b,), jnp.int32),
+        n_hops=jnp.zeros((b,), jnp.int32),
+    )
+    state0 = (frontier, results, visited, stats0)
+
+    def cond(state):
+        frontier, _, _, stats = state
+        return jnp.any(fr.has_unexpanded(frontier)) & jnp.all(stats.n_hops < config.max_hops)
+
+    def body(state):
+        frontier, results, visited, stats = state
+        sel_ids, slots, valid = fr.best_unexpanded(frontier, W)
+        frontier = fr.mark_expanded(frontier, slots, valid)
+
+        passes = filter_check(sel_ids) & valid  # in-memory predicate (filter store)
+
+        if mode == "unfiltered":
+            fetch_mask = valid
+            tunnel_mask = jnp.zeros_like(valid)
+            result_mask = valid
+            exact_mask = valid
+        elif mode == "post":
+            fetch_mask = valid  # predicate applied only after the read
+            tunnel_mask = jnp.zeros_like(valid)
+            result_mask = passes
+            exact_mask = valid  # exact distance computed for every fetch
+        elif mode == "early":
+            fetch_mask = valid  # still pays the full read ...
+            tunnel_mask = jnp.zeros_like(valid)
+            result_mask = passes
+            exact_mask = passes  # ... but skips exact distance on misses
+        elif mode == "pre_naive":
+            # non-matching nodes dropped outright — except the entry point,
+            # which any implementation must expand to start the search
+            is_entry = sel_ids == entry[:, None]
+            fetch_mask = passes | (is_entry & valid)
+            tunnel_mask = jnp.zeros_like(valid)
+            result_mask = passes
+            exact_mask = fetch_mask
+        else:  # gate
+            fetch_mask = passes
+            tunnel_mask = valid & (~passes)  # tunneled in memory
+            result_mask = passes
+            exact_mask = passes
+
+        # ---- fetch path: record read + exact distance + full-R expansion
+        fetch_ids = jnp.where(fetch_mask, sel_ids, fr.INVALID)
+        vecs, disk_nbrs = fetch(fetch_ids)  # (B, W, D), (B, W, R)
+        exact_d = _exact_dist(queries, vecs, config.use_kernel)
+        exact_d = jnp.where(result_mask, exact_d, fr.INF)
+        results = fr.results_insert(
+            results, jnp.where(result_mask, sel_ids, fr.INVALID), exact_d
+        )
+
+        # ---- tunnel path: in-memory adjacency (first R_max neighbors)
+        if mode == "gate":
+            tun_ids = jnp.where(tunnel_mask, sel_ids, fr.INVALID)
+            tun_nbrs = neighbor_store.lookup(tun_ids)  # (B, W, R_max)
+        else:
+            tun_nbrs = jnp.full((b, W, r_max), fr.INVALID)
+
+        new = jnp.concatenate(
+            [disk_nbrs.reshape(b, -1), tun_nbrs.reshape(b, -1)], axis=-1
+        )
+        fresh = (new >= 0) & (~is_visited(visited, jnp.maximum(new, 0)))
+        new = jnp.where(fresh, new, fr.INVALID)
+        visited = set_visited(visited, new)
+        new_d = _adc_ids(lut, codes, new, config.use_kernel)  # PQ priority signal
+        frontier = fr.insert(frontier, new, new_d)
+
+        stats = SearchStats(
+            n_ios=stats.n_ios + jnp.sum(fetch_mask, axis=1).astype(jnp.int32),
+            n_tunnels=stats.n_tunnels + jnp.sum(tunnel_mask, axis=1).astype(jnp.int32),
+            n_exact=stats.n_exact + jnp.sum(exact_mask, axis=1).astype(jnp.int32),
+            n_hops=stats.n_hops + 1,
+        )
+        return frontier, results, visited, stats
+
+    frontier, results, visited, stats = jax.lax.while_loop(cond, body, state0)
+    return SearchOutput(ids=results.ids, dists=results.dists, stats=stats)

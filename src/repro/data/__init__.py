@@ -1,0 +1,21 @@
+from repro.data.synthetic import make_bigann_like, make_deep_like, make_queries
+from repro.data.labels import (
+    uniform_labels,
+    zipf_labels,
+    kmeans_correlated_labels,
+    norm_bin_attribute,
+    multilabel_tags,
+)
+from repro.data.groundtruth import filtered_ground_truth
+
+__all__ = [
+    "make_bigann_like",
+    "make_deep_like",
+    "make_queries",
+    "uniform_labels",
+    "zipf_labels",
+    "kmeans_correlated_labels",
+    "norm_bin_attribute",
+    "multilabel_tags",
+    "filtered_ground_truth",
+]

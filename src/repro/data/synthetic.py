@@ -1,0 +1,43 @@
+"""Synthetic corpora shaped like the paper's datasets (Table 3).
+
+BigANN-style: uint8-quantized SIFT-like vectors (clustered GMM so graphs
+have non-trivial structure).  DEEP-style: float32 unit-norm descriptors.
+Scaled to CPU-budget N; the statistical shape (clustered, anisotropic)
+is what matters for graph behaviour.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _gmm(n: int, dim: int, n_clusters: int, rng: np.random.Generator, spread: float = 0.35):
+    centers = rng.normal(0.0, 1.0, size=(n_clusters, dim))
+    assign = rng.integers(0, n_clusters, size=n)
+    x = centers[assign] + rng.normal(0.0, spread, size=(n, dim))
+    return x.astype(np.float32), assign
+
+
+def make_bigann_like(n: int, dim: int = 128, seed: int = 0, n_clusters: int = 64):
+    """uint8-range clustered vectors (stored float32 for compute)."""
+    rng = np.random.default_rng(seed)
+    x, _ = _gmm(n, dim, n_clusters, rng)
+    x = x - x.min()
+    x = x / x.max() * 255.0
+    return np.round(x).astype(np.float32)
+
+
+def make_deep_like(n: int, dim: int = 96, seed: int = 0, n_clusters: int = 64):
+    """Unit-norm float descriptors (DEEP-style)."""
+    rng = np.random.default_rng(seed)
+    x, _ = _gmm(n, dim, n_clusters, rng)
+    x /= np.linalg.norm(x, axis=1, keepdims=True) + 1e-9
+    return x.astype(np.float32)
+
+
+def make_queries(corpus: np.ndarray, n_queries: int, seed: int = 1, noise: float = 0.05):
+    """Queries drawn near corpus points (realistic ANN workload)."""
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(corpus.shape[0], size=n_queries, replace=False)
+    scale = np.abs(corpus).mean() * noise
+    q = corpus[idx] + rng.normal(0.0, scale, size=(n_queries, corpus.shape[1]))
+    return q.astype(np.float32)

@@ -1,0 +1,17 @@
+from repro.distributed.sharding import (
+    Layout,
+    make_layout,
+    lshard,
+    param_pspec,
+    store_pspec,
+    tree_pspecs,
+)
+
+__all__ = [
+    "Layout",
+    "make_layout",
+    "lshard",
+    "param_pspec",
+    "store_pspec",
+    "tree_pspecs",
+]

@@ -1,0 +1,88 @@
+"""Fault tolerance & scale-out policy.
+
+Mechanisms implemented in this framework (and how they compose at
+1000+ nodes):
+
+1. **Checkpoint/restart** — ``repro.checkpoint``: atomic, topology-free,
+   async.  On any node failure the job restarts from the last manifest;
+   restore re-shards to whatever mesh the restarted job has (elastic
+   re-mesh), so a 2-pod job can resume as 1-pod degraded or 4-pod scaled.
+
+2. **Deterministic data resume** — ``repro.data.tokens`` streams are pure
+   functions of (seed, step), so a restart replays the exact batch
+   sequence with no data-loader state to persist.
+
+3. **Straggler mitigation** — ``StepWatchdog`` below: bounded step
+   wall-time; on trip, the runner snapshots (async checkpoint already in
+   flight), excludes the slow host from the next mesh (smaller ``data``
+   axis), and restarts.  Because layouts only name logical axes, a
+   re-meshed restart needs no model changes.  (In SPMD there is no
+   per-step partial repair — exclusion-and-restart is how production TPU
+   fleets handle persistent stragglers.)
+
+4. **Gradient compression** — ``repro.distributed.compression``: int8
+   blockwise quantization with error feedback for the cross-pod gradient
+   reduction (the slowest link in multi-pod DP).
+
+5. **Compute/comm overlap** — per-layer ZeRO gathers ride inside the layer
+   scan, so XLA's latency-hiding scheduler overlaps each layer's weight
+   all-gather with the previous layer's compute; verified in the
+   dry-run HLO (EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class StepWatchdog:
+    """Bounded step wall-time with an escalation callback.
+
+    >>> wd = StepWatchdog(limit_s=120.0, on_trip=handle_straggler)
+    >>> for step in range(n):
+    ...     with wd:
+    ...         run_step()
+    """
+
+    limit_s: float
+    on_trip: callable = None
+    trips: int = 0
+    history_len: int = 64
+
+    def __post_init__(self):
+        self._hist: list[float] = []
+
+    def __enter__(self):
+        self._t0 = time.monotonic()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        dt = time.monotonic() - self._t0
+        self._hist = (self._hist + [dt])[-self.history_len :]
+        if dt > self.limit_s:
+            self.trips += 1
+            if self.on_trip is not None:
+                self.on_trip(dt)
+        return False
+
+    @property
+    def p50(self) -> float:
+        h = sorted(self._hist)
+        return h[len(h) // 2] if h else 0.0
+
+    def adaptive_limit(self, factor: float = 3.0) -> float:
+        """Straggler threshold as a multiple of the median step time."""
+        return max(self.limit_s, factor * self.p50)
+
+
+def exclude_and_remesh(all_hosts: list, bad_hosts: set, per_host_devices: int = 4):
+    """Plan the post-failure mesh: drop bad hosts, shrink the data axis to
+    the largest power-of-two slice that the remaining devices support.
+    Returns (kept_hosts, new_data_axis)."""
+    kept = [h for h in all_hosts if h not in bad_hosts]
+    n_dev = len(kept) * per_host_devices
+    data = 1
+    while data * 2 <= n_dev // 16:  # keep model axis at 16
+        data *= 2
+    return kept, data

@@ -1,0 +1,195 @@
+"""Logical-axis sharding rules (MaxText-style) for every execution layout.
+
+Models annotate parameters and activations with *logical* axis names
+("embed", "ffn", "act_seq", ...).  A ``Layout`` maps logical names to mesh
+axes for one execution mode; changing a layout changes the distribution of
+the whole model without touching model code — this is the knob the §Perf
+hillclimb turns.
+
+Layouts
+-------
+* ``train`` / ``prefill`` — 2D data x sequence parallelism: activations
+  sharded (batch -> data, seq -> model); compute params replicated
+  (gathered per scanned layer from their ZeRO-sharded storage); expert
+  weights sharded over ``model`` (EP).  Even on all chips for every arch
+  (no head-divisibility constraints).
+* ``decode`` — row/column tensor parallelism over ``model`` via the
+  d_model axis (exact for all archs since every d_model % 16 == 0), with
+  the KV cache sharded over *sequence* on ``model`` (flash-decode with a
+  distributed softmax).
+* ``long`` — decode with batch=1: cache sequence sharded over
+  (data x model); batch unsharded.
+
+Storage specs ("ZeRO"): parameters and optimizer state are stored fully
+sharded over all free mesh axes (greedy largest-divisible-dim placement);
+the per-layer gather back to the compute spec happens inside the scan
+body, so peak memory holds one layer's gathered params, and XLA overlaps
+the gather with the previous layer's compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Activation logical axes.  "act_kv_seq"/"act_full_seq" are deliberately
+# unmapped (None) in the 2D layouts: constraining to them forces the
+# all-gather that materializes full-length K/V (or a full sequence for
+# strictly-sequential recurrences).  "act_lru" channel-shards linear
+# recurrences instead of sequence-sharding them.
+_ACT_RULES = {
+    "train": {"act_batch": ("data",), "act_seq": ("model",), "act_lru": ("model",),
+              "experts": ("model",)},
+    "prefill": {"act_batch": ("data",), "act_seq": ("model",), "act_lru": ("model",),
+                "experts": ("model",)},
+    "decode": {"act_batch": ("data",), "cache_seq": ("model",), "embed": ("model",),
+               "experts": ("model",)},
+    "long": {"cache_seq": ("data", "model"), "embed": ("model",), "experts": ("model",)},
+}
+# Layout variants (per-arch overrides): "dp_only" folds the model axis into
+# batch parallelism — used by archs with strictly-sequential recurrences
+# (xLSTM's sLSTM) where sequence sharding cannot apply.
+_ACT_RULES_DP_ONLY = {
+    "train": {"act_batch": ("data", "model")},
+    "prefill": {"act_batch": ("data",), "act_seq": ("model",), "act_lru": ("model",)},
+}
+# Parameter logical axes (compute specs)
+_PARAM_RULES = {
+    "train": {"experts": ("model",)},
+    "prefill": {"experts": ("model",)},
+    "decode": {"embed": ("model",), "experts": ("model",)},
+    "long": {"embed": ("model",), "experts": ("model",)},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    kind: str  # train | prefill | decode | long | None
+    mesh: Mesh | None
+    multi_pod: bool = False
+    variant: str = "default"  # default | dp_only
+
+    # ---- rule lookup -------------------------------------------------------
+    def _expand(self, axes_map: dict, name: str):
+        got = axes_map.get(name)
+        if got is None:
+            return None
+        if self.multi_pod:
+            # pod joins the batch-parallel group in train/prefill/decode,
+            # and the sequence shard group in long-context decode.  The
+            # dp_only variant already folds `model` into batch (256-way);
+            # global_batch=256 cannot split 512 ways, so pod stays out of
+            # the activation sharding there (batch-bound arch — DESIGN §5).
+            if (name == "act_batch" and self.kind in ("train", "prefill", "decode")
+                    and self.variant != "dp_only"):
+                got = ("pod",) + tuple(got)
+            if name == "cache_seq" and self.kind == "long":
+                got = ("pod",) + tuple(got)
+        return tuple(got)
+
+    def act_axes(self, name: str):
+        if self.kind is None:
+            return None
+        rules = _ACT_RULES[self.kind]
+        if self.variant == "dp_only" and self.kind in _ACT_RULES_DP_ONLY:
+            rules = _ACT_RULES_DP_ONLY[self.kind]
+        return self._expand(rules, name)
+
+    def param_axes(self, name: str):
+        if self.kind is None:
+            return None
+        return self._expand(_PARAM_RULES[self.kind], name)
+
+
+def make_layout(
+    kind: str | None, mesh: Mesh | None, multi_pod: bool = False,
+    variant: str = "default",
+) -> Layout:
+    return Layout(kind=kind, mesh=mesh, multi_pod=multi_pod, variant=variant)
+
+
+NULL_LAYOUT = Layout(kind=None, mesh=None)
+
+
+def _dedup(spec_list):
+    """A mesh axis may appear only once in a PartitionSpec; keep first use."""
+    seen: set = set()
+    out = []
+    for entry in spec_list:
+        if entry is None:
+            out.append(None)
+            continue
+        entry = tuple(a for a in entry if a not in seen)
+        seen.update(entry)
+        out.append(entry if entry else None)
+    return out
+
+
+def _spec(layout: Layout, names, lookup) -> P:
+    return P(*_dedup([lookup(n) for n in names]))
+
+
+def lshard(x: jax.Array, layout: Layout | None, names) -> jax.Array:
+    """Constrain activation x to the layout's mapping of logical `names`."""
+    if layout is None or layout.mesh is None or layout.kind is None:
+        return x
+    assert x.ndim == len(names), (x.shape, names)
+    spec = _spec(layout, names, layout.act_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(layout.mesh, spec))
+
+
+def param_pspec(names, layout: Layout) -> P:
+    """Compute-time PartitionSpec for a parameter with logical `names`."""
+    if layout.mesh is None or layout.kind is None:
+        return P()
+    return _spec(layout, names, layout.param_axes)
+
+
+def store_pspec(shape, names, layout: Layout) -> P:
+    """Storage (ZeRO) spec: compute spec + free mesh axes greedily placed on
+    the largest divisible dims. Applies to master params / optimizer state."""
+    if layout.mesh is None or layout.kind is None:
+        return P()
+    base = _dedup([layout.param_axes(n) for n in names])
+    used = {a for entry in base if entry for a in entry}
+    free = [a for a in layout.mesh.axis_names if a not in used]
+    axis_sizes = dict(zip(layout.mesh.axis_names, layout.mesh.devices.shape))
+    # current shard factor per dim
+    factor = [int(np.prod([axis_sizes[a] for a in (entry or ())])) for entry in base]
+    spec = [list(entry) if entry else [] for entry in base]
+    for ax in free:
+        s = axis_sizes[ax]
+        # choose the largest dim divisible by factor*s
+        cand = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in cand:
+            if shape[i] % (factor[i] * s) == 0 and shape[i] // (factor[i] * s) >= 1:
+                spec[i].append(ax)
+                factor[i] *= s
+                break
+    return P(*_dedup([tuple(e) if e else None for e in spec]))
+
+
+def tree_pspecs(axes_tree, params_tree, layout: Layout, stored: bool):
+    """Map (axes pytree, params pytree) -> PartitionSpec pytree."""
+
+    def one(axes, leaf):
+        if stored:
+            return store_pspec(np.shape(leaf), axes, layout)
+        return param_pspec(axes, layout)
+
+    return jax.tree.map(
+        one, axes_tree, params_tree,
+        is_leaf=lambda a: isinstance(a, tuple) and all(isinstance(x, (str, type(None))) for x in a),
+    )
+
+
+def tree_shardings(axes_tree, params_tree, layout: Layout, stored: bool):
+    if layout.mesh is None:
+        return None
+    specs = tree_pspecs(axes_tree, params_tree, layout, stored)
+    return jax.tree.map(lambda s: NamedSharding(layout.mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,39 @@
+"""Jitted public wrappers over the Pallas kernels.
+
+``interpret`` mode is selected automatically: compiled on TPU, Python
+interpretation (bit-accurate kernel-body semantics) everywhere else.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import l2_dist as _l2
+from repro.kernels import pq_lookup as _pq
+from repro.kernels import topk_merge as _tk
+
+
+@functools.cache
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pq_lookup_gathered(lut, codes, *, block_m: int = 128):
+    return _pq.pq_lookup_gathered(lut, codes, block_m=block_m, interpret=_interpret())
+
+
+# Alias used by core.search
+pq_lookup = pq_lookup_gathered
+
+
+def pq_scan(lut, codes, *, block_n: int = 512):
+    return _pq.pq_scan(lut, codes, block_n=block_n, interpret=_interpret())
+
+
+def l2_dist(queries, rows):
+    return _l2.l2_dist(queries, rows, interpret=_interpret())
+
+
+def topk_merge(dists, ids, k: int):
+    return _tk.topk_merge(dists, ids, k, interpret=_interpret())

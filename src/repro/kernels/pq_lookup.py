@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: PQ asymmetric-distance computation (ADC).
+
+This is GateANN's hottest in-memory loop — tunneling spends ~49% of
+per-query time in "PQ + AdjIndex" (paper Table 5).  The CPU reference
+implementation is a per-chunk table gather; on TPU the gather is
+re-expressed as a **one-hot × LUT contraction** so the inner loop runs on
+the MXU/VPU over VMEM-resident tiles instead of doing scalar gathers:
+
+    dist[m] = Σ_c lut[c, codes[m, c]]
+            = Σ_c Σ_k onehot(codes[m, c])[k] · lut[c, k]
+
+Two entry points share the kernel body:
+
+  * ``pq_lookup_gathered`` — per-query code rows (B, M, C), used by the
+    search loop on gathered neighbor ids.
+  * ``pq_scan``            — shared code matrix (N, C) scanned by every
+    query (brute-force ADC / re-ranking sweeps).
+
+Block shapes: M is tiled (default 128 rows per program) so the one-hot
+workspace (C·Mt·K f32 = 32·128·256·4 B = 4 MB) fits comfortably in VMEM
+alongside the LUT tile (C·K·4 B = 32 KB); all tile trailing dims are
+multiples of 128 lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adc_kernel(lut_ref, codes_ref, out_ref):
+    """One (query b, row-tile m) program.
+
+    lut_ref:   (1, C, K) f32 VMEM
+    codes_ref: (1, Mt, C) int32 VMEM
+    out_ref:   (1, Mt) f32 VMEM
+    """
+    lut = lut_ref[0]  # (C, K)
+    codes = codes_ref[0]  # (Mt, C)
+    c, k = lut.shape
+    # one-hot contraction: (C, Mt, K) ⊗ (C, K) -> (C, Mt) -> sum over C
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (c, codes.shape[0], k), 2)
+    onehot = (codes.T[:, :, None] == iota_k).astype(lut.dtype)  # (C, Mt, K)
+    per_chunk = jax.lax.dot_general(
+        onehot,
+        lut,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),  # batch C, contract K
+        preferred_element_type=jnp.float32,
+    )  # (C, Mt)
+    out_ref[0] = jnp.sum(per_chunk, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def pq_lookup_gathered(
+    lut: jax.Array,  # (B, C, K) float32
+    codes: jax.Array,  # (B, M, C) int32
+    *,
+    block_m: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-query gathered ADC: out[b, m] = sum_c lut[b, c, codes[b, m, c]]."""
+    b, c, k = lut.shape
+    bb, m, cc = codes.shape
+    assert bb == b and cc == c, (lut.shape, codes.shape)
+    block_m = min(block_m, m)
+    pad_m = (-m) % block_m
+    if pad_m:
+        codes = jnp.pad(codes, ((0, 0), (0, pad_m), (0, 0)))
+    mp = m + pad_m
+    out = pl.pallas_call(
+        _adc_kernel,
+        grid=(b, mp // block_m),
+        in_specs=[
+            pl.BlockSpec((1, c, k), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_m, c), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, mp), jnp.float32),
+        interpret=interpret,
+    )(lut.astype(jnp.float32), codes.astype(jnp.int32))
+    return out[:, :m]
+
+
+def _adc_scan_kernel(lut_ref, codes_ref, out_ref):
+    """One (query b, node-tile n) program over a shared code matrix.
+
+    lut_ref:   (1, C, K) f32; codes_ref: (Nt, C) int32; out_ref: (1, Nt) f32
+    """
+    lut = lut_ref[0]
+    codes = codes_ref[...]
+    c, k = lut.shape
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (c, codes.shape[0], k), 2)
+    onehot = (codes.T[:, :, None] == iota_k).astype(lut.dtype)
+    per_chunk = jax.lax.dot_general(
+        onehot, lut, dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[0] = jnp.sum(per_chunk, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pq_scan(
+    lut: jax.Array,  # (B, C, K) float32
+    codes: jax.Array,  # (N, C) int32 — shared across queries
+    *,
+    block_n: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Brute-force ADC sweep: out[b, n] = sum_c lut[b, c, codes[n, c]]."""
+    b, c, k = lut.shape
+    n, cc = codes.shape
+    assert cc == c
+    block_n = min(block_n, n)
+    pad_n = (-n) % block_n
+    if pad_n:
+        codes = jnp.pad(codes, ((0, 0), (0, 0)) if False else ((0, pad_n), (0, 0)))
+    np_ = n + pad_n
+    out = pl.pallas_call(
+        _adc_scan_kernel,
+        grid=(b, np_ // block_n),
+        in_specs=[
+            pl.BlockSpec((1, c, k), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_n, c), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, np_), jnp.float32),
+        interpret=interpret,
+    )(lut.astype(jnp.float32), codes.astype(jnp.int32))
+    return out[:, :n]

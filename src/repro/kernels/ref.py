@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pq_lookup_gathered_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """lut (B, C, K) f32, codes (B, M, C) i32 -> (B, M) f32."""
+    # out[b, m] = sum_c lut[b, c, codes[b, m, c]]
+    return jnp.take_along_axis(
+        lut.transpose(0, 2, 1),  # (B, K, C)
+        codes,  # (B, M, C) indexes the K axis
+        axis=1,
+    ).sum(axis=-1).astype(jnp.float32)
+
+
+def pq_scan_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """lut (B, C, K) f32, codes (N, C) i32 -> (B, N) f32."""
+    b = lut.shape[0]
+    return pq_lookup_gathered_ref(lut, jnp.broadcast_to(codes[None], (b,) + codes.shape))
+
+
+def l2_dist_ref(queries: jax.Array, rows: jax.Array) -> jax.Array:
+    """queries (B, D), rows (B, W, D) -> (B, W) squared L2."""
+    diff = rows.astype(jnp.float32) - queries.astype(jnp.float32)[:, None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def topk_merge_ref(dists: jax.Array, ids: jax.Array, k: int):
+    """Sorted ascending top-k of (dists, ids)."""
+    order = jnp.argsort(dists, axis=-1)[:, :k]
+    return (
+        jnp.take_along_axis(dists, order, axis=-1).astype(jnp.float32),
+        jnp.take_along_axis(ids, order, axis=-1).astype(jnp.int32),
+    )

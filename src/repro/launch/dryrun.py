@@ -1,0 +1,387 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds abstract inputs (ShapeDtypeStruct — no
+allocation), the layout's in/out shardings, then ``.lower().compile()``
+on the production mesh and records:
+
+  * ``memory_analysis()``  — per-device bytes (proves the cell fits),
+  * ``cost_analysis()``    — HLO FLOPs / bytes for the roofline,
+  * collective bytes       — parsed from the partitioned HLO text
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute, per-device output-shape accounting; see
+    ``collective_bytes``).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, shapes_for
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import Layout, make_layout, tree_pspecs
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tfm
+from repro.models import zoo
+from repro.optim import OptConfig, opt_init
+from repro.serve.decode import cache_pspecs, make_serve_step
+from repro.serve.prefill import make_prefill_step
+from repro.train.train_step import (
+    TrainHParams,
+    TrainState,
+    make_train_state_specs,
+    make_train_step,
+)
+
+# Per-arch optimizer: adafactor for the 400B MoE so fp32 Adam moments never
+# exceed a v5e's 16 GB HBM even at 256 chips.
+OPT_FOR = {"llama4-maverick-400b-a17b": "adafactor"}
+
+# Per-arch training layout variant (DESIGN.md §5)
+VARIANT_FOR = {"xlstm-350m": "dp_only"}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4, "u64": 8,
+    "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+([^=]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device communicated bytes by collective kind (ring estimates:
+    all-gather/all-to-all/permute ~ out bytes; all-reduce ~ 2x out;
+    reduce-scatter ~ out x (group-1), conservatively group from
+    replica_groups when printed, else 1x)."""
+    out: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        g = 1
+        gm = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+        if gm:
+            g = gm.group(1).count(",") + 1
+        else:
+            gm2 = re.search(r"replica_groups=\[\d+,(\d+)\]", line)
+            if gm2:
+                g = int(gm2.group(1))
+        if kind == "all-reduce":
+            nbytes = 2 * nbytes * (g - 1) / max(g, 1)
+        elif kind == "reduce-scatter":
+            nbytes = nbytes * max(g - 1, 1)
+        elif kind in ("all-gather", "all-to-all"):
+            nbytes = nbytes * (g - 1) / max(g, 1) if g > 1 else nbytes
+        out[kind] = out.get(kind, 0.0) + nbytes
+        counts[kind] = counts.get(kind, 0) + 1
+    out["_counts"] = counts
+    return out
+
+
+def _bf16_struct(tree):
+    def conv(s):
+        dt = jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype
+        return jax.ShapeDtypeStruct(s.shape, dt)
+
+    return jax.tree.map(conv, tree)
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig, layout: Layout):
+    mesh = layout.mesh
+    ab = layout.act_axes("act_batch")
+    if shape.kind in ("train", "prefill"):
+        tok = P(ab, layout.act_axes("act_seq"))
+        out = {"tokens": tok}
+        if shape.kind == "train":
+            out["targets"] = tok
+        if cfg.frontend == "vision_stub":
+            out["prefix_embeds"] = P(ab, layout.act_axes("act_seq"), None)
+        return _ns(mesh, out)
+    # decode
+    return _ns(mesh, {
+        "tokens": P(ab, None),
+        "caches": cache_pspecs(cfg, layout),
+        "pos": P(),
+    })
+
+
+def lower_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool = False,
+               donate: bool = False):
+    """Returns (lowered, compiled, report dict, hlo text).
+
+    donate=True donates the train state / decode caches so XLA updates
+    them in place (no defensive copies) — a §Perf iteration knob.
+    """
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(mesh.devices.shape))
+    kind = {"train": "train", "prefill": "prefill", "decode": "decode"}[shape.kind]
+    if shape.kind == "decode" and shape.name == "long_500k":
+        kind = "long"
+    variant = VARIANT_FOR.get(arch, "default") if shape.kind == "train" else "default"
+    layout = make_layout(kind, mesh, multi_pod=multi_pod, variant=variant)
+
+    params_struct = jax.eval_shape(
+        lambda k: tfm.init_model(k, cfg)[0], jax.random.PRNGKey(0)
+    )
+    axes = zoo.param_axes(cfg)
+    specs = zoo.input_specs(cfg, shape)
+    in_sh = input_shardings(cfg, shape, layout)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt_name = OPT_FOR.get(arch, "adamw")
+        hp = TrainHParams(opt=OptConfig(name=opt_name))
+        state_struct = jax.eval_shape(
+            lambda p: TrainState(
+                params=p, opt=opt_init(p, hp.opt), step=jnp.zeros((), jnp.int32)
+            ),
+            params_struct,
+        )
+        state_specs = make_train_state_specs(params_struct, axes, layout, opt_name)
+        state_sh = _ns(mesh, state_specs)
+        metrics_sh = {k: NamedSharding(mesh, P()) for k in ("loss", "grad_norm", "lr")}
+        step = make_train_step(cfg, layout, hp, grad_specs=state_specs.params)
+        jitted = jax.jit(step, in_shardings=(state_sh, in_sh),
+                         out_shardings=(state_sh, metrics_sh),
+                         donate_argnums=(0,) if donate else ())
+        lowered = jitted.lower(state_struct, specs)
+    elif shape.kind == "prefill":
+        p_bf16 = _bf16_struct(params_struct)
+        p_specs = tree_pspecs(axes, params_struct, layout, stored=True)
+        p_sh = _ns(mesh, p_specs)
+        step = make_prefill_step(cfg, layout)
+        jitted = jax.jit(step, in_shardings=(p_sh, in_sh))
+        lowered = jitted.lower(p_bf16, specs)
+    else:  # decode
+        p_bf16 = _bf16_struct(params_struct)
+        if os.environ.get("REPRO_W_INT8", "0") == "1":
+            # w8a16 serving: int8 weights + per-channel scales
+            from repro.models.layers import quantize_axes, quantize_tree
+
+            p_bf16 = jax.eval_shape(lambda p: quantize_tree(p, axes), p_bf16)
+            axes = quantize_axes(axes)
+            params_struct = p_bf16
+        p_specs = tree_pspecs(axes, params_struct, layout, stored=False)
+        p_sh = _ns(mesh, p_specs)
+        c_sh = _ns(mesh, cache_pspecs(cfg, layout))
+        ab = layout.act_axes("act_batch")
+        out_sh = {
+            "logits": NamedSharding(mesh, P(ab, None, None)),
+            "next_tokens": NamedSharding(mesh, P(ab, None)),
+            "caches": c_sh,
+        }
+        step = make_serve_step(cfg, layout)
+        jitted = jax.jit(step, in_shardings=(p_sh, in_sh["caches"], in_sh["tokens"],
+                                             NamedSharding(mesh, P())),
+                         out_shardings=out_sh,
+                         donate_argnums=(1,) if donate else ())
+        lowered = jitted.lower(p_bf16, specs["caches"], specs["tokens"], specs["pos"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    from repro.launch.hlo_analysis import analyze
+
+    loop_aware = analyze(hlo)
+
+    report = {
+        "arch": arch,
+        "shape": shape.name,
+        "mesh": list(mesh.devices.shape),
+        "multi_pod": multi_pod,
+        "n_devices": n_dev,
+        "layout": kind,
+        "variant": variant,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        # raw backend numbers (while bodies counted once — see hlo_analysis)
+        "flops_per_device_raw": float(cost.get("flops", -1)),
+        "bytes_accessed_per_device_raw": float(cost.get("bytes accessed", -1)),
+        # loop-aware numbers parsed from the partitioned HLO
+        "flops_per_device": loop_aware["flops"],
+        "hbm_bytes_per_device": loop_aware["hbm_bytes"],
+        "collective_bytes_per_device": loop_aware["collective_bytes"],
+        "collective_bytes_total": loop_aware["collective_total"],
+        "collective_counts": loop_aware["collective_counts"],
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            report[attr] = getattr(mem, attr, None)
+    return lowered, compiled, report, hlo
+
+
+def lower_retrieval(*, multi_pod: bool = False, n: int = 100_000_000,
+                    dim: int = 128, batch: int = 256, mode: str = "gate"):
+    """Dry-run the distributed GateANN retrieve step at BigANN-100M scale."""
+    from repro.core.distributed_search import DistSearchConfig, make_retrieve_step
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rows = -(-n // 16)  # records sharded over model within a data group
+    cfg = DistSearchConfig(search_l=100, beam_width=8, n_hops=48, mode=mode)
+    step = make_retrieve_step(mesh, cfg, rows_per_shard=rows, multi_pod=multi_pod)
+    C, K, R, RMAX = 32, 256, 96, 16
+    s = jax.ShapeDtypeStruct
+    args_struct = (
+        s((batch, dim), jnp.float32),  # queries
+        s((batch, C, K), jnp.float32),  # lut
+        s((n, C), jnp.int32),  # codes  (int8 logical; int32 for take) — Table 2
+        s((n, RMAX), jnp.int32),  # neighbor store
+        s((n,), jnp.int32),  # labels
+        s((rows * 16, dim), jnp.float32),  # record vectors (padded)
+        s((rows * 16, R), jnp.int32),  # record adjacency
+        s((), jnp.int32),  # entry
+        s((batch,), jnp.int32),  # targets
+    )
+    t0 = time.time()
+    lowered = step.lower(*args_struct)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    from repro.launch.hlo_analysis import analyze
+
+    loop_aware = analyze(compiled.as_text())
+    report = {
+        "arch": f"gateann-retrieval-{mode}",
+        "shape": f"bigann{n//1_000_000}m_b{batch}",
+        "mesh": list(mesh.devices.shape),
+        "multi_pod": multi_pod,
+        "compile_s": round(time.time() - t0, 1),
+        "flops_per_device_raw": float(cost.get("flops", -1)),
+        "bytes_accessed_per_device_raw": float(cost.get("bytes accessed", -1)),
+        "flops_per_device": loop_aware["flops"],
+        "hbm_bytes_per_device": loop_aware["hbm_bytes"],
+        "collective_bytes_per_device": loop_aware["collective_bytes"],
+        "collective_bytes_total": loop_aware["collective_total"],
+        "collective_counts": loop_aware["collective_counts"],
+        "n_hops": cfg.n_hops,
+        "beam_width": cfg.beam_width,
+    }
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes"):
+            report[attr] = getattr(mem, attr, None)
+    return report, compiled.as_text()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--retrieval", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    if args.retrieval:
+        os.makedirs(args.out, exist_ok=True)
+        for mp in ([False, True] if args.both_meshes else [args.multi_pod]):
+            for mode in ("gate", "post"):
+                tag = f"gateann-retrieval-{mode}__{'2x16x16' if mp else '16x16'}"
+                print(f"=== {tag}", flush=True)
+                rep, hlo = lower_retrieval(multi_pod=mp, mode=mode)
+                print(f"    flops/dev={rep['flops_per_device']:.3e} "
+                      f"coll={rep['collective_bytes_per_device']}", flush=True)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rep, f, indent=2)
+                import gzip
+
+                with gzip.open(os.path.join(args.out, tag + ".hlo.gz"), "wt") as f:
+                    f.write(hlo)
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list(ARCH_IDS) if args.all or args.arch is None else [args.arch]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            if args.shape and shape.name != args.shape:
+                continue
+            for mp in meshes:
+                tag = f"{arch}__{shape.name}__{'2x16x16' if mp else '16x16'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"skip (exists): {tag}")
+                    continue
+                print(f"=== {tag}", flush=True)
+                try:
+                    _, compiled, report, hlo = lower_cell(arch, shape, multi_pod=mp)
+                    print(f"    flops/dev={report['flops_per_device']:.3e} "
+                          f"coll/dev={report['collective_bytes_total']:.3e} "
+                          f"compile={report['compile_s']}s", flush=True)
+                    with open(path, "w") as f:
+                        json.dump(report, f, indent=2)
+                    import gzip
+
+                    with gzip.open(path.replace(".json", ".hlo.gz"), "wt") as f:
+                        f.write(hlo)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    failures.append(tag)
+                    print(f"    FAILED: {e}")
+                    traceback.print_exc()
+                    with open(os.path.join(args.out, tag + ".FAILED"), "w") as f:
+                        f.write(traceback.format_exc())
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,270 @@
+"""Compiled-HLO analysis: loop-aware FLOPs and collective bytes.
+
+XLA's ``cost_analysis()`` counts a while-loop body **once**, so any model
+scanned over layers under-reports by ~n_layers.  This module parses the
+partitioned optimized HLO text instead:
+
+  * builds the computation call graph (fusions, calls, while bodies),
+  * extracts while trip counts from the loop-condition constants,
+  * counts dot/convolution FLOPs per computation from operand shapes,
+  * sums collective bytes (ring-model per-device traffic) per computation,
+
+then folds multiplicities down the call graph.  Everything is derived
+from the dry-run's compiled artifact, per the roofline contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4, "u64": 8,
+    "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+
+# computation headers start at column 0, contain ") -> ", and end with "{"
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_SHAPE_TOK = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLS = re.compile(r"calls=(%[\w\.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=(%[\w\.\-]+)")
+_WHILE = re.compile(r"condition=(%[\w\.\-]+),\s*body=(%[\w\.\-]+)")
+_CONST = re.compile(r"constant\((\d+)\)")
+_GROUPS = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS2 = re.compile(r"replica_groups=\[\d+,(\d+)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_dims(shape_str: str):
+    """First dtype[dims] token -> (dtype, [dims])."""
+    m = _SHAPE_TOK.search(shape_str)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+def _all_shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_TOK.finditer(shape_str):
+        if m.group(1) not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    flops: float = 0.0
+    hbm_bytes: float = 0.0  # operands+outputs of top-level (unfused) ops
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_counts: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
+    calls: list = dataclasses.field(default_factory=list)  # (callee, multiplier)
+    max_const: int = 1  # for trip-count extraction when used as a condition
+
+
+# ops whose operands+outputs move HBM bytes at module level; fused
+# computations' internals are free (counted at the fusion call site).
+_MEM_OPS = {
+    "fusion", "dot", "convolution", "copy", "reduce", "sort", "scatter",
+    "gather", "dynamic-update-slice", "dynamic-slice", "transpose", "reshape",
+    "broadcast", "concatenate", "slice", "pad", "convert", "select",
+    "add", "multiply", "subtract", "divide", "exponential", "rsqrt", "tanh",
+    "custom-call", "iota", "compare", "maximum", "minimum",
+} | set(COLLECTIVES)
+_FREE_OPS = {"get-tuple-element", "tuple", "bitcast", "parameter", "constant",
+             "after-all", "partition-id", "replica-id"}
+_OPERANDS = re.compile(r"\((%[\w\.\-]+(?:,\s*%[\w\.\-]+)*)\)")
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    symtab: dict[str, str] = {}
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line) if (line and not raw[0].isspace()) else None
+        if hdr and line.endswith("{"):
+            name = hdr.group(1)
+            if not name.startswith("%"):
+                name = "%" + name
+            cur = Computation(name=name)
+            comps[name] = cur
+            if raw.startswith("ENTRY"):
+                entry = name
+            symtab = {}
+            # header params: "%comp (p0: f32[..], p1: (s32[], ...)) -> ..."
+            for pm in re.finditer(r"([\w\.\-]+):\s*([\w\[\]\{\},\s]+?)(?=,\s*[\w\.\-]+:|\)\s*->)", line):
+                symtab["%" + pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            cm = _CONST.search(line)
+            if cm:
+                cur.max_const = max(cur.max_const, int(cm.group(1)))
+            continue
+        name, shape_str, op = m.group(1), m.group(2), m.group(3)
+        symtab[name] = shape_str
+        cm = _CONST.search(line)
+        if cm:
+            cur.max_const = max(cur.max_const, int(cm.group(1)))
+
+        # HBM byte accounting (top-level ops; fused internals are free)
+        base_op = op.replace("-start", "").replace("-done", "")
+        if base_op in _MEM_OPS and op not in ("while", "call", "conditional"):
+            if base_op in ("dynamic-slice", "gather"):
+                # reads only the sliced/gathered region ~= output bytes
+                nbytes = 2 * _all_shape_bytes(shape_str)
+            elif base_op in ("dynamic-update-slice", "scatter"):
+                # rw of the updated region; the aliased buffer is untouched
+                om = _OPERANDS.search(line)
+                upd = 0
+                if om:
+                    parts = [p.strip() for p in om.group(1).split(",")]
+                    if len(parts) >= 2:
+                        upd = _all_shape_bytes(symtab.get(parts[1], ""))
+                nbytes = 2 * upd if upd else _all_shape_bytes(shape_str)
+            else:
+                nbytes = _all_shape_bytes(shape_str)
+                om = _OPERANDS.search(line)
+                if om:
+                    for opnd in om.group(1).split(","):
+                        nbytes += _all_shape_bytes(symtab.get(opnd.strip(), ""))
+            cur.hbm_bytes += nbytes
+
+        if op == "dot":
+            flops = _dot_flops(line, shape_str, symtab)
+            cur.flops += flops
+        elif op in ("convolution",):
+            # rare here; approximate with output x kernel contraction
+            cur.flops += 2 * _all_shape_bytes(shape_str)  # coarse
+        elif op in COLLECTIVES or any(op.startswith(c) for c in COLLECTIVES):
+            base = op.replace("-start", "").replace("-done", "")
+            if base.endswith("-done"):
+                continue
+            if op.endswith("-done"):
+                continue
+            nbytes = _all_shape_bytes(shape_str)
+            g = 1
+            gm = _GROUPS.search(line)
+            if gm:
+                g = gm.group(1).count(",") + 1
+            else:
+                gm2 = _GROUPS2.search(line)
+                if gm2:
+                    g = int(gm2.group(1))
+            if base == "all-reduce":
+                traffic = 2 * nbytes * (g - 1) / max(g, 1)
+            elif base == "reduce-scatter":
+                traffic = nbytes * max(g - 1, 1)
+            elif base in ("all-gather", "all-to-all"):
+                traffic = nbytes * (g - 1) / max(g, 1) if g > 1 else nbytes
+            else:  # collective-permute
+                traffic = nbytes
+            cur.coll_bytes += traffic
+            cur.coll_by_kind[base] += traffic
+            cur.coll_counts[base] += 1
+        elif op == "fusion":
+            cm2 = _CALLS.search(line)
+            if cm2:
+                cur.calls.append((cm2.group(1), 1))
+        elif op == "while":
+            wm = _WHILE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                cur.calls.append(("__while__" + body + "|" + cond, 1))
+        elif op in ("call", "conditional", "async-start"):
+            cm2 = _TO_APPLY.search(line) or _CALLS.search(line)
+            if cm2:
+                cur.calls.append((cm2.group(1), 1))
+        # reduce/sort/map to_apply bodies: negligible flops, skipped
+    comps["__entry__"] = comps.get(entry, Computation("__entry__"))
+    return comps
+
+
+def _dot_flops(line: str, out_shape: str, symtab: dict) -> float:
+    _, out_dims = _shape_dims(out_shape)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    # contraction size from lhs operand shape + contracting dims
+    ops = re.search(r"\(([^)]*)\)", line)
+    lhs_name = ops.group(1).split(",")[0].strip() if ops else None
+    lhs_shape = symtab.get(lhs_name, "")
+    _, lhs_dims = _shape_dims(lhs_shape)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contract = 1
+    if cm and lhs_dims:
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def fold(comps: dict[str, Computation]) -> dict:
+    """Fold flops/collectives down the call graph with loop multiplicities."""
+    memo: dict[str, tuple] = {}
+
+    def visit(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        if depth > 50 or name not in comps:
+            return 0.0, 0.0, defaultdict(float), defaultdict(int)
+        c = comps[name]
+        flops = c.flops
+        hbm = c.hbm_bytes
+        coll = defaultdict(float, c.coll_by_kind)
+        counts = defaultdict(int, c.coll_counts)
+        for callee, mult in c.calls:
+            if callee.startswith("__while__"):
+                body, cond = callee[9:].split("|")
+                trips = comps[cond].max_const if cond in comps else 1
+                bf, bh, bc, bn = visit(body, depth + 1)
+                cf, ch, cc, cn = visit(cond, depth + 1)
+                flops += trips * (bf + cf)
+                hbm += trips * (bh + ch)
+                for k, v in bc.items():
+                    coll[k] += trips * v
+                for k, v in bn.items():
+                    counts[k] += trips * v
+            else:
+                f2, h2, c2, n2 = visit(callee, depth + 1)
+                flops += mult * f2
+                # fusion internals don't move HBM bytes — only the fusion
+                # op itself (already counted at the call site)
+                if not callee.startswith("%fused") and "fused" not in callee:
+                    hbm += mult * h2
+                for k, v in c2.items():
+                    coll[k] += mult * v
+                for k, v in n2.items():
+                    counts[k] += mult * v
+        memo[name] = (flops, hbm, coll, counts)
+        return memo[name]
+
+    flops, hbm, coll, counts = visit("__entry__")
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "collective_bytes": dict(coll),
+        "collective_total": sum(coll.values()),
+        "collective_counts": dict(counts),
+    }
+
+
+def analyze(hlo_text: str) -> dict:
+    return fold(parse_hlo(hlo_text))

@@ -1,0 +1,84 @@
+"""Training launcher: --arch <id> [--smoke] with checkpoint/restart.
+
+Production path: build the mesh, make the layout, jit the train step with
+ZeRO state shardings, stream deterministic batches, checkpoint async.
+On CPU (tests/examples) the same code runs with a local mesh or none.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointConfig, Checkpointer
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import TRAIN_4K, ShapeConfig
+from repro.data.tokens import TokenStreamConfig, batch_at_step
+from repro.distributed.sharding import NULL_LAYOUT, make_layout
+from repro.models import transformer as tfm
+from repro.optim import OptConfig
+from repro.train.train_step import TrainHParams, TrainState, make_train_step
+from repro.optim import opt_init
+
+
+def run(arch: str, *, smoke: bool = False, steps: int = 50, seq_len: int = 128,
+        batch: int = 8, ckpt_dir: str | None = None, lr: float = 3e-4,
+        log_every: int = 10):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    import dataclasses
+    if smoke:
+        cfg = dataclasses.replace(cfg, dtype="float32")
+    layout = NULL_LAYOUT  # single-host run; production uses make_layout("train", mesh)
+    hp = TrainHParams(peak_lr=lr, warmup=max(steps // 10, 1), total_steps=steps,
+                      opt=OptConfig(name="adamw"))
+
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    state = TrainState(params=params, opt=opt_init(params, hp.opt),
+                       step=jnp.zeros((), jnp.int32))
+    step_fn = jax.jit(make_train_step(cfg, layout, hp))
+
+    ckpt = Checkpointer(CheckpointConfig(directory=ckpt_dir)) if ckpt_dir else None
+    start = 0
+    if ckpt and ckpt.latest_step() is not None:
+        state = ckpt.restore(state)
+        start = int(state.step)
+        print(f"resumed from step {start}")
+
+    ds = TokenStreamConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                           global_batch=batch, seed=0)
+    losses = []
+    t0 = time.time()
+    for step in range(start, steps):
+        batch_np = batch_at_step(ds, step)
+        state, metrics = step_fn(state, jax.tree.map(jnp.asarray, batch_np))
+        losses.append(float(metrics["loss"]))
+        if step % log_every == 0 or step == steps - 1:
+            print(f"step {step:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} ({time.time()-t0:.1f}s)", flush=True)
+        if ckpt and step and step % 50 == 0:
+            ckpt.save(step + 1, state)
+    if ckpt:
+        ckpt.save(steps, state, blocking=True)
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    losses = run(args.arch, smoke=args.smoke, steps=args.steps,
+                 seq_len=args.seq_len, batch=args.batch, ckpt_dir=args.ckpt_dir)
+    print(f"final loss: {losses[-1]:.4f} (first: {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.models import transformer, zoo
+from repro.models.transformer import (
+    forward_train,
+    forward_decode,
+    forward_prefill,
+    init_model,
+    init_caches,
+    lm_loss,
+)

@@ -1,0 +1,219 @@
+"""GQA attention: training (chunked-flash), prefill, and cached decode.
+
+Training/prefill use a flash-style ``lax.scan`` over KV chunks with f32
+running max/sum — memory is bounded by one (Tq_local x chunk) score tile
+regardless of sequence length, and the layout's sequence sharding keeps
+per-chip score work exactly even (no head-divisibility constraints).
+
+Decode shards the KV cache over *sequence* (``cache_seq``): each chip
+scores the new query against its cache slice and the softmax over the
+sharded axis becomes a distributed log-sum-exp (flash-decode) inserted by
+the SPMD partitioner.  Local (sliding-window) layers keep a ring-buffer
+cache with explicit slot positions, so window masking is exact across
+wrap-around.
+
+GQA is computed with grouped einsums — K/V are never materialized
+per-query-head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import Layout, lshard
+from repro.models.layers import init_linear, linear, rope
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def init_attention(key, cfg: ModelConfig):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["wq"], a["wq"] = init_linear(
+        ks[0], d, (h, dh), ("embed",), ("heads", "head_dim"), bias=cfg.qkv_bias
+    )
+    p["wk"], a["wk"] = init_linear(
+        ks[1], d, (kv, dh), ("embed",), ("kv_heads", "head_dim"), bias=cfg.qkv_bias
+    )
+    p["wv"], a["wv"] = init_linear(
+        ks[2], d, (kv, dh), ("embed",), ("kv_heads", "head_dim"), bias=cfg.qkv_bias
+    )
+    p["wo"], a["wo"] = init_linear(
+        ks[3], h * dh, d, ("heads",), ("embed",)
+    )
+    return p, a
+
+
+def _qkv(params, x, positions, cfg: ModelConfig):
+    """Project + rope. x (B, T, D) -> q (B,T,KV,G,dh), k/v (B,T,KV,dh)."""
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kv
+    q = linear(x, params["wq"])  # (B, T, H, dh)
+    k = linear(x, params["wk"])  # (B, T, KV, dh)
+    v = linear(x, params["wv"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = q * (dh**-0.5)
+    b, t = x.shape[0], x.shape[1]
+    q = q.reshape(b, t, kv, g, dh)
+    return q, k, v
+
+
+def _out_proj(params, attn_out, cfg: ModelConfig):
+    b, t = attn_out.shape[:2]
+    flat = attn_out.reshape(b, t, cfg.n_heads * cfg.head_dim)
+    return linear(flat, params["wo"])
+
+
+def attn_train(
+    params, x, positions, cfg: ModelConfig, layout: Layout, *,
+    window: int | None, kv_chunk: int = 512,
+):
+    """Causal (optionally windowed) attention, flash-chunked over KV.
+
+    Returns (out (B, T, D), (k, v) full-length caches for prefill reuse).
+    """
+    b, t, _ = x.shape
+    q, k, v = _qkv(params, x, positions, cfg)
+    # K/V replicated over the sequence-shard axis (all-gather under 2D-SP)
+    k = lshard(k, layout, ("act_batch", "act_kv_seq", "kv_heads", "head_dim"))
+    v = lshard(v, layout, ("act_batch", "act_kv_seq", "kv_heads", "head_dim"))
+
+    chunk = min(kv_chunk, t)
+    while t % chunk:
+        chunk //= 2
+    n_chunks = t // chunk
+    kc = k.reshape(b, n_chunks, chunk, cfg.n_kv_heads, cfg.head_dim)
+    vc = v.reshape(b, n_chunks, chunk, cfg.n_kv_heads, cfg.head_dim)
+
+    qpos = positions  # (B, T) or (T,)
+    if qpos.ndim == 1:
+        qpos = jnp.broadcast_to(qpos[None], (b, t))
+
+    def flash_step(carry, inputs):
+        m, l, o = carry  # (B,KV,G,T) running max/denom; o (B,T,KV,G,dh) f32
+        kci, vci, base = inputs  # (B, chunk, KV, dh), (B, chunk, KV, dh), ()
+        s = jnp.einsum(
+            "btkgd,bskd->bkgts", q, kci, preferred_element_type=jnp.float32
+        )  # (B, KV, G, T, chunk) f32
+        kpos = base + jnp.arange(chunk)  # absolute key positions
+        mask = qpos[:, None, None, :, None] >= kpos[None, None, None, None, :]
+        if window is not None:
+            mask &= (qpos[:, None, None, :, None] - kpos) < window
+        if cfg.logit_softcap:
+            s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        o_scaled = o * alpha.transpose(0, 3, 1, 2)[..., None]
+        o_new = o_scaled + jnp.einsum(
+            "bkgts,bskd->btkgd", p.astype(x.dtype), vci,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, o_new), None
+
+    kv_g = cfg.n_kv_heads
+    g = cfg.n_heads // kv_g
+    m0 = jnp.full((b, kv_g, g, t), NEG_INF)
+    l0 = jnp.zeros((b, kv_g, g, t), jnp.float32)
+    o0 = jnp.zeros((b, t, kv_g, g, cfg.head_dim), jnp.float32)
+    bases = jnp.arange(n_chunks) * chunk
+    (m, l, o), _ = jax.lax.scan(
+        flash_step, (m0, l0, o0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), bases),
+    )
+    o = o / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    o = o.reshape(b, t, cfg.n_heads, cfg.head_dim).astype(x.dtype)
+    o = lshard(o, layout, ("act_batch", "act_seq", "heads", "head_dim"))
+    return _out_proj(params, o, cfg), (k, v)
+
+
+def kv_cache_quantized() -> bool:
+    import os
+
+    return os.environ.get("REPRO_KV_INT8", "0") == "1"
+
+
+def make_cache(cfg: ModelConfig, batch: int, length: int, dtype=jnp.bfloat16):
+    """KV cache for one attention layer: (k, v, slot_positions).
+
+    With REPRO_KV_INT8=1 the cache stores int8 codes + per-(slot, head)
+    f32 scales — KV reads shrink ~2x vs bf16 (the §Perf kv_int8 variant)."""
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    if kv_cache_quantized():
+        return {
+            "k_q": jnp.zeros((batch, length, kv, dh), jnp.int8),
+            "k_s": jnp.zeros((batch, length, kv), jnp.float32),
+            "v_q": jnp.zeros((batch, length, kv, dh), jnp.int8),
+            "v_s": jnp.zeros((batch, length, kv), jnp.float32),
+            "pos": jnp.full((length,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, length, kv, dh), dtype),
+        "v": jnp.zeros((batch, length, kv, dh), dtype),
+        "pos": jnp.full((length,), -1, jnp.int32),  # absolute position per slot
+    }
+
+
+def _quant_kv(x):
+    """(B, 1, KV, dh) -> (int8 codes, f32 scales (B, 1, KV))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    q = jnp.round(x.astype(jnp.float32) / jnp.maximum(scale[..., None], 1e-9))
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def attn_decode(
+    params, x, cache, pos, cfg: ModelConfig, layout: Layout, *,
+    window: int | None,
+):
+    """One-token cached attention. x (B, 1, D); pos () int32 current index.
+
+    Global layers: slot = pos (cache length == max seq).  Local layers:
+    slot = pos % window (ring buffer); the stored per-slot absolute
+    positions make the window mask exact across wrap-around.
+    """
+    b = x.shape[0]
+    kv_g, g, dh = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.broadcast_to(pos, (b, 1))
+    q, k_new, v_new = _qkv(params, x, positions, cfg)  # q (B,1,KV,G,dh)
+
+    quantized = "k_q" in cache
+    length = (cache["k_q"] if quantized else cache["k"]).shape[1]
+    slot = pos % length if window is not None else pos
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], pos[None].astype(jnp.int32), (slot,))
+    kv_spec = ("act_batch", "cache_seq", "kv_heads", "head_dim")
+    if quantized:
+        kq_new, ks_new = _quant_kv(k_new)
+        vq_new, vs_new = _quant_kv(v_new)
+        kq = jax.lax.dynamic_update_slice(cache["k_q"], kq_new, (0, slot, 0, 0))
+        ks = jax.lax.dynamic_update_slice(cache["k_s"], ks_new, (0, slot, 0))
+        vq = jax.lax.dynamic_update_slice(cache["v_q"], vq_new, (0, slot, 0, 0))
+        vs = jax.lax.dynamic_update_slice(cache["v_s"], vs_new, (0, slot, 0))
+        kq = lshard(kq, layout, kv_spec)
+        vq = lshard(vq, layout, kv_spec)
+        k = (kq.astype(x.dtype) * ks[..., None].astype(x.dtype))
+        v = (vq.astype(x.dtype) * vs[..., None].astype(x.dtype))
+        new_cache = {"k_q": kq, "k_s": ks, "v_q": vq, "v_s": vs, "pos": cpos}
+    else:
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+        k = lshard(k, layout, kv_spec)
+        v = lshard(v, layout, kv_spec)
+        new_cache = {"k": k, "v": v, "pos": cpos}
+
+    s = jnp.einsum("btkgd,bskd->bkgts", q, k, preferred_element_type=jnp.float32)
+    valid = (cpos >= 0) & (cpos <= pos)
+    if window is not None:
+        valid &= (pos - cpos) < window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)  # distributed LSE over the sharded axis
+    o = jnp.einsum("bkgts,bskd->btkgd", p.astype(x.dtype), v)
+    o = o.reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    out = _out_proj(params, o, cfg)
+    return out, new_cache

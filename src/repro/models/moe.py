@@ -1,0 +1,94 @@
+"""Mixture-of-Experts FFN with expert parallelism (dropped-token, TPU-style).
+
+Mesh-TF / MaxText design: per-sequence capacity, one-hot dispatch/combine
+einsums, experts sharded over the ``model`` axis (EP).  The dispatch
+einsum contracts the token axes (sharded batch x seq) against the expert
+axis (sharded model) — the SPMD partitioner lowers this to the expert
+all-to-all.  Top-k routing with capacity dropping; an auxiliary
+load-balancing loss (Switch-style) and router z-loss are returned to the
+trainer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import Layout, lshard
+from repro.models.layers import _act, init_linear, linear
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p, a = {}, {}
+    p["router"], a["router"] = init_linear(ks[0], d, e, ("embed",), ("experts",))
+    scale = 1.0 / jnp.sqrt(d)
+    p["w_gate"] = scale * jax.random.normal(ks[1], (e, d, ff), jnp.float32)
+    a["w_gate"] = ("experts", "embed", "ffn")
+    p["w_up"] = scale * jax.random.normal(ks[2], (e, d, ff), jnp.float32)
+    a["w_up"] = ("experts", "embed", "ffn")
+    p["w_down"] = (1.0 / jnp.sqrt(ff)) * jax.random.normal(ks[3], (e, ff, d), jnp.float32)
+    a["w_down"] = ("experts", "ffn", "embed")
+    if cfg.n_shared_experts:
+        from repro.models.layers import init_ffn
+
+        p["shared"], a["shared"] = init_ffn(ks[4], d, cfg.moe_d_ff * cfg.n_shared_experts)
+    return p, a
+
+
+def moe_ffn(params, x, cfg: ModelConfig, layout: Layout, *, group_by_batch: bool = False):
+    """x (B, T, D) -> (out (B, T, D), aux_losses dict).
+
+    Capacity groups: per sequence for train/prefill (T tokens/group); the
+    whole batch for decode (T == 1 -> group_by_batch=True).
+    """
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    if group_by_batch:
+        xg = x.reshape(1, b * t, d)
+    else:
+        xg = x
+    g, s, _ = xg.shape
+    cap = max(int(s * k * cfg.capacity_factor / e), 1)
+
+    logits = linear(xg, params["router"], dtype=jnp.float32)  # (G, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k gates; renormalized over the selected experts
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (G, S, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # expert one-hot (G, S, K, E) and per-expert positions via cumsum over S
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # (G, S, K, E)
+    flat = onehot.reshape(g, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat  # slots used before this (token, k)
+    pos = pos.reshape(g, s, k, e)
+    in_cap = (pos < cap) & (onehot > 0)
+    pos = jnp.where(in_cap, pos, 0).astype(jnp.int32)
+    cap_onehot = jax.nn.one_hot(pos, cap, dtype=x.dtype)  # (G, S, K, E, C)
+
+    dispatch = (cap_onehot * in_cap[..., None].astype(x.dtype)).sum(2)  # (G, S, E, C)
+    combine = (cap_onehot * (gate_vals[..., None] * in_cap.astype(jnp.float32))[..., None]
+               ).sum(2).astype(x.dtype)  # (G, S, E, C)
+
+    xe = jnp.einsum("gsd,gsec->gecd", xg, dispatch)  # expert inputs
+    xe = lshard(xe, layout, ("act_group", "experts", "moe_cap", "embed"))
+    h = _act(cfg.act)(
+        jnp.einsum("gecd,edf->gecf", xe, params["w_gate"].astype(x.dtype))
+    ) * jnp.einsum("gecd,edf->gecf", xe, params["w_up"].astype(x.dtype))
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(x.dtype))
+    ye = lshard(ye, layout, ("act_group", "experts", "moe_cap", "embed"))
+    out = jnp.einsum("gecd,gsec->gsd", ye, combine).reshape(b, t, d)
+
+    if cfg.n_shared_experts:
+        from repro.models.layers import ffn
+
+        out = out + ffn(x, params["shared"], cfg.act, layout)
+
+    # Switch load-balance loss + router z-loss
+    frac_tokens = jnp.mean(onehot.sum(2), axis=(0, 1))  # (E,) fraction routed
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * mean_prob) * cfg.router_aux_coef
+    zloss = 1e-4 * jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return out, {"moe_aux": aux, "moe_zloss": zloss}

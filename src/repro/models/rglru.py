@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block structure (arXiv:2402.19427): two branches from the residual input —
+a gate branch (linear -> GeLU) and a recurrent branch (linear -> temporal
+conv1d -> RG-LRU); their product is projected back to d_model.
+
+RG-LRU recurrence (elementwise over channels):
+    r_t = sigmoid(W_a xi_t)                       (recurrence gate)
+    i_t = sigmoid(W_x xi_t)                       (input gate)
+    log a_t = -c * softplus(Lambda) * r_t         (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * xi_t)
+
+Training uses ``jax.lax.associative_scan`` over time.  Because the
+recurrence is elementwise over channels, the layout *channel-shards* it
+("act_lru" -> model) and replicates time — sequence sharding cannot apply
+to a recurrence, and this keeps per-chip work exactly even (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import Layout, lshard
+from repro.models.layers import init_linear, linear
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["w_rec"], a["w_rec"] = init_linear(ks[0], d, w, ("embed",), ("lru",))
+    p["w_gate"], a["w_gate"] = init_linear(ks[1], d, w, ("embed",), ("lru",))
+    p["w_out"], a["w_out"] = init_linear(ks[2], w, d, ("lru",), ("embed",))
+    p["w_a"], a["w_a"] = init_linear(ks[3], w, w, ("lru",), ("lru",))
+    p["w_i"], a["w_i"] = init_linear(ks[4], w, w, ("lru",), ("lru",))
+    # Lambda init so a ~ U[0.9, 0.999]^(1/c) region (Griffin appendix)
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)
+    p["lam"] = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # inverse softplus
+    a["lam"] = ("lru",)
+    p["conv_w"] = 0.01 * jax.random.normal(ks[5], (cfg.conv_width, w), jnp.float32)
+    a["conv_w"] = ("conv", "lru")
+    p["conv_b"] = jnp.zeros((w,), jnp.float32)
+    a["conv_b"] = ("lru",)
+    return p, a
+
+
+def _conv1d(x, conv_w, conv_b, history=None):
+    """Causal temporal conv. x (B, T, W); history (B, cw-1, W) or None."""
+    cw = conv_w.shape[0]
+    if history is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = history.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * conv_w[i].astype(x.dtype) for i in range(cw)
+    )
+    return out + conv_b.astype(x.dtype), xp[:, -(cw - 1) :, :]
+
+
+def _gates(params, xi):
+    r = jax.nn.sigmoid(linear(xi, params["w_a"], dtype=jnp.float32))
+    i = jax.nn.sigmoid(linear(xi, params["w_i"], dtype=jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * i * xi.astype(jnp.float32)
+
+
+def rglru_train(params, x, cfg: ModelConfig, layout: Layout):
+    """x (B, T, D) -> (B, T, D). Channel-sharded associative scan over T."""
+    xi = linear(x, params["w_rec"])  # (B, T, W)
+    xi = lshard(xi, layout, ("act_batch", "act_full_seq", "act_lru"))
+    gate = jax.nn.gelu(linear(x, params["w_gate"]))
+    gate = lshard(gate, layout, ("act_batch", "act_full_seq", "act_lru"))
+    xi, _ = _conv1d(xi, params["conv_w"], params["conv_b"])
+    a, b = _gates(params, xi)  # (B, T, W) f32 each
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = (h.astype(x.dtype) * gate)
+    h = lshard(h, layout, ("act_batch", "act_full_seq", "act_lru"))
+    out = linear(h, params["w_out"])
+    return lshard(out, layout, ("act_batch", "act_seq", "embed"))
+
+
+def make_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_decode(params, x, state, cfg: ModelConfig, layout: Layout):
+    """One-token step. x (B, 1, D), state {h (B, W), conv (B, cw-1, W)}."""
+    xi = linear(x, params["w_rec"])
+    gate = jax.nn.gelu(linear(x, params["w_gate"]))
+    xi, conv_hist = _conv1d(xi, params["conv_w"], params["conv_b"], history=state["conv"])
+    a, b = _gates(params, xi)  # (B, 1, W)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    out = linear((h[:, None, :].astype(x.dtype) * gate), params["w_out"])
+    return out, {"h": h, "conv": conv_hist}

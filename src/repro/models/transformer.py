@@ -1,0 +1,409 @@
+"""Model assembly: pattern-unit scan, decode, loss.
+
+Layers are grouped into the config's repeating ``pattern_unit``; training
+and prefill ``lax.scan`` over the stacked units (small HLO, fast compiles,
+per-layer ZeRO gather inside the loop) with gradient rematerialization,
+and any leftover layers (n_layers % unit) run unrolled.  Decoding unrolls
+all layers so per-layer caches can be heterogeneous (ring buffers for
+sliding-window attention, recurrent states for RG-LRU/xLSTM, full-length
+KV for global attention).
+
+The cross-entropy never materializes full fp32 logits: it streams over
+vocab chunks with a running log-sum-exp (``chunked_xent``), which bounds
+loss memory for 256k-vocab models at any batch x seq.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import Layout, lshard
+from repro.models import attention as attn
+from repro.models import moe as moem
+from repro.models import rglru as rglrum
+from repro.models import xlstm as xlstmm
+from repro.models.layers import ffn, init_ffn, init_norm, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def init_layer(key, kind: str, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    if kind in ("attn", "moe"):
+        p["norm1"], a["norm1"] = init_norm(cfg.d_model)
+        p["attn"], a["attn"] = attn.init_attention(ks[0], cfg)
+        p["norm2"], a["norm2"] = init_norm(cfg.d_model)
+        if kind == "moe":
+            p["moe"], a["moe"] = moem.init_moe(ks[1], cfg)
+        elif cfg.d_ff:
+            p["ffn"], a["ffn"] = init_ffn(ks[1], cfg.d_model, cfg.d_ff)
+    elif kind == "rglru":
+        p["norm1"], a["norm1"] = init_norm(cfg.d_model)
+        p["rglru"], a["rglru"] = rglrum.init_rglru(ks[0], cfg)
+        p["norm2"], a["norm2"] = init_norm(cfg.d_model)
+        p["ffn"], a["ffn"] = init_ffn(ks[1], cfg.d_model, cfg.d_ff)
+    elif kind == "mlstm":
+        p["norm1"], a["norm1"] = init_norm(cfg.d_model)
+        p["mlstm"], a["mlstm"] = xlstmm.init_mlstm(ks[0], cfg)
+    elif kind == "slstm":
+        p["norm1"], a["norm1"] = init_norm(cfg.d_model)
+        p["slstm"], a["slstm"] = xlstmm.init_slstm(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    return p, a
+
+
+def apply_layer_train(
+    params, x, positions, kind: str, window: int | None, cfg: ModelConfig,
+    layout: Layout, *, collect_kv: bool,
+):
+    """Returns (x, aux_scalar, kv_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    kv_out = None
+    if kind in ("attn", "moe"):
+        h = rms_norm(x, params["norm1"], cfg.norm_eps)
+        h, kv = attn.attn_train(params["attn"], h, positions, cfg, layout, window=window)
+        if collect_kv:
+            kv_out = kv
+        x = x + h
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            h2, auxd = moem.moe_ffn(params["moe"], h2, cfg, layout)
+            aux = aux + auxd["moe_aux"] + auxd["moe_zloss"]
+        elif cfg.d_ff:
+            h2 = ffn(h2, params["ffn"], cfg.act, layout)
+        else:
+            h2 = jnp.zeros_like(x)
+        x = x + h2
+    elif kind == "rglru":
+        h = rms_norm(x, params["norm1"], cfg.norm_eps)
+        x = x + rglrum.rglru_train(params["rglru"], h, cfg, layout)
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        x = x + ffn(h2, params["ffn"], cfg.act, layout)
+    elif kind == "mlstm":
+        h = rms_norm(x, params["norm1"], cfg.norm_eps)
+        x = x + xlstmm.mlstm_train(params["mlstm"], h, cfg, layout)
+    elif kind == "slstm":
+        h = rms_norm(x, params["norm1"], cfg.norm_eps)
+        x = x + xlstmm.slstm_train(params["slstm"], h, cfg, layout)
+    x = lshard(x, layout, ("act_batch", "act_seq", "embed"))
+    return x, aux, kv_out
+
+
+def apply_layer_decode(params, x, cache, pos, kind, window, cfg, layout):
+    """Returns (x, new_cache)."""
+    if kind in ("attn", "moe"):
+        h = rms_norm(x, params["norm1"], cfg.norm_eps)
+        h, new_cache = attn.attn_decode(
+            params["attn"], h, cache, pos, cfg, layout, window=window
+        )
+        x = x + h
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            h2, _ = moem.moe_ffn(params["moe"], h2, cfg, layout, group_by_batch=True)
+        elif cfg.d_ff:
+            h2 = ffn(h2, params["ffn"], cfg.act, layout)
+        else:
+            h2 = jnp.zeros_like(x)
+        x = x + h2
+    elif kind == "rglru":
+        h = rms_norm(x, params["norm1"], cfg.norm_eps)
+        h, new_cache = rglrum.rglru_decode(params["rglru"], h, cache, cfg, layout)
+        x = x + h
+        h2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+        x = x + ffn(h2, params["ffn"], cfg.act, layout)
+    elif kind == "mlstm":
+        h = rms_norm(x, params["norm1"], cfg.norm_eps)
+        h, new_cache = xlstmm.mlstm_decode(params["mlstm"], h, cache, cfg, layout)
+        x = x + h
+    elif kind == "slstm":
+        h = rms_norm(x, params["norm1"], cfg.norm_eps)
+        h, new_cache = xlstmm.slstm_decode(params["slstm"], h, cache, cfg, layout)
+        x = x + h
+    else:
+        raise ValueError(kind)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# whole-model init
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg: ModelConfig):
+    """Returns (params, axes). Layer stacks: params['units'][pos] has a
+    leading n_units axis; leftovers are individual layers."""
+    n_unit = len(cfg.pattern_unit)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+
+    # N(0, 1/d): the input path re-scales by sqrt(d) (gemma convention) and a
+    # tied unembedding then yields unit-variance logits.
+    params["embed"] = jax.random.normal(
+        keys[-1], (cfg.vocab_size, cfg.d_model), jnp.float32
+    ) / np.sqrt(cfg.d_model)
+    axes["embed"] = ("vocab", "embed")
+    params["final_norm"], axes["final_norm"] = init_norm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["unembed"] = (
+            jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab_size), jnp.float32)
+            / np.sqrt(cfg.d_model)
+        )
+        axes["unembed"] = ("embed", "vocab")
+
+    units_p, units_a = {}, {}
+    if cfg.n_units:
+        for pos, kind in enumerate(cfg.pattern_unit):
+            unit_keys = jnp.stack(
+                [keys[u * n_unit + pos] for u in range(cfg.n_units)]
+            )
+            stacked_p, one_a = jax.vmap(
+                lambda k, _kind=kind: init_layer(k, _kind, cfg)[0]
+            )(unit_keys), init_layer(keys[pos], kind, cfg)[1]
+            units_p[str(pos)] = stacked_p
+            units_a[str(pos)] = jax.tree.map(
+                lambda t: ("layers",) + t, one_a,
+                is_leaf=lambda t: isinstance(t, tuple) and all(
+                    isinstance(x, (str, type(None))) for x in t
+                ),
+            )
+    params["units"] = units_p
+    axes["units"] = units_a
+
+    left_p, left_a = [], []
+    kinds = cfg.layer_kinds
+    for i in range(cfg.n_units * n_unit, cfg.n_layers):
+        p, a = init_layer(keys[i], kinds[i], cfg)
+        left_p.append(p)
+        left_a.append(a)
+    params["leftover"] = left_p
+    axes["leftover"] = left_a
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ModelConfig, layout: Layout, batch: dict, dtype):
+    """Token embedding (+ stub frontend prefix). Returns (x, positions)."""
+    tokens = batch["tokens"]  # (B, T)
+    x = params["embed"].astype(dtype)[tokens] * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    if cfg.frontend == "vision_stub" and "prefix_embeds" in batch:
+        x = jnp.concatenate([batch["prefix_embeds"].astype(dtype), x], axis=1)
+    b, t = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    x = lshard(x, layout, ("act_batch", "act_seq", "embed"))
+    return x, positions
+
+
+def forward_train(params, cfg: ModelConfig, layout: Layout, batch: dict, *,
+                  collect_kv: bool = False, remat: bool = True):
+    """Returns (hidden (B,T,D), aux scalar, caches list|None)."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x, positions = _embed_inputs(params, cfg, layout, batch, dtype)
+    unit = cfg.pattern_unit
+    windows = cfg.attn_windows
+    caches = []
+
+    import os as _os
+
+    cast_early = _os.environ.get("REPRO_CAST_EARLY", "1") == "1"
+    if cast_early and dtype != jnp.float32:
+        # Cast fp32 masters to bf16 *outside* the scan, on the stacked
+        # (ZeRO-sharded) arrays: the convert is elementwise and
+        # sharding-preserving, so the per-layer all-gather the scan body
+        # triggers moves bf16 (half the bytes), and the scan transpose
+        # reduce-scatters bf16 gradients.  (Casting inside the body CSEs
+        # with linear()'s lazy cast and changes nothing — measured, §Perf.)
+        params = dict(params)
+        params["units"] = jax.tree.map(
+            lambda a: a.astype(dtype) if a.dtype == jnp.float32 else a,
+            params["units"],
+        )
+        params["leftover"] = jax.tree.map(
+            lambda a: a.astype(dtype) if a.dtype == jnp.float32 else a,
+            params["leftover"],
+        )
+
+    def unit_body(x, unit_params):
+        aux = jnp.zeros((), jnp.float32)
+        kvs = []
+        for pos, kind in enumerate(unit):
+            x, a, kv = apply_layer_train(
+                unit_params[str(pos)], x, positions, kind,
+                windows[pos % len(windows)], cfg, layout,
+                collect_kv=collect_kv,
+            )
+            aux = aux + a
+            if collect_kv and kv is not None:
+                kvs.append(kv)
+        return x, (aux, tuple(kvs))
+
+    if cfg.n_units:
+        body = unit_body
+        if remat:
+            # REPRO_REMAT=dots keeps matmul outputs (no recompute of dots in
+            # the backward pass: ~8ND -> ~6ND compute) at the cost of
+            # activation memory; "full" recomputes everything.
+            if _os.environ.get("REPRO_REMAT", "full") == "dots":
+                policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                body = jax.checkpoint(unit_body, prevent_cse=False, policy=policy)
+            else:
+                body = jax.checkpoint(unit_body, prevent_cse=False)
+        x, (auxs, kv_stacks) = jax.lax.scan(body, x, params["units"])
+        aux_total = jnp.sum(auxs)
+        if collect_kv:
+            caches.append(kv_stacks)
+    else:
+        aux_total = jnp.zeros((), jnp.float32)
+
+    kinds = cfg.layer_kinds
+    all_windows = cfg.layer_windows
+    for i, lp in enumerate(params["leftover"]):
+        li = cfg.n_units * len(unit) + i
+        x, a, kv = apply_layer_train(
+            lp, x, positions, kinds[li], all_windows[li], cfg, layout,
+            collect_kv=collect_kv,
+        )
+        aux_total = aux_total + a
+        if collect_kv and kv is not None:
+            caches.append(kv)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux_total, (caches if collect_kv else None)
+
+
+def unembed_matrix(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T  # (D, V)
+    return params["unembed"]
+
+
+def chunked_xent(hidden, w_unembed, targets, *, chunk_v: int = 32_768,
+                 ignore_id: int = -1):
+    """Streaming cross-entropy over vocab chunks (no full fp32 logits).
+
+    hidden (B, T, D), w_unembed (D, V), targets (B, T) -> (loss_sum, n_valid).
+    """
+    b, t, d = hidden.shape
+    v = w_unembed.shape[1]
+    chunk_v = min(chunk_v, v)
+    n_chunks = -(-v // chunk_v)
+    pad_v = n_chunks * chunk_v - v
+    wt = w_unembed
+    if pad_v:
+        wt = jnp.pad(wt, ((0, 0), (0, pad_v)))
+    wt = wt.reshape(d, n_chunks, chunk_v).transpose(1, 0, 2)  # (Nc, D, Cv)
+
+    def step(carry, inputs):
+        m, s, tgt = carry  # running max (B,T), sumexp (B,T), target logit (B,T)
+        wc, base = inputs
+        logits = jax.lax.dot_general(
+            hidden, wc.astype(hidden.dtype), (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (B, T, Cv) f32
+        if pad_v:
+            in_range = (base + jnp.arange(chunk_v)) < v
+            logits = jnp.where(in_range[None, None, :], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        s = s * jnp.exp(m - m_new) + jnp.exp(logits - m_new[..., None]).sum(-1)
+        local = targets - base
+        hit = (local >= 0) & (local < chunk_v)
+        got = jnp.take_along_axis(
+            logits, jnp.clip(local, 0, chunk_v - 1)[..., None], axis=-1
+        )[..., 0]
+        tgt = jnp.where(hit, got, tgt)
+        return (m_new, s, tgt), None
+
+    m0 = jnp.full((b, t), -1e30, jnp.float32)
+    s0 = jnp.zeros((b, t), jnp.float32)
+    tgt0 = jnp.zeros((b, t), jnp.float32)
+    bases = jnp.arange(n_chunks) * chunk_v
+    (m, s, tgt), _ = jax.lax.scan(step, (m0, s0, tgt0), (wt, bases))
+    logz = m + jnp.log(jnp.maximum(s, 1e-30))
+    nll = logz - tgt  # (B, T)
+    valid = targets != ignore_id
+    loss_sum = jnp.sum(jnp.where(valid, nll, 0.0))
+    return loss_sum, jnp.sum(valid)
+
+
+def lm_loss(params, cfg: ModelConfig, layout: Layout, batch: dict):
+    """Mean next-token NLL + MoE aux. batch: tokens (B,T), targets (B,T)."""
+    hidden, aux, _ = forward_train(params, cfg, layout, batch)
+    targets = batch["targets"]
+    if cfg.frontend == "vision_stub" and "prefix_embeds" in batch:
+        # no loss on the visual prefix
+        pad = jnp.full(batch["prefix_embeds"].shape[:2], -1, targets.dtype)
+        targets = jnp.concatenate([pad, targets], axis=1)
+    loss_sum, n_valid = chunked_xent(hidden, unembed_matrix(params, cfg), targets)
+    return loss_sum / jnp.maximum(n_valid, 1) + aux
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+def layer_params_for(params, cfg: ModelConfig, i: int):
+    """Slice layer i's params out of the stacked/leftover structure."""
+    n_unit = len(cfg.pattern_unit)
+    if i < cfg.n_units * n_unit:
+        u, pos = divmod(i, n_unit)
+        return jax.tree.map(lambda a: a[u], params["units"][str(pos)])
+    return params["leftover"][i - cfg.n_units * n_unit]
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Per-layer decode caches (heterogeneous)."""
+    caches = []
+    for kind, window in zip(cfg.layer_kinds, cfg.layer_windows):
+        if kind in ("attn", "moe"):
+            length = min(window, max_len) if window else max_len
+            caches.append(attn.make_cache(cfg, batch, length, dtype))
+        elif kind == "rglru":
+            caches.append(rglrum.make_rglru_state(cfg, batch, dtype))
+        elif kind == "mlstm":
+            caches.append(xlstmm.make_mlstm_state(cfg, batch, dtype))
+        elif kind == "slstm":
+            caches.append(xlstmm.make_slstm_state(cfg, batch))
+    return caches
+
+
+def forward_decode(params, cfg: ModelConfig, layout: Layout, tokens, caches, pos):
+    """One decode step. tokens (B, 1); pos () int32. Returns (logits, caches)."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = params["embed"].astype(dtype)[tokens] * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    x = lshard(x, layout, ("act_batch", "act_seq", "embed"))
+    new_caches = []
+    for i in range(cfg.n_layers):
+        lp = layer_params_for(params, cfg, i)
+        x, nc = apply_layer_decode(
+            lp, x, caches[i], pos, cfg.layer_kinds[i], cfg.layer_windows[i], cfg, layout
+        )
+        new_caches.append(nc)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jax.lax.dot_general(
+        x, unembed_matrix(params, cfg).astype(dtype), (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return logits, new_caches
+
+
+def forward_prefill(params, cfg: ModelConfig, layout: Layout, batch: dict):
+    """Full-sequence forward collecting KV; returns (last_logits, kv_caches)."""
+    hidden, _, caches = forward_train(params, cfg, layout, batch, collect_kv=True)
+    last = hidden[:, -1:, :]
+    dtype = hidden.dtype
+    logits = jax.lax.dot_general(
+        last, unembed_matrix(params, cfg).astype(dtype), (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return logits, caches

@@ -1,0 +1,240 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with recurrent gate coupling) — arXiv:2405.04517.
+
+mLSTM — training/prefill use the *stabilized parallel form* (exact,
+attention-like quadratic with a gate-derived decay matrix); decoding uses
+the recurrent matrix-memory update:
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ,  n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))       (stabilized)
+
+sLSTM — strictly sequential (h_{t-1} enters the gates through per-head
+recurrent matrices), so training runs a ``lax.scan`` over time; the
+training layout for this arch is pure data parallelism (DESIGN.md §5).
+
+Both blocks carry their own projections (config d_ff = 0): mLSTM up-projects
+x2 (conv -> q,k from the conv path, v from the pre-conv path), sLSTM is
+followed by a 4/3-factor GeGLU FFN, per the paper's block diagrams.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import Layout, lshard
+from repro.models.layers import init_linear, init_norm, linear, rms_norm
+
+NEG_INF = jnp.float32(-1e30)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    inner = 2 * d
+    h, dh = cfg.n_heads, cfg.head_dim  # qk head dim from config
+    dv = inner // h  # value head dim
+    ks = jax.random.split(key, 9)
+    p, a = {}, {}
+    p["w_up"], a["w_up"] = init_linear(ks[0], d, inner, ("embed",), ("inner",))
+    p["w_gate"], a["w_gate"] = init_linear(ks[1], d, inner, ("embed",), ("inner",))
+    p["conv_w"] = 0.01 * jax.random.normal(ks[2], (cfg.conv_width, inner), jnp.float32)
+    a["conv_w"] = ("conv", "inner")
+    p["conv_b"] = jnp.zeros((inner,), jnp.float32)
+    a["conv_b"] = ("inner",)
+    p["wq"], a["wq"] = init_linear(ks[3], inner, (h, dh), ("inner",), ("heads", "head_dim"))
+    p["wk"], a["wk"] = init_linear(ks[4], inner, (h, dh), ("inner",), ("heads", "head_dim"))
+    p["w_i"], a["w_i"] = init_linear(ks[5], inner, h, ("inner",), ("heads",))
+    p["w_f"], a["w_f"] = init_linear(ks[6], inner, h, ("inner",), ("heads",))
+    # forget-gate bias init: strongly positive so f ~ 1 early
+    p["w_f"]["b"] = jnp.linspace(3.0, 6.0, h)
+    a["w_f"]["b"] = ("heads",)
+    p["norm"], a["norm"] = init_norm(inner)
+    p["w_out"], a["w_out"] = init_linear(ks[7], inner, d, ("inner",), ("embed",))
+    return p, a
+
+
+def _mlstm_qkvif(params, x, cfg: ModelConfig):
+    """x (B,T,D) -> q,k (B,T,H,dh), v (B,T,H,dv), log_i, log_f (B,T,H) f32."""
+    inner = 2 * cfg.d_model
+    h = cfg.n_heads
+    up = linear(x, params["w_up"])  # (B, T, inner) — v path (pre-conv)
+    conv, _ = _causal_conv(up, params["conv_w"], params["conv_b"])
+    conv = jax.nn.silu(conv)
+    q = linear(conv, params["wq"]) * (cfg.head_dim**-0.5)
+    k = linear(conv, params["wk"])
+    b, t = x.shape[:2]
+    v = up.reshape(b, t, h, inner // h)
+    log_i = linear(conv, params["w_i"], dtype=jnp.float32)
+    log_f = jax.nn.log_sigmoid(linear(conv, params["w_f"], dtype=jnp.float32))
+    return q, k, v, log_i, log_f, up
+
+
+def _causal_conv(x, conv_w, conv_b, history=None):
+    cw = conv_w.shape[0]
+    if history is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = history.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * conv_w[i].astype(x.dtype) for i in range(cw))
+    return out + conv_b.astype(x.dtype), xp[:, -(cw - 1) :, :]
+
+
+def mlstm_train(params, x, cfg: ModelConfig, layout: Layout):
+    """Stabilized parallel form. x (B, T, D) -> (B, T, D)."""
+    b, t, d = x.shape
+    q, k, v, log_i, log_f, up = _mlstm_qkvif(params, x, cfg)
+    # decay matrix: D~[s, u] = cum_f[s] - cum_f[u] + log_i[u] for u <= s
+    cum_f = jnp.cumsum(log_f, axis=1)  # (B, T, H)
+    dmat = (
+        cum_f[:, :, None, :] - cum_f[:, None, :, :] + log_i[:, None, :, :]
+    )  # (B, Ts, Tu, H)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    dmat = jnp.where(causal[None, :, :, None], dmat, NEG_INF)
+    m = jnp.max(dmat, axis=2, keepdims=True)  # (B, T, 1, H) row stabilizer
+    dexp = jnp.exp(dmat - m)
+    scores = jnp.einsum("bshd,buhd->bsuh", q.astype(jnp.float32), k.astype(jnp.float32))
+    sd = scores * dexp
+    norm = jnp.maximum(jnp.abs(sd.sum(axis=2)), jnp.exp(-m[:, :, 0, :]))  # (B, T, H)
+    hidden = jnp.einsum("bsuh,buhv->bshv", sd, v.astype(jnp.float32)) / norm[..., None]
+    hidden = hidden.reshape(b, t, 2 * d).astype(x.dtype)
+    hidden = rms_norm(hidden, params["norm"], cfg.norm_eps)
+    hidden = hidden * jax.nn.silu(linear(x, params["w_gate"]))
+    return linear(hidden, params["w_out"])
+
+
+def make_mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    h, dh = cfg.n_heads, cfg.head_dim
+    dv = 2 * cfg.d_model // h
+    return {
+        "c": jnp.zeros((batch, h, dh, dv), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, 2 * cfg.d_model), dtype),
+    }
+
+
+def mlstm_decode(params, x, state, cfg: ModelConfig, layout: Layout):
+    """One-token recurrent step."""
+    b = x.shape[0]
+    inner = 2 * cfg.d_model
+    h = cfg.n_heads
+    up = linear(x, params["w_up"])
+    conv, conv_hist = _causal_conv(up, params["conv_w"], params["conv_b"], state["conv"])
+    conv = jax.nn.silu(conv)
+    q = (linear(conv, params["wq"]) * (cfg.head_dim**-0.5))[:, 0]  # (B, H, dh)
+    k = linear(conv, params["wk"])[:, 0]
+    v = up.reshape(b, 1, h, inner // h)[:, 0]  # (B, H, dv)
+    log_i = linear(conv, params["w_i"], dtype=jnp.float32)[:, 0]  # (B, H)
+    log_f = jax.nn.log_sigmoid(linear(conv, params["w_f"], dtype=jnp.float32))[:, 0]
+
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    f_s = jnp.exp(log_f + state["m"] - m_new)  # (B, H)
+    i_s = jnp.exp(log_i - m_new)
+    kf, vf, qf = k.astype(jnp.float32), v.astype(jnp.float32), q.astype(jnp.float32)
+    c = f_s[..., None, None] * state["c"] + i_s[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :]
+    )  # (B, H, dh, dv)
+    n = f_s[..., None] * state["n"] + i_s[..., None] * kf
+    num = jnp.einsum("bhd,bhdv->bhv", qf, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m_new))
+    hidden = (num / den[..., None]).reshape(b, 1, inner).astype(x.dtype)
+    hidden = rms_norm(hidden, params["norm"], cfg.norm_eps)
+    hidden = hidden * jax.nn.silu(linear(x, params["w_gate"]))
+    out = linear(hidden, params["w_out"])
+    return out, {"c": c, "n": n, "m": m_new, "conv": conv_hist}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 11)
+    p, a = {}, {}
+    for idx, gate in enumerate(("i", "f", "z", "o")):
+        p[f"w_{gate}"], a[f"w_{gate}"] = init_linear(
+            ks[idx], d, (h, dh), ("embed",), ("heads", "head_dim"), bias=True
+        )
+        p[f"r_{gate}"] = (1.0 / jnp.sqrt(dh)) * jax.random.normal(
+            ks[4 + idx], (h, dh, dh), jnp.float32
+        )
+        a[f"r_{gate}"] = ("heads", "head_dim", "head_dim")
+    p["w_f"]["b"] = jnp.full((h, dh), 3.0)  # forget bias
+    p["norm"], a["norm"] = init_norm(d)
+    # post-block GeGLU FFN, projection factor 4/3 (paper block diagram)
+    f = int(round(4 * d * 4 / 3 / 64)) * 64
+    from repro.models.layers import init_ffn
+
+    p["ffn"], a["ffn"] = init_ffn(ks[9], d, f)
+    return p, a
+
+
+def _slstm_step(params, carry, gates_t):
+    """carry: (c, n, h, m) each (B, H, dh); gates_t: preactivations (B,H,dh,4)."""
+    c, n, h_prev, m = carry
+    rec = lambda g: jnp.einsum("bhd,hde->bhe", h_prev, params[f"r_{g}"].astype(h_prev.dtype))
+    zi = gates_t[..., 0] + rec("i")
+    zf = gates_t[..., 1] + rec("f")
+    zz = gates_t[..., 2] + rec("z")
+    zo = gates_t[..., 3] + rec("o")
+    # stabilized exponential gating
+    log_f = jax.nn.log_sigmoid(zf)
+    m_new = jnp.maximum(log_f + m, zi)
+    i_s = jnp.exp(zi - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(zz)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_train(params, x, cfg: ModelConfig, layout: Layout):
+    """Sequential scan over T. x (B, T, D) -> (B, T, D)."""
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, d // cfg.n_heads
+    gates = jnp.stack(
+        [linear(x, params[f"w_{g}"], dtype=jnp.float32) for g in ("i", "f", "z", "o")],
+        axis=-1,
+    )  # (B, T, H, dh, 4)
+    c0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h, dh), -1e30, jnp.float32)
+    (c, n, hh, m), hs = jax.lax.scan(
+        lambda carry, g: _slstm_step(params, carry, g),
+        (c0, c0, c0, m0),
+        gates.transpose(1, 0, 2, 3, 4),
+    )
+    out = hs.transpose(1, 0, 2, 3).reshape(b, t, d).astype(x.dtype)
+    out = rms_norm(out, params["norm"], cfg.norm_eps)
+    from repro.models.layers import ffn
+
+    return out + ffn(out, params["ffn"], "gelu", layout)
+
+
+def make_slstm_state(cfg: ModelConfig, batch: int):
+    h, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, h, dh), -1e30, jnp.float32)}
+
+
+def slstm_decode(params, x, state, cfg: ModelConfig, layout: Layout):
+    b, _, d = x.shape
+    gates = jnp.stack(
+        [linear(x, params[f"w_{g}"], dtype=jnp.float32)[:, 0] for g in ("i", "f", "z", "o")],
+        axis=-1,
+    )  # (B, H, dh, 4)
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    (c, n, hh, m), h_new = _slstm_step(params, carry, gates)
+    out = h_new.reshape(b, 1, d).astype(x.dtype)
+    out = rms_norm(out, params["norm"], cfg.norm_eps)
+    from repro.models.layers import ffn
+
+    out = out + ffn(out, params["ffn"], "gelu", layout)
+    return out, {"c": c, "n": n, "h": hh, "m": m}

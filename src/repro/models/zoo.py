@@ -1,0 +1,97 @@
+"""Model zoo: public entry points per architecture.
+
+``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins for every
+model input of a (arch x shape) cell — weak-type-correct, shardable, no
+device allocation — exactly what the multi-pod dry-run lowers against.
+Stub frontends ([audio]/[vlm] per the brief) surface here: internvl2's
+patch embeddings arrive as a precomputed ``prefix_embeds`` input.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tfm
+
+
+def init_params(key, cfg: ModelConfig):
+    return tfm.init_model(key, cfg)
+
+
+def abstract_params(cfg: ModelConfig, key=None):
+    """Param ShapeDtypeStructs via eval_shape (no allocation)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(lambda k: tfm.init_model(k, cfg)[0], key)
+    _, axes = jax.eval_shape(lambda k: tfm.init_model(k, cfg), key), None
+    # axes trees contain static tuples; rebuild concretely (cheap)
+    return shapes
+
+
+def param_axes(cfg: ModelConfig):
+    """The logical-axis tree (static; built without materializing params)."""
+    key = jax.random.PRNGKey(0)
+    # init under eval_shape so no arrays are allocated; axes are static.
+    axes_box = {}
+
+    def grab(k):
+        p, a = tfm.init_model(k, cfg)
+        axes_box["axes"] = a
+        return p
+
+    jax.eval_shape(grab, key)
+    return axes_box["axes"]
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the cell's inputs (train batch / decode state)."""
+    b, t = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, t), i32),
+            "targets": jax.ShapeDtypeStruct((b, t), i32),
+        }
+        if cfg.frontend == "vision_stub":
+            # keep total length = t: trim tokens to make room for the prefix
+            p = cfg.n_prefix_embeds
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((b, t - p), i32),
+                "targets": jax.ShapeDtypeStruct((b, t - p), i32),
+                "prefix_embeds": jax.ShapeDtypeStruct((b, p, cfg.d_model), dtype),
+            }
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, t), i32)}
+        if cfg.frontend == "vision_stub":
+            p = cfg.n_prefix_embeds
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((b, t - p), i32),
+                "prefix_embeds": jax.ShapeDtypeStruct((b, p, cfg.d_model), dtype),
+            }
+        return batch
+    # decode: one new token + caches at length t
+    caches = jax.eval_shape(
+        lambda: tfm.init_caches(cfg, b, t, dtype)
+    )
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "caches": caches,
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def make_concrete_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0):
+    """Small concrete batch for smoke tests (CPU)."""
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, shape)
+
+    def concretize(s):
+        if s.dtype == jnp.int32:
+            if s.shape == ():
+                return jnp.int32(0)
+            return jnp.asarray(rng.integers(0, cfg.vocab_size, size=s.shape), jnp.int32)
+        return jnp.asarray(rng.normal(size=s.shape) * 0.02, s.dtype)
+
+    return jax.tree.map(concretize, specs)

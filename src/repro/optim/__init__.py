@@ -1,0 +1,17 @@
+from repro.optim.adamw import (
+    OptConfig,
+    opt_init,
+    opt_update,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.schedules import warmup_cosine
+
+__all__ = [
+    "OptConfig",
+    "opt_init",
+    "opt_update",
+    "clip_by_global_norm",
+    "global_norm",
+    "warmup_cosine",
+]

@@ -1,0 +1,217 @@
+"""Optimizers: AdamW (fp32 state), Adafactor (factored second moment, for
+400B-scale state on 16 GB chips), and blockwise-8-bit AdamW (Dettmers-style
+quantized moments — a distributed-training memory trick kept as an option).
+
+All are pure-pytree functional optimizers: ``init(params) -> state``,
+``update(grads, state, params, lr) -> (new_params, new_state)``.
+Optimizer state inherits the ZeRO storage sharding of its parameter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"  # adamw | adafactor | adamw8bit
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_update(grads, state: AdamWState, params, lr, cfg: OptConfig):
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        new_p = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p)
+        return new_p, m, v
+
+    flat = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_p = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern) — factored second moments, no first moment
+# ---------------------------------------------------------------------------
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any  # row stats (or full v for <2D leaves)
+    vc: Any  # col stats (or None sentinel zeros)
+
+
+def _factored(p):
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    def vr_of(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros_like(p, dtype=jnp.float32)
+
+    def vc_of(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree.map(vr_of, params),
+        vc=jax.tree.map(vc_of, params),
+    )
+
+
+def adafactor_update(grads, state: AdafactorState, params, lr, cfg: OptConfig):
+    step = state.step + 1
+    beta2 = 1.0 - step.astype(jnp.float32) ** -0.8  # schedule from the paper
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if _factored(p):
+            vr = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+            denom = (
+                vr[..., None] / jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30)[..., None]
+            ) * vc[..., None, :]
+            u = g / jnp.sqrt(denom + cfg.eps)
+        else:
+            vr = beta2 * vr + (1 - beta2) * g2
+            u = g / jnp.sqrt(vr + cfg.eps)
+            vc = vc
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        new_p = p - lr * (u + cfg.weight_decay * p)
+        return new_p, vr, vc
+
+    flat = jax.tree.map(upd, grads, state.vr, state.vc, params)
+    pick = lambda i: jax.tree.map(lambda t: t[i], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), AdafactorState(step=step, vr=pick(1), vc=pick(2))
+
+
+# ---------------------------------------------------------------------------
+# Blockwise 8-bit AdamW (quantized moments + fp32 per-block scales)
+# ---------------------------------------------------------------------------
+
+_BLOCK = 256
+
+
+class Adam8State(NamedTuple):
+    step: jax.Array
+    m_q: Any  # int8 blocks
+    m_s: Any  # fp32 scales
+    v_q: Any
+    v_s: Any
+
+
+def _quant(x):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale[:, None], 1e-12)).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def adamw8bit_init(params) -> Adam8State:
+    qz = jax.tree.map(lambda p: _quant(jnp.zeros_like(p, jnp.float32))[0], params)
+    sz = jax.tree.map(lambda p: _quant(jnp.zeros_like(p, jnp.float32))[1], params)
+    return Adam8State(
+        step=jnp.zeros((), jnp.int32),
+        m_q=qz, m_s=sz,
+        v_q=jax.tree.map(jnp.copy, qz), v_s=jax.tree.map(jnp.copy, sz),
+    )
+
+
+def adamw8bit_update(grads, state: Adam8State, params, lr, cfg: OptConfig):
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, mq, ms, vq, vs, p):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * _dequant(mq, ms, p.shape) + (1 - cfg.b1) * g
+        v = cfg.b2 * _dequant(vq, vs, p.shape) + (1 - cfg.b2) * g * g
+        new_p = p - lr * ((m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps) + cfg.weight_decay * p)
+        mq, ms = _quant(m)
+        vq, vs = _quant(v)
+        return new_p, mq, ms, vq, vs
+
+    flat = jax.tree.map(upd, grads, state.m_q, state.m_s, state.v_q, state.v_s, params)
+    pick = lambda i: jax.tree.map(lambda t: t[i], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), Adam8State(step=step, m_q=pick(1), m_s=pick(2), v_q=pick(3), v_s=pick(4))
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def opt_init(params, cfg: OptConfig):
+    return {
+        "adamw": adamw_init,
+        "adafactor": adafactor_init,
+        "adamw8bit": adamw8bit_init,
+    }[cfg.name](params)
+
+
+def opt_update(grads, state, params, lr, cfg: OptConfig):
+    return {
+        "adamw": adamw_update,
+        "adafactor": adafactor_update,
+        "adamw8bit": adamw8bit_update,
+    }[cfg.name](grads, state, params, lr, cfg)

@@ -1,0 +1,4 @@
+from repro.serve.decode import make_serve_step, cache_pspecs
+from repro.serve.prefill import make_prefill_step
+
+__all__ = ["make_serve_step", "make_prefill_step", "cache_pspecs"]

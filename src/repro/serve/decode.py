@@ -1,0 +1,72 @@
+"""Serving decode step: one new token against per-layer caches.
+
+KV caches are sharded over *sequence* on the ``model`` axis (flash-decode);
+recurrent states shard over batch.  Cache shardings must round-trip
+(out == in) so the serving loop can feed caches back without resharding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import Layout
+from repro.models.transformer import forward_decode
+
+
+def make_serve_step(cfg: ModelConfig, layout: Layout, *, greedy: bool = True):
+    def serve_step(params, caches, tokens, pos):
+        logits, new_caches = forward_decode(params, cfg, layout, tokens, caches, pos)
+        if greedy:
+            next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        else:
+            next_tok = tokens  # caller samples from logits
+        return {"logits": logits, "next_tokens": next_tok, "caches": new_caches}
+
+    return serve_step
+
+
+def _axes_of(layout: Layout, *names):
+    return P(*[layout.act_axes(n) for n in names])
+
+
+def cache_pspecs(cfg: ModelConfig, layout: Layout):
+    """PartitionSpec tree matching init_caches structure."""
+    from repro.models.attention import kv_cache_quantized
+
+    specs = []
+    for kind in cfg.layer_kinds:
+        if kind in ("attn", "moe"):
+            if kv_cache_quantized():
+                specs.append({
+                    "k_q": _axes_of(layout, "act_batch", "cache_seq", "kv_heads",
+                                    "head_dim"),
+                    "k_s": _axes_of(layout, "act_batch", "cache_seq", "kv_heads"),
+                    "v_q": _axes_of(layout, "act_batch", "cache_seq", "kv_heads",
+                                    "head_dim"),
+                    "v_s": _axes_of(layout, "act_batch", "cache_seq", "kv_heads"),
+                    "pos": P(layout.act_axes("cache_seq")),
+                })
+                continue
+            specs.append({
+                "k": _axes_of(layout, "act_batch", "cache_seq", "kv_heads", "head_dim"),
+                "v": _axes_of(layout, "act_batch", "cache_seq", "kv_heads", "head_dim"),
+                "pos": P(layout.act_axes("cache_seq")),
+            })
+        elif kind == "rglru":
+            specs.append({
+                "h": _axes_of(layout, "act_batch", "act_lru"),
+                "conv": _axes_of(layout, "act_batch", "conv", "act_lru"),
+            })
+        elif kind == "mlstm":
+            specs.append({
+                "c": _axes_of(layout, "act_batch", "heads", "head_dim", "inner"),
+                "n": _axes_of(layout, "act_batch", "heads", "head_dim"),
+                "m": _axes_of(layout, "act_batch", "heads"),
+                "conv": _axes_of(layout, "act_batch", "conv", "inner"),
+            })
+        elif kind == "slstm":
+            z = _axes_of(layout, "act_batch", "heads", "head_dim")
+            specs.append({"c": z, "n": z, "h": z, "m": z})
+    return specs

@@ -1,0 +1,14 @@
+"""Prefill step: full-sequence forward that emits last-token logits + KV."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import Layout
+from repro.models.transformer import forward_prefill
+
+
+def make_prefill_step(cfg: ModelConfig, layout: Layout):
+    def prefill_step(params, batch):
+        logits, caches = forward_prefill(params, cfg, layout, batch)
+        return {"logits": logits, "caches": caches}
+
+    return prefill_step

@@ -1,0 +1,13 @@
+from repro.store.vector_store import (
+    InMemoryRecordStore,
+    ShardedRecordStore,
+    HostOffloadRecordStore,
+    RecordFetchFn,
+)
+
+__all__ = [
+    "InMemoryRecordStore",
+    "ShardedRecordStore",
+    "HostOffloadRecordStore",
+    "RecordFetchFn",
+]

@@ -1,0 +1,3 @@
+from repro.train.train_step import TrainState, make_train_step, make_train_state_specs
+
+__all__ = ["TrainState", "make_train_step", "make_train_state_specs"]

@@ -1,0 +1,34 @@
+import os
+import sys
+
+# Tests see the real device count (1 CPU) — the 512-device flag is ONLY for
+# the dry-run launcher. Distributed tests spawn subprocesses with their own
+# XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def tiny_corpus():
+    from repro.data import make_bigann_like, make_queries, uniform_labels
+
+    n, d = 2000, 24
+    corpus = make_bigann_like(n, d, seed=0)
+    labels = uniform_labels(n, 10, seed=0)
+    queries = make_queries(corpus, 16, seed=1)
+    return corpus, labels, queries
+
+
+@pytest.fixture(scope="session")
+def tiny_engine(tiny_corpus):
+    from repro.core import EngineConfig, GateANNEngine
+
+    corpus, labels, _ = tiny_corpus
+    return GateANNEngine.build(
+        corpus,
+        config=EngineConfig(degree=20, build_l=40, pq_chunks=8, r_max=10),
+        labels=labels,
+        attributes=np.linalg.norm(corpus, axis=1).astype(np.float32),
+    )

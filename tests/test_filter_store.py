@@ -1,0 +1,83 @@
+"""Filter store predicates, including hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.filter_store import (
+    AndFilter,
+    EqualityFilter,
+    RangeFilter,
+    SubsetFilter,
+    match_all,
+    pack_tags,
+)
+
+
+def test_equality_basic():
+    labels = jnp.asarray([0, 1, 2, 0, 1], jnp.int32)
+    f = EqualityFilter(labels).bind(jnp.asarray([0, 1], jnp.int32))
+    ids = jnp.asarray([[0, 1, 3], [1, 4, -1]], jnp.int32)
+    got = np.asarray(f(ids))
+    assert got.tolist() == [[True, False, True], [True, True, False]]
+
+
+def test_range_basic():
+    vals = jnp.asarray([0.1, 0.5, 0.9], jnp.float32)
+    f = RangeFilter(vals).bind(jnp.asarray([0.2]), jnp.asarray([0.8]))
+    got = np.asarray(f(jnp.asarray([[0, 1, 2]], jnp.int32)))
+    assert got.tolist() == [[False, True, False]]
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.data())
+def test_subset_property(data):
+    """(q & node) == q  <=>  q's tags ⊆ node's tags — for random tag sets."""
+    vocab = 70
+    node_tags = data.draw(st.lists(
+        st.lists(st.integers(0, vocab - 1), max_size=8), min_size=1, max_size=6,
+    ))
+    q_tags = data.draw(st.lists(st.integers(0, vocab - 1), max_size=4))
+    bits = pack_tags([sorted(set(t)) for t in node_tags], vocab)
+    qbits = pack_tags([sorted(set(q_tags))], vocab)
+    f = SubsetFilter(jnp.asarray(bits)).bind(jnp.asarray(qbits))
+    ids = jnp.arange(len(node_tags), dtype=jnp.int32)[None, :]
+    got = np.asarray(f(ids))[0]
+    want = [set(q_tags) <= set(t) for t in node_tags]
+    assert got.tolist() == want
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    labels=st.lists(st.integers(0, 4), min_size=4, max_size=40),
+    target=st.integers(0, 4),
+)
+def test_equality_property(labels, target):
+    arr = jnp.asarray(labels, jnp.int32)
+    f = EqualityFilter(arr).bind(jnp.asarray([target], jnp.int32))
+    ids = jnp.arange(len(labels), dtype=jnp.int32)[None, :]
+    got = np.asarray(f(ids))[0]
+    assert got.tolist() == [l == target for l in labels]
+
+
+def test_conjunction():
+    labels = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    vals = jnp.asarray([0.0, 1.0, 0.0, 1.0], jnp.float32)
+    f = AndFilter((EqualityFilter(labels), RangeFilter(vals))).bind(
+        jnp.asarray([0], jnp.int32), (jnp.asarray([0.5]), jnp.asarray([1.5]))
+    )
+    got = np.asarray(f(jnp.asarray([[0, 1, 2, 3]], jnp.int32)))[0]
+    assert got.tolist() == [False, True, False, False]
+
+
+def test_match_all_rejects_invalid_ids():
+    f = match_all()
+    got = np.asarray(f(jnp.asarray([[0, -1, 5]], jnp.int32)))[0]
+    assert got.tolist() == [True, False, True]
+
+
+def test_memory_accounting():
+    n = 1000
+    eq = EqualityFilter(jnp.zeros((n,), jnp.int32))
+    assert eq.memory_bytes() == n  # 1 B/node logical (paper Table 2)
+    sub = SubsetFilter(jnp.zeros((n, 4), jnp.uint32))
+    assert sub.memory_bytes() == n * 16

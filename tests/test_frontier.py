@@ -1,0 +1,70 @@
+"""Frontier invariants (hypothesis property tests) — the sorted candidate
+list both GateANN paths feed into (§3.3)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import frontier as fr
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_insert_keeps_sorted_unique_best(data):
+    """Distances are a deterministic function of node id (PQ distance), as
+    in the real system — duplicates always carry the same key."""
+    L = data.draw(st.integers(2, 12))
+    n_new = data.draw(st.integers(1, 20))
+    ids0 = data.draw(st.lists(st.integers(-1, 30), min_size=L, max_size=L))
+    new_ids = data.draw(st.lists(st.integers(-1, 30), min_size=n_new, max_size=n_new))
+    seed = data.draw(st.integers(0, 2**31))
+    dist_of = lambda i: float(np.random.default_rng(seed + i).uniform(0, 10))
+
+    f = fr.make_frontier(1, L)
+    d0 = np.asarray([dist_of(i) if i >= 0 else np.inf for i in ids0], np.float32)
+    f = fr.insert(f, jnp.asarray([ids0], jnp.int32), jnp.asarray([d0]))
+    nd = np.asarray([dist_of(i) if i >= 0 else np.inf for i in new_ids], np.float32)
+    f2 = fr.insert(f, jnp.asarray([new_ids], jnp.int32), jnp.asarray([nd]))
+
+    ids = np.asarray(f2.ids)[0]
+    dists = np.asarray(f2.dists)[0]
+    valid = ids >= 0
+    # sorted ascending
+    vd = dists[valid]
+    assert (np.diff(vd) >= -1e-6).all()
+    # unique ids
+    assert len(set(ids[valid].tolist())) == valid.sum()
+    # contains the L globally-best candidates
+    all_ids = {i for i in ids0 + new_ids if i >= 0}
+    want = sorted(all_ids, key=dist_of)[:L]
+    got = ids[valid].tolist()
+    assert got == want
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 6))
+def test_best_unexpanded_marks_and_excludes(l, w):
+    rng = np.random.default_rng(l * 7 + w)
+    f = fr.make_frontier(1, l)
+    ids = rng.permutation(20)[:l].astype(np.int32)
+    d = rng.uniform(0, 1, l).astype(np.float32)
+    f = fr.insert(f, jnp.asarray([ids]), jnp.asarray([d]))
+    sel, slots, valid = fr.best_unexpanded(f, w)
+    f2 = fr.mark_expanded(f, slots, valid)
+    sel2, _, valid2 = fr.best_unexpanded(f2, w)
+    # second selection must not repeat the first
+    s1 = set(np.asarray(sel)[0][np.asarray(valid)[0]].tolist())
+    s2 = set(np.asarray(sel2)[0][np.asarray(valid2)[0]].tolist())
+    assert not (s1 & s2)
+    # first selection is the w smallest distances
+    order = np.argsort(d)[: min(w, l)]
+    assert s1 == set(ids[order].tolist())
+
+
+def test_results_insert_dedups():
+    r = fr.make_results(1, 4)
+    r = fr.results_insert(
+        r, jnp.asarray([[5, 5, 7]], jnp.int32), jnp.asarray([[1.0, 0.5, 2.0]])
+    )
+    ids = np.asarray(r.ids)[0]
+    assert (ids >= 0).sum() == 2  # 5 deduped
+    assert ids[0] == 5

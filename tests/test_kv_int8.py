@@ -1,0 +1,51 @@
+"""int8 KV cache (REPRO_KV_INT8) — decode parity within quantization error."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_int8_cache_decode_close_to_fp():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["REPRO_KV_INT8"] = "1"
+    code = """
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_smoke_config
+    from repro.distributed.sharding import NULL_LAYOUT
+    from repro.models import transformer as tfm
+
+    cfg = dataclasses.replace(get_smoke_config("deepseek-coder-33b"), dtype="float32")
+    b, t = 2, 16
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (b, t)), jnp.int32)
+    hidden, _, _ = tfm.forward_train(params, cfg, NULL_LAYOUT,
+                                     {"tokens": tokens}, remat=False)
+    w = tfm.unembed_matrix(params, cfg).astype(hidden.dtype)
+    full = jax.lax.dot_general(hidden, w, (((2,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    caches = tfm.init_caches(cfg, b, t, jnp.float32)
+    assert "k_q" in caches[0], "int8 cache not active"
+    step = jax.jit(lambda p, c, tok, pos: tfm.forward_decode(
+        p, cfg, NULL_LAYOUT, tok, c, pos))
+    outs = []
+    for i in range(t):
+        logits, caches = step(params, caches, tokens[:, i:i+1], jnp.int32(i))
+        outs.append(logits[:, 0, :])
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.max(jnp.abs(dec - full)))
+    scale = float(jnp.max(jnp.abs(full)))
+    assert err < 0.05 * scale + 0.3, (err, scale)
+    # ranking mostly preserved
+    agree = float(jnp.mean(jnp.argmax(dec, -1) == jnp.argmax(full, -1)))
+    assert agree > 0.9, agree
+    print("int8 KV parity OK", err, agree)
+    """
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"STDOUT:{out.stdout}\nSTDERR:{out.stderr}"

@@ -1,0 +1,87 @@
+"""Per-arch smoke: reduced config, one train step + one decode step on CPU,
+asserting output shapes and no NaNs (deliverable (f))."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, shapes_for
+from repro.configs.base import ShapeConfig
+from repro.distributed.sharding import NULL_LAYOUT
+from repro.models import transformer as tfm
+from repro.models import zoo
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    shape = ShapeConfig("smoke", 32, 2, "train")
+    batch = zoo.make_concrete_batch(cfg, shape)
+    loss, grads = jax.jit(
+        jax.value_and_grad(lambda p: tfm.lm_loss(p, cfg, NULL_LAYOUT, batch))
+    )(params)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(l))) for l in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_smoke(arch):
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    caches = tfm.init_caches(cfg, 2, 16, jnp.float32)
+    logits, new_caches = jax.jit(
+        lambda p, c, t, pos: tfm.forward_decode(p, cfg, NULL_LAYOUT, t, c, pos)
+    )(params, caches, jnp.zeros((2, 1), jnp.int32), jnp.int32(0))
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    assert jax.tree.structure(new_caches) == jax.tree.structure(caches)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_consistency(arch):
+    """Full config matches the assigned spec (layer counts, dims, vocab)."""
+    cfg = get_config(arch)
+    assert cfg.n_layers == len(cfg.layer_kinds)
+    assert cfg.d_model % 16 == 0  # decode TP divisibility
+    if cfg.d_ff:
+        assert cfg.d_ff % 16 == 0
+    shapes = shapes_for(cfg)
+    names = [s.name for s in shapes]
+    assert "train_4k" in names and "decode_32k" in names
+    assert ("long_500k" in names) == cfg.supports_long_context
+
+
+def test_param_counts_plausible():
+    """Declared param counts should be near the models' nameplates."""
+    expect = {
+        "gemma-7b": (7e9, 10e9),
+        "deepseek-coder-33b": (30e9, 36e9),
+        "qwen2.5-32b": (29e9, 36e9),
+        "dbrx-132b": (110e9, 145e9),
+        "llama4-maverick-400b-a17b": (350e9, 450e9),
+        "recurrentgemma-9b": (7.5e9, 11e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n:.3e} not in [{lo:.1e}, {hi:.1e}]"
+    active = get_config("llama4-maverick-400b-a17b").active_param_count()
+    assert 12e9 <= active <= 25e9, active
+
+
+def test_vision_stub_prefix():
+    cfg = dataclasses.replace(get_smoke_config("internvl2-2b"), dtype="float32")
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    b, t = 2, 24
+    batch = {
+        "tokens": jnp.zeros((b, t - cfg.n_prefix_embeds), jnp.int32),
+        "targets": jnp.zeros((b, t - cfg.n_prefix_embeds), jnp.int32),
+        "prefix_embeds": jnp.asarray(
+            np.random.default_rng(0).normal(size=(b, cfg.n_prefix_embeds, cfg.d_model))
+            * 0.02, jnp.float32),
+    }
+    loss = jax.jit(lambda p: tfm.lm_loss(p, cfg, NULL_LAYOUT, batch))(params)
+    assert np.isfinite(float(loss))

@@ -1,0 +1,117 @@
+"""System behaviour: the paper's core claims on a small corpus.
+
+These are the structural invariants that transfer exactly from the paper:
+  * gate recall ≈ post recall at equal L (tunneling preserves connectivity)
+  * gate I/O ≈ selectivity x post I/O  (the 1/s law, Fig. 7)
+  * naive pre-filtering recalls less at equal L (connectivity collapse)
+  * early-filter pays the same I/O as post (Fig. 18)
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SearchConfig, recall_at_k
+from repro.data import filtered_ground_truth
+
+
+def _search(engine, queries, mode, L=96, target=0):
+    tgt = np.full(queries.shape[0], target, np.int32)
+    return engine.search(
+        queries, filter_kind="label", filter_params=tgt,
+        search_config=SearchConfig(mode=mode, search_l=L, beam_width=4),
+    )
+
+
+@pytest.fixture(scope="module")
+def runs(tiny_engine, tiny_corpus):
+    corpus, labels, queries = tiny_corpus
+    gt = filtered_ground_truth(corpus, queries, np.asarray(labels) == 0, k=10)
+    outs = {m: _search(tiny_engine, queries, m) for m in
+            ("gate", "post", "early", "pre_naive")}
+    return outs, gt
+
+
+def _mean(x):
+    return float(np.mean(np.asarray(x)))
+
+
+def test_gate_matches_post_recall(runs):
+    outs, gt = runs
+    r_gate = recall_at_k(outs["gate"].ids, gt)
+    r_post = recall_at_k(outs["post"].ids, gt)
+    assert r_gate >= r_post - 0.05, (r_gate, r_post)
+
+
+def test_io_reduction_tracks_selectivity(runs):
+    """~10% selectivity -> gate issues ~10% of post's I/Os (paper Fig. 7)."""
+    outs, _ = runs
+    ratio = _mean(outs["gate"].stats.n_ios) / max(_mean(outs["post"].stats.n_ios), 1e-9)
+    assert 0.03 < ratio < 0.3, ratio
+
+
+def test_gate_results_all_pass_filter(runs, tiny_corpus):
+    _, labels, _ = tiny_corpus
+    outs, _ = runs
+    ids = np.asarray(outs["gate"].ids)
+    got = ids[ids >= 0]
+    assert (np.asarray(labels)[got] == 0).all()
+
+
+def test_naive_prefilter_loses_recall(runs):
+    outs, gt = runs
+    r_naive = recall_at_k(outs["pre_naive"].ids, gt)
+    r_gate = recall_at_k(outs["gate"].ids, gt)
+    assert r_naive < r_gate, (r_naive, r_gate)
+
+
+def test_early_filter_pays_full_io(runs):
+    outs, _ = runs
+    assert _mean(outs["early"].stats.n_ios) == pytest.approx(
+        _mean(outs["post"].stats.n_ios), rel=1e-6
+    )
+    # ... but computes far fewer exact distances
+    assert _mean(outs["early"].stats.n_exact) < 0.5 * _mean(outs["post"].stats.n_exact)
+
+
+def test_tunnels_only_in_gate_mode(runs):
+    outs, _ = runs
+    assert _mean(outs["gate"].stats.n_tunnels) > 0
+    for m in ("post", "early", "pre_naive"):
+        assert _mean(outs[m].stats.n_tunnels) == 0
+
+
+def test_stats_invariants(runs):
+    """Dispatches are bounded by hops x W; fetches+tunnels == dispatches in gate."""
+    outs, _ = runs
+    for mode, out in outs.items():
+        ios = np.asarray(out.stats.n_ios)
+        tun = np.asarray(out.stats.n_tunnels)
+        hops = np.asarray(out.stats.n_hops)
+        assert (ios + tun <= hops * 4).all(), mode
+        assert (ios >= 0).all() and (tun >= 0).all()
+
+
+def test_range_predicate(tiny_engine, tiny_corpus):
+    corpus, _, queries = tiny_corpus
+    norms = np.linalg.norm(corpus, axis=1)
+    lo, hi = np.quantile(norms, [0.4, 0.5])
+    gt = filtered_ground_truth(corpus, queries, (norms >= lo) & (norms <= hi), k=10)
+    b = queries.shape[0]
+    out = tiny_engine.search(
+        queries, filter_kind="range",
+        filter_params=(np.full(b, lo, np.float32), np.full(b, hi, np.float32)),
+        search_config=SearchConfig(mode="gate", search_l=96, beam_width=4),
+    )
+    ids = np.asarray(out.ids)
+    got = ids[ids >= 0]
+    assert ((norms[got] >= lo) & (norms[got] <= hi)).all()
+    assert recall_at_k(out.ids, gt) > 0.3
+
+
+def test_unfiltered_high_recall(tiny_engine, tiny_corpus):
+    corpus, _, queries = tiny_corpus
+    gt = filtered_ground_truth(corpus, queries, np.ones(len(corpus), bool), k=10)
+    out = tiny_engine.search(
+        queries, search_config=SearchConfig(mode="unfiltered", search_l=64, beam_width=4)
+    )
+    assert recall_at_k(out.ids, gt) > 0.9

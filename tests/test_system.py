@@ -1,0 +1,80 @@
+"""End-to-end behaviour tests for the GateANN system (engine-level)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SearchConfig, recall_at_k
+from repro.core.io_model import DEFAULT_COST_MODEL
+
+
+def test_engine_memory_report(tiny_engine):
+    rep = tiny_engine.memory_report()
+    n = rep["n"]
+    assert rep["pq_bytes"] == n * 8  # 8 chunks
+    assert rep["neighbor_store_bytes"] == n * (1 + 10) * 4  # Eq. (1)
+    assert rep["filter_store_bytes"]["label"] == n
+    assert rep["record_tier_bytes"] >= n * 4096  # 4 KB-aligned records
+
+
+def test_neighbor_store_is_prefix_of_graph(tiny_engine):
+    full = np.asarray(tiny_engine.record_store.neighbors)
+    mem = np.asarray(tiny_engine.neighbor_store.neighbors)
+    np.testing.assert_array_equal(mem, full[:, : mem.shape[1]])
+
+
+def test_modeled_throughput_ordering(tiny_engine, tiny_corpus):
+    """gate's modeled QPS must beat post's at the same recall operating
+    point — the paper's headline (7.6x at s=10%)."""
+    _, _, queries = tiny_corpus
+    tgt = np.zeros(queries.shape[0], np.int32)
+    out_g = tiny_engine.search(queries, filter_kind="label", filter_params=tgt,
+                               search_config=SearchConfig(mode="gate", search_l=96))
+    out_p = tiny_engine.search(queries, filter_kind="label", filter_params=tgt,
+                               search_config=SearchConfig(mode="post", search_l=96))
+    q_g = tiny_engine.modeled_qps(out_g.stats)
+    q_p = tiny_engine.modeled_qps(out_p.stats)
+    assert q_g > 2.0 * q_p, (q_g, q_p)
+
+
+def test_rmax_is_runtime_knob(tiny_corpus):
+    """Rebuilding the neighbor store at a different R_max must not touch
+    the graph (paper §3.4: runtime parameter, no index rebuild)."""
+    from repro.core import EngineConfig, GateANNEngine
+    from repro.core.neighbor_store import NeighborStore
+
+    corpus, labels, queries = tiny_corpus
+    eng = GateANNEngine.build(
+        corpus, config=EngineConfig(degree=20, build_l=40, pq_chunks=8, r_max=10),
+        labels=labels,
+    )
+    graph_before = np.asarray(eng.record_store.neighbors).copy()
+    eng.neighbor_store = NeighborStore.from_graph(eng.record_store.neighbors, 4)
+    assert eng.neighbor_store.r_max == 4
+    np.testing.assert_array_equal(np.asarray(eng.record_store.neighbors), graph_before)
+    tgt = np.zeros(queries.shape[0], np.int32)
+    out = eng.search(queries, filter_kind="label", filter_params=tgt,
+                     search_config=SearchConfig(mode="gate", search_l=64))
+    ids = np.asarray(out.ids)
+    assert (np.asarray(labels)[ids[ids >= 0]] == 0).all()
+
+
+def test_multilabel_subset_search(tiny_corpus):
+    from repro.core import EngineConfig, GateANNEngine
+    from repro.core.filter_store import pack_tags
+    from repro.data.labels import multilabel_tags, multilabel_queries
+
+    corpus, _, queries = tiny_corpus
+    n = corpus.shape[0]
+    tags = multilabel_tags(n, vocab=64, mean_tags=4.0, seed=0)
+    bits = pack_tags(tags, 64)
+    eng = GateANNEngine.build(
+        corpus, config=EngineConfig(degree=20, build_l=40, pq_chunks=8, r_max=10),
+        tag_bits=bits,
+    )
+    qtags = multilabel_queries(tags, queries.shape[0], n_tags=(1, 1), seed=2)
+    qbits = pack_tags(qtags, 64)
+    out = eng.search(queries, filter_kind="tags", filter_params=jnp.asarray(qbits),
+                     search_config=SearchConfig(mode="gate", search_l=64))
+    ids = np.asarray(out.ids)
+    for row, qt in zip(ids, qtags):
+        for i in row[row >= 0]:
+            assert set(qt) <= set(tags[int(i)])

@@ -1,0 +1,54 @@
+"""w8a16 weight quantization: decode parity within quantization error."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.distributed.sharding import NULL_LAYOUT
+from repro.models import transformer as tfm
+from repro.models.layers import quantize_axes, quantize_tree
+
+
+def test_quantized_decode_close_to_fp():
+    cfg = dataclasses.replace(get_smoke_config("qwen2.5-32b"), dtype="float32")
+    b, t = 2, 12
+    params, axes = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_tree(params, axes)
+    qaxes = quantize_axes(axes)
+    assert jax.tree.structure(qaxes) != jax.tree.structure(axes)  # transformed
+
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (b, t)), jnp.int32)
+    hidden, _, _ = tfm.forward_train(params, cfg, NULL_LAYOUT,
+                                     {"tokens": tokens}, remat=False)
+    w = tfm.unembed_matrix(params, cfg).astype(hidden.dtype)
+    full = jax.lax.dot_general(hidden, w, (((2,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+    caches = tfm.init_caches(cfg, b, t, jnp.float32)
+    step = jax.jit(lambda p, c, tok, pos: tfm.forward_decode(
+        p, cfg, NULL_LAYOUT, tok, c, pos))
+    outs = []
+    for i in range(t):
+        logits, caches = step(qparams, caches, tokens[:, i : i + 1], jnp.int32(i))
+        outs.append(logits[:, 0, :])
+    dec = jnp.stack(outs, axis=1)
+    scale = float(jnp.max(jnp.abs(full)))
+    err = float(jnp.max(jnp.abs(dec - full)))
+    assert err < 0.08 * scale + 0.5, (err, scale)
+    agree = float(jnp.mean(jnp.argmax(dec, -1) == jnp.argmax(full, -1)))
+    assert agree > 0.85, agree
+
+
+def test_stacked_scale_shapes():
+    """Per-layer scales for stacked (scanned) weights."""
+    cfg = dataclasses.replace(get_smoke_config("gemma-7b"), dtype="float32")
+    params, axes = tfm.init_model(jax.random.PRNGKey(1), cfg)
+    q = quantize_tree(params, axes)
+    unit0 = q["units"]["0"]
+    wq = unit0["attn"]["wq"]
+    assert wq["w_q"].dtype == jnp.int8
+    # stacked (n_units, in, H, dh) -> scales (n_units, H, dh)
+    assert wq["w_s"].shape == (wq["w_q"].shape[0],) + wq["w_q"].shape[2:]
