@@ -1,0 +1,87 @@
+"""Cache sweep: slow-tier I/O, hit rate, and modeled QPS vs cache budget.
+
+Sweeps the hot-node record cache (``EngineConfig.cache_budget_bytes``)
+per search mode on the standard 20k setup.  The cache is a runtime knob
+(``engine.with_cache``) so the graph/PQ build is shared across the whole
+sweep.  Emits the benchmark-contract CSV ``name,us_per_call,derived``:
+
+  cache_<mode>_r<records>_ios      derived = mean slow-tier reads/query
+  cache_<mode>_r<records>_hitrate  derived = hits / (hits + slow reads)
+  cache_<mode>_r<records>_qps32    derived = modeled QPS at 32 threads
+  cache_<mode>_ids_match           derived = 1.0 iff every budget returned
+                                   ids identical to the uncached engine
+
+    PYTHONPATH=src python -m benchmarks.cache_sweep [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import SearchConfig
+
+BUDGET_RECORDS = (0, 64, 256, 1024, 4096)
+RECORD_BYTES = 4096  # 32-dim, degree-32 records round to one 4 KB sector
+MODES = ("gate", "post", "unfiltered")
+
+
+def sweep_cache(ctx, *, budgets=BUDGET_RECORDS, modes=MODES, search_l=100,
+                policy="visit_freq"):
+    engine = ctx["engine"]
+    queries = ctx["queries"]
+    rows = []
+    for mode in modes:
+        kind = None if mode == "unfiltered" else "label"
+        params = None if mode == "unfiltered" else np.zeros(common.NQ, np.int32)
+        base_ids = None
+        ids_match = True
+        for nrec in budgets:
+            eng = engine.with_cache(nrec * RECORD_BYTES, policy=policy)
+            out = eng.search(
+                queries, filter_kind=kind, filter_params=params,
+                search_config=SearchConfig(mode=mode, search_l=search_l,
+                                           beam_width=8),
+            )
+            ids = np.asarray(out.ids)
+            if base_ids is None:
+                base_ids = ids
+            ids_match &= bool(np.array_equal(ids, base_ids))
+            ios = float(np.mean(np.asarray(out.stats.n_ios)))
+            hits = float(np.mean(np.asarray(out.stats.n_cache_hits)))
+            lat = eng.modeled_latency_us(out.stats)
+            rows.append(dict(name=f"cache_{mode}_r{nrec}_ios", lat1_us=lat,
+                             derived=ios))
+            rows.append(dict(name=f"cache_{mode}_r{nrec}_hitrate", lat1_us=lat,
+                             derived=hits / max(hits + ios, 1e-9)))
+            rows.append(dict(name=f"cache_{mode}_r{nrec}_qps32", lat1_us=lat,
+                             derived=eng.modeled_qps(out.stats)))
+        rows.append(dict(name=f"cache_{mode}_ids_match", lat1_us=0.0,
+                         derived=float(ids_match)))
+    return rows
+
+
+def fig19_cache_sweep(ctx):
+    """Registered with benchmarks/run.py as fig19."""
+    return sweep_cache(ctx)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="gate mode only, 3 budgets")
+    args = ap.parse_args()
+    ctx = common.standard_setup()
+    kw = {}
+    if args.quick:
+        kw = dict(budgets=(0, 256, 4096), modes=("gate",))
+    print("name,us_per_call,derived")
+    for r in sweep_cache(ctx, **kw):
+        print(f"{r['name']},{r['lat1_us']:.1f},{r['derived']:.4f}")
+    print("# sweep done", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -352,9 +352,12 @@ def table5_breakdown(ctx):
     return rows
 
 
+from benchmarks.cache_sweep import fig19_cache_sweep  # noqa: E402 — shares common
+
 ALL_FIGURES = [
     fig01_motivation, fig05_main, fig06_scaling, fig07_io, fig08_scale,
     fig09_multilabel, fig10_vamana, fig11_fdiskann, fig12_selectivity,
     fig13_rmax, fig14_zipf, fig15_correlation, fig16_range, fig17_pipeline,
-    fig18_ablation, table2_memory, table4_ssd_speed, table5_breakdown,
+    fig18_ablation, fig19_cache_sweep, table2_memory, table4_ssd_speed,
+    table5_breakdown,
 ]

@@ -1,12 +1,16 @@
 """GateANN engine — the public API.
 
 Build once from a corpus (+ optional metadata), then search with any
-predicate and any mode.  The engine owns the four tiers of §3:
+predicate and any mode.  The engine owns the storage tiers of §3:
 
   fast tier ("memory"):   PQ codes, neighbor store, filter store
+  cache tier:             hot-node record cache (optional — see
+                          ``EngineConfig.cache_budget_bytes``)
   slow tier ("SSD"):      record store (full vectors + full adjacency)
 
 and exposes the paper's baselines through ``SearchConfig.mode``.
+Tunneling removes slow-tier reads for filter-failing nodes; the cache
+removes them for the hot filter-passing ones near the medoid.
 """
 from __future__ import annotations
 
@@ -23,6 +27,7 @@ from repro.core import search as searchm
 from repro.core.filter_store import CheckFn, EqualityFilter, RangeFilter, SubsetFilter, match_all
 from repro.core.io_model import DEFAULT_COST_MODEL, IOCostModel
 from repro.core.neighbor_store import NeighborStore
+from repro.store.cache import CachedRecordStore, select_hot_set
 from repro.store.vector_store import HostOffloadRecordStore, InMemoryRecordStore
 
 
@@ -34,6 +39,8 @@ class EngineConfig:
     pq_chunks: int = 16  # paper default 32 on 128-dim; scaled with D
     r_max: int = 16  # in-memory neighbors per node (runtime knob)
     store_tier: str = "memory"  # memory | host
+    cache_budget_bytes: int = 0  # hot-record cache size (0 disables the tier)
+    cache_policy: str = "visit_freq"  # visit_freq | bfs (see store/cache.py)
     seed: int = 0
 
 
@@ -81,6 +88,23 @@ class GateANNEngine:
             record_store = HostOffloadRecordStore.create(vecs, graph.neighbors)
         else:
             record_store = InMemoryRecordStore(vectors=vecs, neighbors=graph.neighbors)
+        if config.cache_budget_bytes > 0:
+            hot = select_hot_set(
+                neighbors=graph.neighbors,
+                medoid=int(graph.medoid),
+                budget_bytes=config.cache_budget_bytes,
+                policy=config.cache_policy,
+                vectors=vecs,
+                seed=config.seed,
+            )
+            if hot.size:  # a budget below one record leaves the tier off
+                record_store = CachedRecordStore.wrap(
+                    record_store,
+                    vectors=vecs,
+                    neighbors=graph.neighbors,
+                    hot_ids=hot,
+                    policy=config.cache_policy,
+                )
         filters = {}
         if labels is not None:
             filters["label"] = EqualityFilter(labels=jnp.asarray(labels, dtype=jnp.int32))
@@ -98,6 +122,43 @@ class GateANNEngine:
             medoid=graph.medoid,
             filters=filters,
         )
+
+    # -- cache tier --------------------------------------------------------
+    def with_cache(
+        self, budget_bytes: int, *, policy: str | None = None
+    ) -> "GateANNEngine":
+        """Re-wrap the slow tier at a new cache budget — no index rebuild.
+
+        Like ``r_max``, the cache is a runtime knob: the graph, PQ codes
+        and filter stores are shared with ``self``.  ``budget_bytes=0``
+        returns an engine with the cache tier removed.
+        """
+        policy = policy or self.config.cache_policy
+        backing = self.record_store
+        if isinstance(backing, CachedRecordStore):
+            backing = backing.backing
+        store = backing
+        if budget_bytes > 0:
+            hot = select_hot_set(
+                neighbors=backing.neighbors,
+                medoid=int(self.medoid),
+                budget_bytes=budget_bytes,
+                policy=policy,
+                vectors=self.vectors,
+                seed=self.config.seed,
+            )
+            if hot.size:  # a budget below one record leaves the tier off
+                store = CachedRecordStore.wrap(
+                    backing,
+                    vectors=self.vectors,
+                    neighbors=backing.neighbors,
+                    hot_ids=hot,
+                    policy=policy,
+                )
+        cfg = dataclasses.replace(
+            self.config, cache_budget_bytes=budget_bytes, cache_policy=policy
+        )
+        return dataclasses.replace(self, config=cfg, record_store=store)
 
     # -- search ------------------------------------------------------------
     def make_filter(self, kind: str | None, params) -> CheckFn:
@@ -119,6 +180,9 @@ class GateANNEngine:
         q = jnp.asarray(queries, dtype=jnp.float32)
         lut = pqm.build_lut(self.codec, q)
         check = self.make_filter(filter_kind, filter_params)
+        cached_mask = None
+        if isinstance(self.record_store, CachedRecordStore):
+            cached_mask = self.record_store.cached_mask_fn()
         return searchm.filtered_search(
             fetch=self.record_store.fetch_fn(),
             neighbor_store=self.neighbor_store,
@@ -128,6 +192,7 @@ class GateANNEngine:
             entry=self.medoid,
             queries=q,
             config=cfg,
+            cached_mask=cached_mask,
         )
 
     # -- reporting ---------------------------------------------------------
@@ -140,8 +205,15 @@ class GateANNEngine:
             "neighbor_store_bytes": self.neighbor_store.memory_bytes(),
             "filter_store_bytes": {k: f.memory_bytes() for k, f in self.filters.items()},
         }
-        if isinstance(self.record_store, InMemoryRecordStore):
-            rep["record_tier_bytes"] = self.record_store.record_bytes()
+        store = self.record_store
+        if isinstance(store, CachedRecordStore):
+            rep["cache_nodes"] = store.n_cached
+            rep["cache_bytes"] = store.cache_bytes()
+            rep["cache_device_bytes"] = store.device_bytes()
+            rep["cache_policy"] = store.policy
+            store = store.backing
+        if isinstance(store, InMemoryRecordStore):
+            rep["record_tier_bytes"] = store.record_bytes()
         return rep
 
     def modeled_qps(
@@ -153,6 +225,7 @@ class GateANNEngine:
             float(jnp.mean(stats.n_tunnels)),
             n_threads=n_threads,
             n_exact=float(jnp.mean(stats.n_exact)),
+            n_cache_hits=float(jnp.mean(stats.n_cache_hits)),
         )
 
     def modeled_latency_us(
@@ -164,6 +237,7 @@ class GateANNEngine:
             float(jnp.mean(stats.n_tunnels)),
             float(jnp.mean(stats.n_exact)),
             pipeline_depth=pipeline_depth,
+            n_cache_hits=float(jnp.mean(stats.n_cache_hits)),
         )
 
 

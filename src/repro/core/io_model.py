@@ -7,6 +7,8 @@ cost model with the constants the paper itself measures:
   * random 4 KB SSD read        ~100 us   (§3.3: "on the order of 100 us")
   * tunnel hop (PQ + AdjIndex)  ~1 us     (§3.3: "sub-microsecond",
                                            Table 5: 338 us / ~350 tunnels)
+  * cached record gather        ~1 us     (hot-node cache hit — fast-tier
+                                           rate, no device read)
   * exact-distance + parse      per-node CPU cost from Table 5
   * aggregate IOPS ceiling      ~430 K    (§5.2.2 / §5.4.4)
 
@@ -27,6 +29,8 @@ import numpy as np
 class IOCostModel:
     ssd_read_us: float = 100.0       # device latency per 4 KB random read
     tunnel_us: float = 1.0           # neighbor-store lookup + PQ per tunneled node
+    cache_hit_us: float = 1.0        # cached record gather — fast-tier rate, no
+                                     #   device read, no submit/poll, no IOPS cost
     exact_dist_us: float = 4.8       # per fetched node: parse + exact distance
                                      #   (Table 5: 1041 us / ~206 I/Os ≈ 5 us)
     submit_poll_us: float = 0.31     # per I/O submit+poll (64 us / 206 I/Os)
@@ -35,29 +39,41 @@ class IOCostModel:
     pipeline_depth: int = 32         # W — concurrent in-flight reads
 
     def latency_us(self, n_ios: float, n_tunnels: float, n_exact: float | None = None,
-                   pipeline_depth: int | None = None) -> float:
+                   pipeline_depth: int | None = None,
+                   n_cache_hits: float = 0.0) -> float:
         """Modeled single-thread per-query latency.
 
         I/O latency is overlapped across W in-flight reads (PipeANN-style):
         device time contributes ceil(n_ios / W) * ssd_read_us; CPU-side
-        per-node work is serial on one thread.
+        per-node work is serial on one thread.  Cache hits are priced at
+        the fast-tier rate (``cache_hit_us``, like a tunnel hop): they pay
+        no device read and no submit/poll, only the gather + list upkeep.
         """
         w = pipeline_depth or self.pipeline_depth
-        n_exact = n_ios if n_exact is None else n_exact
+        n_exact = n_ios + n_cache_hits if n_exact is None else n_exact
         device = np.ceil(n_ios / max(w, 1)) * self.ssd_read_us
+        fetched = n_ios + n_cache_hits
         cpu = (
-            n_ios * (self.submit_poll_us + self.exact_dist_us * (n_exact / max(n_ios, 1e-9)))
+            n_ios * self.submit_poll_us
+            + n_exact * self.exact_dist_us
             + n_tunnels * self.tunnel_us
-            + (n_ios + n_tunnels) * self.list_mgmt_us
+            + n_cache_hits * self.cache_hit_us
+            + (fetched + n_tunnels) * self.list_mgmt_us
         )
         return float(device + cpu)
 
     def qps(self, n_ios: float, n_tunnels: float, n_threads: int = 32,
-            n_exact: float | None = None) -> float:
-        """Modeled throughput: min(CPU-scaling limit, aggregate IOPS ceiling)."""
-        if n_ios <= 0 and n_tunnels <= 0:
+            n_exact: float | None = None, n_cache_hits: float = 0.0) -> float:
+        """Modeled throughput: min(CPU-scaling limit, aggregate IOPS ceiling).
+
+        Only slow-tier reads count against the IOPS ceiling — cache hits
+        (like tunnels) are device-side work that scales with threads.
+        """
+        if n_ios <= 0 and n_tunnels <= 0 and n_cache_hits <= 0:
             return 0.0  # degenerate query that did no work
-        lat_s = max(self.latency_us(n_ios, n_tunnels, n_exact), 1e-3) / 1e6
+        lat_s = max(
+            self.latency_us(n_ios, n_tunnels, n_exact, n_cache_hits=n_cache_hits), 1e-3
+        ) / 1e6
         cpu_bound = n_threads / lat_s
         if n_ios > 0:
             io_bound = self.iops_ceiling / n_ios

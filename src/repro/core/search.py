@@ -16,6 +16,12 @@ One batched, jittable loop implements all five search modes:
                     connectivity, Fig.1(b).
   * ``unfiltered``— plain beam search (selectivity 1.0).
 
+When the record store carries a hot-node cache (``CachedRecordStore``),
+``cached_mask`` splits each round's fetches into cache hits (device
+gather, counted as ``n_cache_hits``) and slow-tier reads (counted as
+``n_ios``) — results are bit-identical either way, only the I/O
+accounting and cost change.
+
 The frontier is ordered by PQ distance; results are always drawn from
 filter-passing fetched nodes ranked by exact distance (§3.4).  DiskANN's
 synchronous beam and PipeANN's asynchronous pipeline both map to the
@@ -35,6 +41,7 @@ from repro.core import frontier as fr
 from repro.core import pq as pqm
 from repro.core.filter_store import CheckFn
 from repro.core.neighbor_store import NeighborStore
+from repro.store.cache import CachedMaskFn
 from repro.store.vector_store import RecordFetchFn
 
 MODES = ("gate", "post", "early", "pre_naive", "unfiltered")
@@ -54,10 +61,11 @@ class SearchConfig:
 
 
 class SearchStats(NamedTuple):
-    n_ios: jax.Array  # (B,) records fetched from the expensive tier
+    n_ios: jax.Array  # (B,) records fetched from the slow (expensive) tier
     n_tunnels: jax.Array  # (B,) nodes traversed purely in memory
     n_exact: jax.Array  # (B,) exact distance computations
     n_hops: jax.Array  # (B,) dispatch rounds
+    n_cache_hits: jax.Array  # (B,) record fetches served by the cache tier
 
 
 class SearchOutput(NamedTuple):
@@ -105,6 +113,7 @@ def filtered_search(
     entry: jax.Array,  # () int32 medoid (or (B,) per-query entries)
     queries: jax.Array,  # (B, D) full-precision queries
     config: SearchConfig,
+    cached_mask: CachedMaskFn | None = None,  # (B, W) ids -> cache-hit mask
 ) -> SearchOutput:
     b, d = queries.shape
     n = codes.shape[0]
@@ -151,6 +160,7 @@ def filtered_search(
         n_tunnels=jnp.zeros((b,), jnp.int32),
         n_exact=jnp.zeros((b,), jnp.int32),
         n_hops=jnp.zeros((b,), jnp.int32),
+        n_cache_hits=jnp.zeros((b,), jnp.int32),
     )
     state0 = (frontier, results, visited, stats0)
 
@@ -194,6 +204,13 @@ def filtered_search(
             result_mask = passes
             exact_mask = passes
 
+        # ---- split fetches into cache hits and slow-tier reads
+        if cached_mask is None:
+            hit_mask = jnp.zeros_like(fetch_mask)
+        else:
+            hit_mask = cached_mask(sel_ids) & fetch_mask
+        slow_mask = fetch_mask & (~hit_mask)
+
         # ---- fetch path: record read + exact distance + full-R expansion
         fetch_ids = jnp.where(fetch_mask, sel_ids, fr.INVALID)
         vecs, disk_nbrs = fetch(fetch_ids)  # (B, W, D), (B, W, R)
@@ -220,10 +237,11 @@ def filtered_search(
         frontier = fr.insert(frontier, new, new_d)
 
         stats = SearchStats(
-            n_ios=stats.n_ios + jnp.sum(fetch_mask, axis=1).astype(jnp.int32),
+            n_ios=stats.n_ios + jnp.sum(slow_mask, axis=1).astype(jnp.int32),
             n_tunnels=stats.n_tunnels + jnp.sum(tunnel_mask, axis=1).astype(jnp.int32),
             n_exact=stats.n_exact + jnp.sum(exact_mask, axis=1).astype(jnp.int32),
             n_hops=stats.n_hops + 1,
+            n_cache_hits=stats.n_cache_hits + jnp.sum(hit_mask, axis=1).astype(jnp.int32),
         )
         return frontier, results, visited, stats
 

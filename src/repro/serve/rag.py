@@ -8,6 +8,12 @@ tokens into the prompt, and decodes.
 
 The LM and the retrieval engine are independent substrates — any of the
 10 assigned architectures can serve as the generator.
+
+Serving is where the hot-node cache tier earns its keep: production
+query streams concentrate on the medoid neighborhood, so build the
+engine with ``EngineConfig.cache_budget_bytes`` (or re-wrap with
+``engine.with_cache``) and the server's cumulative ``io_report`` shows
+the fraction of record fetches that never touched the slow tier.
 """
 from __future__ import annotations
 
@@ -41,6 +47,28 @@ class RAGServer:
     layout: Layout
     passage_tokens: np.ndarray  # (N_corpus, passage_len) token ids per vector
     search_config: SearchConfig = dataclasses.field(default_factory=SearchConfig)
+    # cumulative per-tier I/O over the server's lifetime
+    served_queries: int = 0
+    served_ios: int = 0
+    served_tunnels: int = 0
+    served_cache_hits: int = 0
+
+    def _account(self, stats):
+        self.served_queries += int(np.asarray(stats.n_ios).shape[0])
+        self.served_ios += int(np.sum(np.asarray(stats.n_ios)))
+        self.served_tunnels += int(np.sum(np.asarray(stats.n_tunnels)))
+        self.served_cache_hits += int(np.sum(np.asarray(stats.n_cache_hits)))
+
+    def io_report(self) -> dict:
+        """Lifetime tier mix: how many record fetches the cache absorbed."""
+        fetches = self.served_ios + self.served_cache_hits
+        return {
+            "queries": self.served_queries,
+            "slow_tier_reads": self.served_ios,
+            "cache_hits": self.served_cache_hits,
+            "tunnels": self.served_tunnels,
+            "cache_hit_rate": self.served_cache_hits / max(fetches, 1),
+        }
 
     def retrieve(self, requests: list[RAGRequest]):
         q = np.stack([r.query_vec for r in requests])
@@ -53,6 +81,7 @@ class RAGServer:
         out = self.engine.search(
             q, filter_kind=kind, filter_params=params, search_config=self.search_config
         )
+        self._account(out.stats)
         return np.asarray(out.ids), out.stats
 
     def build_prompts(self, requests: list[RAGRequest], retrieved_ids: np.ndarray):

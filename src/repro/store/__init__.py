@@ -4,10 +4,24 @@ from repro.store.vector_store import (
     HostOffloadRecordStore,
     RecordFetchFn,
 )
+from repro.store.cache import (
+    CachedRecordStore,
+    CachedMaskFn,
+    CACHE_POLICIES,
+    bfs_hot_set,
+    select_hot_set,
+    visit_freq_hot_set,
+)
 
 __all__ = [
     "InMemoryRecordStore",
     "ShardedRecordStore",
     "HostOffloadRecordStore",
     "RecordFetchFn",
+    "CachedRecordStore",
+    "CachedMaskFn",
+    "CACHE_POLICIES",
+    "bfs_hot_set",
+    "select_hot_set",
+    "visit_freq_hot_set",
 ]

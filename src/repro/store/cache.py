@@ -1,0 +1,243 @@
+"""Hot-node record cache — the middle storage tier between fast and slow.
+
+Tunneling removes record reads for filter-*failing* nodes; every
+filter-passing node still pays a full slow-tier fetch — including the hot
+nodes near the medoid that nearly every query traverses.  A static cache
+of frequently-visited records is the standard complementary I/O reduction
+in SSD-graph systems (DiskANN's ``num_nodes_to_cache``, PipeANN's BFS
+cache): keep the full records of the hottest nodes device-resident so a
+hit costs a plain gather instead of a slow-tier read.
+
+``CachedRecordStore`` wraps any backing record store exposing
+``fetch_fn()`` (``InMemoryRecordStore`` / ``ShardedRecordStore`` /
+``HostOffloadRecordStore``); the ``vectors`` / ``neighbors`` /
+``record_bytes`` passthroughs additionally require an in-memory-style
+backing (the sharded tier keeps only ``local_*`` arrays — pass the full
+host arrays to ``wrap`` and skip the passthroughs there).
+The hot set is chosen once at build time —
+by visit frequency over sample traversals (``visit_freq``) or by BFS
+depth from the medoid (``bfs``) — and served as a device-resident gather
+inside jit.  The search loop asks ``cached_mask_fn`` which dispatched ids
+are hits, counts them as ``n_cache_hits`` instead of ``n_ios``, and the
+backing store only ever sees the misses (hit ids are masked to -1 before
+the slow-tier fetch, so a hit costs zero slow-tier I/O — no psum payload
+on the sharded tier, no host DMA on the offload tier).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.tree_util import Partial
+
+from repro.store.vector_store import RecordFetchFn
+
+CACHE_POLICIES = ("visit_freq", "bfs")
+
+# Maps (B, W) ids -> (B, W) bool: True where the record is cache-resident.
+CachedMaskFn = Callable[[jax.Array], jax.Array]
+
+
+def record_nbytes(dim: int, degree: int) -> int:
+    """Slow-tier bytes of one record, 4 KB-aligned like DiskANN sectors."""
+    raw = dim * 4 + (degree + 1) * 4
+    return ((raw + 4095) // 4096) * 4096
+
+
+def bfs_hot_set(neighbors: np.ndarray, medoid: int, n_slots: int) -> np.ndarray:
+    """First ``n_slots`` nodes in BFS order from the medoid.
+
+    This is the PipeANN/DiskANN warm-up policy: the nodes every query
+    crosses first are the ones closest (in hops) to the entry point.
+    """
+    nbrs = np.asarray(neighbors)
+    n = nbrs.shape[0]
+    n_slots = min(n_slots, n)
+    if n_slots <= 0:
+        return np.zeros((0,), np.int32)
+    seen = np.zeros(n, bool)
+    order: list[int] = []
+    frontier = np.asarray([int(medoid)])
+    seen[frontier] = True
+    while len(order) < n_slots and frontier.size:
+        take = min(n_slots - len(order), frontier.size)
+        order.extend(frontier[:take].tolist())
+        nxt = nbrs[frontier].ravel()
+        nxt = nxt[nxt >= 0]
+        nxt = np.unique(nxt)
+        nxt = nxt[~seen[nxt]]
+        seen[nxt] = True
+        frontier = nxt
+    return np.asarray(order[:n_slots], np.int32)
+
+
+def visit_freq_hot_set(
+    vectors: np.ndarray | jax.Array,
+    neighbors: np.ndarray | jax.Array,
+    medoid: int,
+    n_slots: int,
+    *,
+    n_samples: int = 64,
+    search_l: int = 64,
+    seed: int = 0,
+) -> np.ndarray:
+    """Top ``n_slots`` nodes by visit frequency over sample traversals.
+
+    Runs unfiltered beam searches for ``n_samples`` perturbed corpus
+    vectors and counts how often each node is expanded; ties and unfilled
+    slots fall back to BFS order from the medoid, so small caches always
+    contain the medoid neighborhood even if sampling is sparse.
+    """
+    from repro.core.graph import beam_search_batch
+
+    nbrs = np.asarray(neighbors)
+    n = nbrs.shape[0]
+    n_slots = min(n_slots, n)
+    if n_slots <= 0:
+        return np.zeros((0,), np.int32)
+    vecs = jnp.asarray(vectors, jnp.float32)
+    rng = np.random.default_rng(seed)
+    picks = rng.integers(0, n, size=min(n_samples, n))
+    noise = rng.normal(0.0, 0.05, size=(picks.size, vecs.shape[1]))
+    queries = jnp.asarray(np.asarray(vecs)[picks] + noise, jnp.float32)
+    res = beam_search_batch(
+        jnp.asarray(nbrs), vecs, jnp.int32(medoid), queries,
+        search_l=search_l, beam_width=4, max_expand=4 * search_l,
+    )
+    expanded = np.asarray(res.expanded_ids).ravel()
+    counts = np.bincount(expanded[expanded >= 0], minlength=n)
+    hot = np.argsort(-counts, kind="stable")[:n_slots]
+    hot = hot[counts[hot] > 0].astype(np.int32)
+    if hot.size < n_slots:  # pad from BFS order, skipping already-chosen ids
+        bfs = bfs_hot_set(nbrs, medoid, n)
+        extra = bfs[~np.isin(bfs, hot)][: n_slots - hot.size]
+        hot = np.concatenate([hot, extra.astype(np.int32)])
+    return hot
+
+
+def select_hot_set(
+    *,
+    neighbors: np.ndarray | jax.Array,
+    medoid: int,
+    budget_bytes: int,
+    policy: str = "visit_freq",
+    vectors: np.ndarray | jax.Array | None = None,
+    n_samples: int = 64,
+    seed: int = 0,
+) -> np.ndarray:
+    """Pick the hot-set ids that fit in ``budget_bytes`` of record storage."""
+    assert policy in CACHE_POLICIES, policy
+    nbrs = np.asarray(neighbors)
+    n, r = nbrs.shape
+    dim = int(np.asarray(vectors).shape[1]) if vectors is not None else 0
+    per_record = record_nbytes(dim, r)
+    n_slots = min(int(budget_bytes) // per_record, n)
+    if policy == "visit_freq" and vectors is not None:
+        return visit_freq_hot_set(
+            vectors, nbrs, int(medoid), n_slots, n_samples=n_samples, seed=seed
+        )
+    return bfs_hot_set(nbrs, int(medoid), n_slots)
+
+
+def _cached_fetch(backing_fetch, slot_of, cache_vecs, cache_nbrs, ids):
+    slot = jnp.where(ids >= 0, slot_of[jnp.maximum(ids, 0)], jnp.int32(-1))
+    hit = slot >= 0
+    # the slow tier only ever sees the misses — a hit is a pure device gather
+    vecs, nbrs = backing_fetch(jnp.where(hit, jnp.int32(-1), ids))
+    safe = jnp.maximum(slot, 0)
+    vecs = jnp.where(hit[..., None], cache_vecs[safe], vecs)
+    nbrs = jnp.where(hit[..., None], cache_nbrs[safe], nbrs)
+    return vecs, nbrs
+
+
+def _cached_mask(slot_of, ids):
+    return (ids >= 0) & (slot_of[jnp.maximum(ids, 0)] >= 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class CachedRecordStore:
+    """A static hot-record cache in front of any backing record store."""
+
+    backing: Any  # any store exposing fetch_fn()
+    slot_of: jax.Array  # (N,) int32 — node id -> cache slot, -1 if uncached
+    cache_vectors: jax.Array  # (C, D) device-resident hot records
+    cache_neighbors: jax.Array  # (C, R) full adjacency of the hot records
+    policy: str = "visit_freq"
+
+    @classmethod
+    def wrap(
+        cls,
+        backing: Any,
+        *,
+        vectors: np.ndarray | jax.Array,
+        neighbors: np.ndarray | jax.Array,
+        hot_ids: np.ndarray,
+        policy: str = "visit_freq",
+    ) -> "CachedRecordStore":
+        """Cache ``hot_ids`` rows of the full (vectors, neighbors) arrays."""
+        vecs = jnp.asarray(vectors, jnp.float32)
+        nbrs = jnp.asarray(neighbors, jnp.int32)
+        hot = np.asarray(hot_ids, np.int32)
+        n = nbrs.shape[0]
+        slot_of = np.full((n,), -1, np.int32)
+        slot_of[hot] = np.arange(hot.size, dtype=np.int32)
+        # an empty hot set keeps one dummy row (never hit: slot_of is all
+        # -1) so the jit-side gather always has a non-empty operand
+        rows = jnp.asarray(hot) if hot.size else jnp.zeros((1,), jnp.int32)
+        return cls(
+            backing=backing,
+            slot_of=jnp.asarray(slot_of),
+            cache_vectors=vecs[rows],
+            cache_neighbors=nbrs[rows],
+            policy=policy,
+        )
+
+    # -- the two jit-side entry points -------------------------------------
+    def fetch_fn(self) -> RecordFetchFn:
+        return Partial(
+            _cached_fetch,
+            self.backing.fetch_fn(),
+            self.slot_of,
+            self.cache_vectors,
+            self.cache_neighbors,
+        )
+
+    def cached_mask_fn(self) -> CachedMaskFn:
+        return Partial(_cached_mask, self.slot_of)
+
+    # -- reporting ---------------------------------------------------------
+    @property
+    def n_cached(self) -> int:
+        return int((np.asarray(self.slot_of) >= 0).sum())
+
+    def cache_bytes(self) -> int:
+        """Slow-tier bytes the cache displaces (4 KB-aligned records)."""
+        d = int(self.cache_vectors.shape[1])
+        return self.n_cached * record_nbytes(d, int(self.cache_neighbors.shape[1]))
+
+    def device_bytes(self) -> int:
+        """Actual device bytes held: packed records + the slot map."""
+        c, d = self.cache_vectors.shape
+        r = int(self.cache_neighbors.shape[1])
+        return c * (d + r) * 4 + int(self.slot_of.shape[0]) * 4
+
+    def hot_ids(self) -> np.ndarray:
+        """Cached node ids in slot order."""
+        slot_of = np.asarray(self.slot_of)
+        ids = np.flatnonzero(slot_of >= 0)
+        return ids[np.argsort(slot_of[ids])].astype(np.int32)
+
+    # -- passthroughs so engine/test code can reach the backing arrays -----
+    @property
+    def vectors(self):
+        return self.backing.vectors
+
+    @property
+    def neighbors(self):
+        return self.backing.neighbors
+
+    def record_bytes(self) -> int:
+        return self.backing.record_bytes()

@@ -10,6 +10,14 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    # registered in pytest.ini too; kept here so a bare `pytest tests/...`
+    # from another rootdir still knows the marker
+    config.addinivalue_line(
+        "markers", "slow: builds big graphs or jits large shapes; not tier-1"
+    )
+
+
 @pytest.fixture(scope="session")
 def tiny_corpus():
     from repro.data import make_bigann_like, make_queries, uniform_labels
@@ -23,6 +31,8 @@ def tiny_corpus():
 
 @pytest.fixture(scope="session")
 def tiny_engine(tiny_corpus):
+    """One engine for every module — the Vamana build dominates tier-1
+    setup time, so it runs once per session (N/D/L/W kept small)."""
     from repro.core import EngineConfig, GateANNEngine
 
     corpus, labels, _ = tiny_corpus
@@ -32,3 +42,10 @@ def tiny_engine(tiny_corpus):
         labels=labels,
         attributes=np.linalg.norm(corpus, axis=1).astype(np.float32),
     )
+
+
+@pytest.fixture(scope="session")
+def tiny_cached_engine(tiny_engine):
+    """The same engine with a 128-record hot-node cache in front of the
+    slow tier (shares graph/PQ/filters with ``tiny_engine``)."""
+    return tiny_engine.with_cache(128 * 4096)

@@ -1,0 +1,207 @@
+"""Cache tier: hot-node record cache correctness and accounting.
+
+The cache must be *invisible* to results (identical ids/dists) and only
+move fetches between the slow tier (``n_ios``) and the cache tier
+(``n_cache_hits``) — I/O conservation.  Hit counts must be monotone in
+cache size, and the selection policies must put the medoid neighborhood
+in even the smallest cache.
+"""
+import numpy as np
+import pytest
+
+from repro.core import SearchConfig
+from repro.store import CachedRecordStore, bfs_hot_set, select_hot_set
+from repro.store.cache import record_nbytes
+
+RECORD = 4096  # tiny-corpus records round up to one 4 KB sector
+
+
+def _search(engine, queries, mode="gate", L=64, W=4):
+    tgt = np.zeros(queries.shape[0], np.int32)
+    return engine.search(
+        queries, filter_kind="label", filter_params=tgt,
+        search_config=SearchConfig(mode=mode, search_l=L, beam_width=W),
+    )
+
+
+@pytest.fixture(scope="module")
+def cache_runs(tiny_engine, tiny_corpus):
+    _, _, queries = tiny_corpus
+    budgets = (0, 32 * RECORD, 128 * RECORD, 512 * RECORD)
+    outs = {
+        bud: _search(tiny_engine.with_cache(bud), queries) for bud in budgets
+    }
+    return outs, queries
+
+
+def test_cached_results_identical(cache_runs):
+    outs, _ = cache_runs
+    base = outs[0]
+    for bud, out in outs.items():
+        np.testing.assert_array_equal(
+            np.asarray(out.ids), np.asarray(base.ids), err_msg=f"budget={bud}"
+        )
+        np.testing.assert_allclose(
+            np.asarray(out.dists), np.asarray(base.dists), rtol=1e-6
+        )
+
+
+def test_io_conservation(cache_runs):
+    """Every cache hit is exactly one slow-tier read saved."""
+    outs, _ = cache_runs
+    base_ios = np.asarray(outs[0].stats.n_ios)
+    np.testing.assert_array_equal(np.asarray(outs[0].stats.n_cache_hits), 0)
+    for bud, out in outs.items():
+        ios = np.asarray(out.stats.n_ios)
+        hits = np.asarray(out.stats.n_cache_hits)
+        np.testing.assert_array_equal(ios + hits, base_ios, err_msg=f"budget={bud}")
+
+
+def test_hits_monotone_in_cache_size(cache_runs):
+    outs, _ = cache_runs
+    budgets = sorted(outs)
+    total_hits = [int(np.sum(np.asarray(outs[b].stats.n_cache_hits))) for b in budgets]
+    assert total_hits == sorted(total_hits), dict(zip(budgets, total_hits))
+    assert total_hits[-1] > 0  # a 512-record cache on a 2k corpus must hit
+
+
+def test_tunnels_and_recall_untouched(cache_runs):
+    """The cache only affects the fetch path — tunnels are unchanged."""
+    outs, _ = cache_runs
+    base = np.asarray(outs[0].stats.n_tunnels)
+    for out in outs.values():
+        np.testing.assert_array_equal(np.asarray(out.stats.n_tunnels), base)
+
+
+@pytest.mark.parametrize("policy", ["visit_freq", "bfs"])
+def test_policies_cache_the_medoid(tiny_engine, policy):
+    eng = tiny_engine.with_cache(16 * RECORD, policy=policy)
+    store = eng.record_store
+    assert isinstance(store, CachedRecordStore)
+    assert store.n_cached == 16
+    assert int(eng.medoid) in set(store.hot_ids().tolist())
+
+
+def test_cache_serves_correct_records(tiny_cached_engine):
+    """A cached fetch must return the same bytes as the backing store."""
+    import jax.numpy as jnp
+
+    store = tiny_cached_engine.record_store
+    ids = jnp.asarray([np.r_[store.hot_ids()[:4], [0, 1, -1, 1999]]], jnp.int32)
+    vecs_c, nbrs_c = store.fetch_fn()(ids)
+    vecs_b, nbrs_b = store.backing.fetch_fn()(ids)
+    np.testing.assert_array_equal(np.asarray(vecs_c), np.asarray(vecs_b))
+    np.testing.assert_array_equal(np.asarray(nbrs_c), np.asarray(nbrs_b))
+
+
+def test_cached_mask_matches_hot_set(tiny_cached_engine):
+    import jax.numpy as jnp
+
+    store = tiny_cached_engine.record_store
+    hot = set(store.hot_ids().tolist())
+    probe = np.r_[store.hot_ids()[:3], [5, 7, -1]].astype(np.int32)
+    got = np.asarray(store.cached_mask_fn()(jnp.asarray(probe[None])))[0]
+    want = [int(i) in hot and i >= 0 for i in probe]
+    assert got.tolist() == want
+
+
+def test_bfs_hot_set_order_and_bounds():
+    nbrs = np.asarray([[1, 2], [3, -1], [3, 4], [-1, -1], [0, -1]], np.int32)
+    assert bfs_hot_set(nbrs, 0, 3).tolist() == [0, 1, 2]
+    assert bfs_hot_set(nbrs, 0, 99).tolist() == [0, 1, 2, 3, 4]
+    assert bfs_hot_set(nbrs, 0, 0).tolist() == []
+
+
+def test_sub_record_budget_leaves_tier_off(tiny_engine, tiny_corpus):
+    """A budget that fits zero records must not wrap (and must not crash
+    the jit-side gather with an empty cache operand)."""
+    _, _, queries = tiny_corpus
+    eng = tiny_engine.with_cache(100)
+    assert not isinstance(eng.record_store, CachedRecordStore)
+    out = _search(eng, queries[:4])
+    np.testing.assert_array_equal(np.asarray(out.stats.n_cache_hits), 0)
+
+
+def test_empty_wrap_is_safe(tiny_engine, tiny_corpus):
+    """Directly wrapping an empty hot set serves everything from backing."""
+    import jax.numpy as jnp
+
+    backing = tiny_engine.record_store
+    store = CachedRecordStore.wrap(
+        backing, vectors=tiny_engine.vectors, neighbors=backing.neighbors,
+        hot_ids=np.zeros((0,), np.int32),
+    )
+    assert store.n_cached == 0
+    assert store.cache_bytes() == 0
+    ids = jnp.asarray([[0, 5, -1]], jnp.int32)
+    vecs_c, nbrs_c = store.fetch_fn()(ids)
+    vecs_b, nbrs_b = backing.fetch_fn()(ids)
+    np.testing.assert_array_equal(np.asarray(vecs_c), np.asarray(vecs_b))
+    np.testing.assert_array_equal(np.asarray(nbrs_c), np.asarray(nbrs_b))
+
+
+def test_select_hot_set_respects_budget(tiny_engine):
+    nbrs = np.asarray(tiny_engine.record_store.neighbors)
+    dim = tiny_engine.vectors.shape[1]
+    per = record_nbytes(dim, nbrs.shape[1])
+    hot = select_hot_set(
+        neighbors=nbrs, medoid=int(tiny_engine.medoid),
+        budget_bytes=10 * per + per // 2, policy="bfs",
+    )
+    assert hot.size == 10  # the half record does not fit
+
+
+def test_memory_report_has_cache_lines(tiny_engine):
+    rep = tiny_engine.with_cache(64 * RECORD).memory_report()
+    assert rep["cache_nodes"] == 64
+    assert rep["cache_bytes"] == 64 * RECORD
+    assert rep["cache_policy"] == "visit_freq"
+    assert 0 < rep["cache_device_bytes"] < rep["cache_bytes"]
+    assert "record_tier_bytes" in rep  # backing tier still reported
+    assert "cache_nodes" not in tiny_engine.memory_report()  # uncached engine
+
+
+def test_modeled_qps_improves_with_cache(tiny_engine, tiny_corpus):
+    """Cache hits are priced at the fast-tier rate — modeled QPS must rise."""
+    _, _, queries = tiny_corpus
+    out0 = _search(tiny_engine, queries)
+    out1 = _search(tiny_engine.with_cache(512 * RECORD), queries)
+    assert tiny_engine.modeled_qps(out1.stats) > tiny_engine.modeled_qps(out0.stats)
+    # without read overlap (W=1) every avoided slow read is ~100 us saved
+    assert tiny_engine.modeled_latency_us(
+        out1.stats, pipeline_depth=1
+    ) < tiny_engine.modeled_latency_us(out0.stats, pipeline_depth=1)
+
+
+def test_cached_gate_matches_oracle(tiny_engine, tiny_corpus):
+    """Full-loop check: the cached engine matches the NumPy oracle with the
+    same hot set, including the n_ios / n_cache_hits split."""
+    import jax.numpy as jnp
+
+    from repro.core import pq as pqm
+    from repro.core import search as searchm
+    from tests.test_search_oracle import oracle_search
+
+    corpus, labels, queries = tiny_corpus
+    queries = queries[:4]
+    eng = tiny_engine.with_cache(128 * RECORD)
+    out = _search(eng, queries)
+
+    n = corpus.shape[0]
+    b = queries.shape[0]
+    q = jnp.asarray(queries, jnp.float32)
+    lut = pqm.build_lut(eng.codec, q)
+    all_ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, n))
+    pq_d = np.asarray(searchm._adc_ids(lut, eng.codes, all_ids, False))
+    vecs = jnp.broadcast_to(eng.vectors[None], (b, n, corpus.shape[1]))
+    exact_d = np.asarray(searchm._exact_dist(q, vecs, False))
+    cached = np.asarray(eng.record_store.slot_of) >= 0
+    ora = oracle_search(
+        pq_dist=pq_d, exact_dist=exact_d, passes=np.asarray(labels) == 0,
+        full_nbrs=np.asarray(eng.record_store.neighbors),
+        mem_nbrs=np.asarray(eng.neighbor_store.neighbors),
+        entry=int(eng.medoid), mode="gate", L=64, W=4, K=10, cached=cached,
+    )
+    np.testing.assert_array_equal(np.asarray(out.ids), ora.ids)
+    np.testing.assert_array_equal(np.asarray(out.stats.n_ios), ora.n_ios)
+    np.testing.assert_array_equal(np.asarray(out.stats.n_cache_hits), ora.n_cache_hits)

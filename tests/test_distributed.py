@@ -107,6 +107,7 @@ def test_distributed_retrieve_step_runs_and_filters():
     """)
 
 
+@pytest.mark.slow  # jits a sharded model train step on 8 emulated devices
 def test_train_step_sharded_2x4():
     _run("""
     import dataclasses
@@ -151,6 +152,7 @@ def test_train_step_sharded_2x4():
     """)
 
 
+@pytest.mark.slow  # two full model forwards (sharded + replicated) in subprocesses
 def test_sharded_equals_single_device():
     """Numerical parity: the sharded loss equals the unsharded loss."""
     _run("""

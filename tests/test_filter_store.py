@@ -1,7 +1,12 @@
-"""Filter store predicates, including hypothesis property tests."""
+"""Filter store predicates, including seeded randomized property tests.
+
+The property tests were originally hypothesis-based; they are rewritten
+as seeded-parametrize pure-pytest tests so collection never depends on
+an optional package.
+"""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core.filter_store import (
     AndFilter,
@@ -28,30 +33,31 @@ def test_range_basic():
     assert got.tolist() == [[False, True, False]]
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.data())
-def test_subset_property(data):
+@pytest.mark.parametrize("seed", range(12))
+def test_subset_property(seed):
     """(q & node) == q  <=>  q's tags ⊆ node's tags — for random tag sets."""
+    rng = np.random.default_rng(seed)
     vocab = 70
-    node_tags = data.draw(st.lists(
-        st.lists(st.integers(0, vocab - 1), max_size=8), min_size=1, max_size=6,
-    ))
-    q_tags = data.draw(st.lists(st.integers(0, vocab - 1), max_size=4))
-    bits = pack_tags([sorted(set(t)) for t in node_tags], vocab)
+    n_nodes = 6  # fixed shape across seeds — one XLA compile, many value draws
+    node_tags = [
+        sorted(set(rng.integers(0, vocab, size=rng.integers(0, 9)).tolist()))
+        for _ in range(n_nodes)
+    ]
+    q_tags = rng.integers(0, vocab, size=rng.integers(0, 5)).tolist()
+    bits = pack_tags(node_tags, vocab)
     qbits = pack_tags([sorted(set(q_tags))], vocab)
     f = SubsetFilter(jnp.asarray(bits)).bind(jnp.asarray(qbits))
-    ids = jnp.arange(len(node_tags), dtype=jnp.int32)[None, :]
+    ids = jnp.arange(n_nodes, dtype=jnp.int32)[None, :]
     got = np.asarray(f(ids))[0]
     want = [set(q_tags) <= set(t) for t in node_tags]
     assert got.tolist() == want
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    labels=st.lists(st.integers(0, 4), min_size=4, max_size=40),
-    target=st.integers(0, 4),
-)
-def test_equality_property(labels, target):
+@pytest.mark.parametrize("seed", range(10))
+def test_equality_property(seed):
+    rng = np.random.default_rng(seed + 100)
+    labels = rng.integers(0, 5, size=24).tolist()  # fixed shape, varied values
+    target = int(rng.integers(0, 5))
     arr = jnp.asarray(labels, jnp.int32)
     f = EqualityFilter(arr).bind(jnp.asarray([target], jnp.int32))
     ids = jnp.arange(len(labels), dtype=jnp.int32)[None, :]

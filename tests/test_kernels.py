@@ -6,6 +6,9 @@ import pytest
 
 from repro.kernels import ops, ref
 
+# Pallas interpret mode on CPU takes >10 min for the full sweep — not tier-1.
+pytestmark = pytest.mark.slow
+
 RNG = np.random.default_rng(0)
 
 

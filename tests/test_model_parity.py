@@ -30,6 +30,7 @@ def _train_logits(params, cfg, batch):
     )
 
 
+@pytest.mark.slow  # jits a full train forward + T decode steps per arch
 @pytest.mark.parametrize("arch", PARITY_ARCHS)
 def test_decode_matches_train(arch):
     cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")

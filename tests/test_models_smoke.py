@@ -13,6 +13,9 @@ from repro.distributed.sharding import NULL_LAYOUT
 from repro.models import transformer as tfm
 from repro.models import zoo
 
+# 10 archs x (train + decode) jits ~2 min of large shapes — not tier-1.
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_train_step_smoke(arch):

@@ -1,0 +1,224 @@
+"""NumPy oracle of Algorithm 1 — mode parity and stats invariants.
+
+``oracle_search`` re-implements the jitted loop of ``core/search.py`` in
+plain Python/NumPy: sorted L-frontier with eviction, W-wide best-first
+dispatch, per-mode fetch/tunnel/result masks, visited set, exact-ranked
+result list.  The jitted loop must match it — ids exactly, distances to
+float tolerance, I/O counters exactly — in all five ``SearchConfig``
+modes.  PQ and exact distances are taken from the same jax computations
+the engine uses, so the oracle checks the *loop logic*, not float
+summation order.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SearchConfig
+from repro.core import pq as pqm
+from repro.core import search as searchm
+
+MODES = searchm.MODES
+INF = np.float32(3.4e38)
+
+
+@dataclasses.dataclass
+class OracleOut:
+    ids: np.ndarray  # (B, K)
+    dists: np.ndarray  # (B, K)
+    n_ios: np.ndarray  # (B,)
+    n_tunnels: np.ndarray
+    n_exact: np.ndarray
+    n_hops: np.ndarray
+    n_cache_hits: np.ndarray
+    n_expansions: np.ndarray  # valid dispatches (not a SearchStats field)
+
+
+def oracle_search(
+    *,
+    pq_dist,  # (B, N) PQ priority distances
+    exact_dist,  # (B, N) exact squared L2
+    passes,  # (N,) bool — filter predicate per node
+    full_nbrs,  # (N, R) slow-tier adjacency
+    mem_nbrs,  # (N, R_max) neighbor-store adjacency
+    entry: int,
+    mode: str,
+    L: int,
+    W: int,
+    K: int,
+    max_hops: int = 512,
+    cached=None,  # optional (N,) bool — cache-resident records
+) -> OracleOut:
+    b = pq_dist.shape[0]
+    cached = np.zeros(passes.shape[0], bool) if cached is None else cached
+    out = OracleOut(*[None] * 8)
+    out.ids = np.full((b, K), -1, np.int32)
+    out.dists = np.full((b, K), INF, np.float32)
+    for f in ("n_ios", "n_tunnels", "n_exact", "n_hops", "n_cache_hits",
+              "n_expansions"):
+        setattr(out, f, np.zeros((b,), np.int32))
+
+    per_query_rounds = np.zeros((b,), np.int64)
+    for q in range(b):
+        # frontier entries: [dist, id, expanded, seq] — seq breaks sort ties
+        # exactly like the stable argsort over [old slots, new candidates]
+        frontier = [[pq_dist[q, entry], entry, False, 0]]
+        seq = 1
+        visited = {entry}
+        results: list[tuple[float, int]] = []
+        rounds = 0
+        while any(not e[2] for e in frontier) and rounds < max_hops:
+            rounds += 1
+            frontier.sort(key=lambda e: (e[0], e[3]))
+            sel = [e for e in frontier if not e[2]][:W]
+            for e in sel:
+                e[2] = True
+            out.n_expansions[q] += len(sel)
+
+            fetched, tunneled, result_nodes, exact_nodes = [], [], [], []
+            for e in sel:
+                i = e[1]
+                p = bool(passes[i])
+                if mode == "unfiltered":
+                    f_, t_, r_, x_ = True, False, True, True
+                elif mode == "post":
+                    f_, t_, r_, x_ = True, False, p, True
+                elif mode == "early":
+                    f_, t_, r_, x_ = True, False, p, p
+                elif mode == "pre_naive":
+                    f_ = p or (i == entry)
+                    t_, r_, x_ = False, p, f_
+                else:  # gate
+                    f_, t_, r_, x_ = p, not p, p, p
+                if f_:
+                    fetched.append(i)
+                    if cached[i]:
+                        out.n_cache_hits[q] += 1
+                    else:
+                        out.n_ios[q] += 1
+                if t_:
+                    tunneled.append(i)
+                    out.n_tunnels[q] += 1
+                if r_:
+                    result_nodes.append(i)
+                if x_:
+                    out.n_exact[q] += 1
+
+            for i in result_nodes:
+                if all(i != rid for _, rid in results):
+                    results.append((float(exact_dist[q, i]), i))
+
+            # candidate neighbors in the loop's concatenation order:
+            # all fetched rows first (full adjacency), then tunnel rows
+            cand = [j for i in fetched for j in full_nbrs[i] if j >= 0]
+            if mode == "gate":
+                cand += [j for i in tunneled for j in mem_nbrs[i] if j >= 0]
+            fresh, seen_round = [], set()
+            for j in cand:
+                j = int(j)
+                if j in visited or j in seen_round:
+                    continue  # visited-set check + within-round first-occurrence
+                seen_round.add(j)
+                fresh.append(j)
+            visited.update(seen_round)
+            for j in fresh:
+                frontier.append([float(pq_dist[q, j]), j, False, seq])
+                seq += 1
+            frontier.sort(key=lambda e: (e[0], e[3]))
+            del frontier[L:]  # eviction: dropped nodes stay visited forever
+        per_query_rounds[q] = rounds
+
+        results.sort(key=lambda t: t[0])
+        for k, (d_, i) in enumerate(results[:K]):
+            out.ids[q, k] = i
+            out.dists[q, k] = d_
+
+    # n_hops increments globally: every query counts every round until the
+    # slowest query's frontier drains
+    out.n_hops[:] = per_query_rounds.max(initial=0)
+    return out
+
+
+@pytest.fixture(scope="module")
+def oracle_setup(tiny_engine, tiny_corpus):
+    corpus, labels, queries = tiny_corpus
+    queries = queries[:6]
+    eng = tiny_engine
+    b = queries.shape[0]
+    n = corpus.shape[0]
+    q = jnp.asarray(queries, jnp.float32)
+    lut = pqm.build_lut(eng.codec, q)
+    all_ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, n))
+    pq_d = np.asarray(searchm._adc_ids(lut, eng.codes, all_ids, False))
+    vecs = jnp.broadcast_to(eng.vectors[None], (b, n, corpus.shape[1]))
+    exact_d = np.asarray(searchm._exact_dist(q, vecs, False))
+    return dict(
+        engine=eng,
+        queries=queries,
+        labels=np.asarray(labels),
+        pq_dist=pq_d,
+        exact_dist=exact_d,
+        full_nbrs=np.asarray(eng.record_store.neighbors),
+        mem_nbrs=np.asarray(eng.neighbor_store.neighbors),
+        entry=int(eng.medoid),
+    )
+
+
+def _run_mode(s, mode, L=32, W=4, K=8):
+    eng = s["engine"]
+    kind, params = (None, None)
+    if mode != "unfiltered":
+        kind = "label"
+        params = np.zeros(s["queries"].shape[0], np.int32)
+    out = eng.search(
+        s["queries"], filter_kind=kind, filter_params=params,
+        search_config=SearchConfig(mode=mode, search_l=L, beam_width=W, result_k=K),
+    )
+    passes = (s["labels"] == 0) if mode != "unfiltered" else np.ones(
+        len(s["labels"]), bool
+    )
+    ora = oracle_search(
+        pq_dist=s["pq_dist"], exact_dist=s["exact_dist"], passes=passes,
+        full_nbrs=s["full_nbrs"], mem_nbrs=s["mem_nbrs"], entry=s["entry"],
+        mode=mode, L=L, W=W, K=K,
+    )
+    return out, ora
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_mode_matches_numpy_oracle(oracle_setup, mode):
+    out, ora = _run_mode(oracle_setup, mode)
+    np.testing.assert_array_equal(np.asarray(out.ids), ora.ids, err_msg=mode)
+    got_d = np.asarray(out.dists)
+    valid = ora.ids >= 0
+    np.testing.assert_allclose(got_d[valid], ora.dists[valid], rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(out.stats.n_ios), ora.n_ios)
+    np.testing.assert_array_equal(np.asarray(out.stats.n_tunnels), ora.n_tunnels)
+    np.testing.assert_array_equal(np.asarray(out.stats.n_exact), ora.n_exact)
+    np.testing.assert_array_equal(np.asarray(out.stats.n_cache_hits), 0)
+    np.testing.assert_array_equal(np.asarray(out.stats.n_hops), ora.n_hops)
+
+
+def test_gate_expansion_conservation(oracle_setup):
+    """Gate: every dispatched node is either fetched or tunneled."""
+    out, ora = _run_mode(oracle_setup, "gate")
+    ios = np.asarray(out.stats.n_ios)
+    tun = np.asarray(out.stats.n_tunnels)
+    np.testing.assert_array_equal(ios + tun, ora.n_expansions)
+
+
+def test_post_and_early_have_equal_ios(oracle_setup):
+    out_p, _ = _run_mode(oracle_setup, "post")
+    out_e, _ = _run_mode(oracle_setup, "early")
+    np.testing.assert_array_equal(
+        np.asarray(out_p.stats.n_ios), np.asarray(out_e.stats.n_ios)
+    )
+
+
+def test_unfiltered_has_zero_tunnels(oracle_setup):
+    out, _ = _run_mode(oracle_setup, "unfiltered")
+    np.testing.assert_array_equal(np.asarray(out.stats.n_tunnels), 0)
+    # ... and every dispatch is an I/O
+    _, ora = _run_mode(oracle_setup, "unfiltered")
+    np.testing.assert_array_equal(np.asarray(out.stats.n_ios), ora.n_expansions)
