@@ -36,10 +36,12 @@ print("building retrieval index ...")
 engine = GateANNEngine.build(
     corpus,
     config=EngineConfig(degree=24, build_l=48, pq_chunks=8, r_max=12,
-                        # hot-node record cache: 256 records stay device-
-                        # resident, so the medoid neighborhood every query
-                        # crosses never touches the slow tier
-                        cache_budget_bytes=256 * 4096),
+                        # adaptive hot-node record cache: 256 records stay
+                        # device-resident; online visit counters re-learn
+                        # the hot set from live traffic after every batch,
+                        # with a per-filter partition per category
+                        cache_budget_bytes=256 * 4096,
+                        cache_policy="adaptive", refresh_every=1),
     labels=labels,
 )
 params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
@@ -68,6 +70,12 @@ hits = float(np.mean(np.asarray(stats.n_cache_hits)))
 print(f"retrieval: {ios:.1f} slow-tier reads/query, {hits:.1f} cache hits/query, "
       f"{tun:.1f} tunnels/query (all retrieved passages satisfy category==3)")
 print(f"server io_report: {server.io_report()}")
+# a second retrieval pass of the same workload: the adaptive cache has
+# refreshed its hot set from the first batch's visit counters
+server.retrieve(reqs)
+rep = server.io_report()
+print(f"after adaptation: hit rate {rep['last_batch_hit_rate']:.2f} "
+      f"(refreshes={rep['cache_refreshes']}, partitions={rep['cache_partitions']})")
 print(f"generated {tokens.shape[1]} tokens per request in {time.time()-t0:.0f}s:")
 for i, row in enumerate(tokens):
     print(f"  request {i}: {row.tolist()}")

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.frontier import _dedup_mask
+
 INVALID = jnp.int32(-1)
 INF = jnp.float32(3.4e38)
 
@@ -138,9 +140,11 @@ def make_retrieve_step(
             vecs, disk_nbrs = fetch(jnp.where(fetch_mask, sel, INVALID))
             exact = jnp.sum((vecs - queries[:, None, :]) ** 2, axis=-1)
             exact = jnp.where(passes & fetch_mask, exact, INF)
-            # results insert
+            # results insert (dedup by id, exactly like fr.results_insert)
             cat_i = jnp.concatenate([res_ids, jnp.where(passes & fetch_mask, sel, INVALID)], 1)
             cat_d = jnp.concatenate([res_d, exact], 1)
+            cat_d = jnp.where(_dedup_mask(cat_i) | (cat_i < 0), INF, cat_d)
+            cat_i = jnp.where(cat_d >= INF, INVALID, cat_i)
             ordr = jnp.argsort(cat_d, axis=1)[:, :K_res]
             res_ids = jnp.take_along_axis(cat_i, ordr, axis=1)
             res_d = jnp.take_along_axis(cat_d, ordr, axis=1)
@@ -150,13 +154,18 @@ def make_retrieve_step(
             ) if cfg.mode == "gate" else jnp.full((b, W, r_max), INVALID)
 
             new = jnp.concatenate([disk_nbrs.reshape(b, -1), tun_nbrs.reshape(b, -1)], 1)
-            fresh = (new >= 0) & (~is_visited(vis, new))
+            # visited-set check + within-round first-occurrence dedup: the
+            # single-host loop gets the latter from fr.insert; without it a
+            # node reachable from two same-round expansions enters the
+            # frontier twice and is fetched twice (double I/O, dup results)
+            fresh = (new >= 0) & (~is_visited(vis, new)) & (~_dedup_mask(new))
             new = jnp.where(fresh, new, INVALID)
             vis, vis_n = push_visited(vis, vis_n, new)
             nd = jnp.where(new >= 0, _adc(lut, codes[jnp.maximum(new, 0)]), INF)
             ci = jnp.concatenate([f_ids, new], 1)
             cd = jnp.concatenate([f_d, nd], 1)
             ce = jnp.concatenate([f_exp, jnp.zeros_like(new, bool)], 1)
+            cd = jnp.where(_dedup_mask(ci), INF, cd)  # vs frontier residents
             ci = jnp.where(cd >= INF, INVALID, ci)  # dead slots carry no id
             o2 = jnp.argsort(cd, axis=1)[:, :L]
             f_ids = jnp.take_along_axis(ci, o2, axis=1)

@@ -5,7 +5,10 @@ predicate and any mode.  The engine owns the storage tiers of §3:
 
   fast tier ("memory"):   PQ codes, neighbor store, filter store
   cache tier:             hot-node record cache (optional — see
-                          ``EngineConfig.cache_budget_bytes``)
+                          ``EngineConfig.cache_budget_bytes``; static
+                          policies pick the hot set once at build time,
+                          ``cache_policy="adaptive"`` re-learns it online
+                          from live visit counters, per filter bucket)
   slow tier ("SSD"):      record store (full vectors + full adjacency)
 
 and exposes the paper's baselines through ``SearchConfig.mode``.
@@ -27,6 +30,7 @@ from repro.core import search as searchm
 from repro.core.filter_store import CheckFn, EqualityFilter, RangeFilter, SubsetFilter, match_all
 from repro.core.io_model import DEFAULT_COST_MODEL, IOCostModel
 from repro.core.neighbor_store import NeighborStore
+from repro.store.adaptive import ADAPTIVE_POLICY, AdaptiveRecordCache, filter_bucket
 from repro.store.cache import CachedRecordStore, select_hot_set
 from repro.store.vector_store import HostOffloadRecordStore, InMemoryRecordStore
 
@@ -40,8 +44,53 @@ class EngineConfig:
     r_max: int = 16  # in-memory neighbors per node (runtime knob)
     store_tier: str = "memory"  # memory | host
     cache_budget_bytes: int = 0  # hot-record cache size (0 disables the tier)
-    cache_policy: str = "visit_freq"  # visit_freq | bfs (see store/cache.py)
+    cache_policy: str = "visit_freq"  # visit_freq | bfs | adaptive
+    refresh_every: int = 4  # adaptive: batches between hot-set refreshes
+    ema_decay: float = 0.9  # adaptive: per-batch counter decay
+    # adaptive: LRU capacity of per-filter hot sets.  Each materialized
+    # partition holds its own cache_budget_bytes-sized block, so device
+    # residency is up to (1 + cache_partitions) x the budget once several
+    # filter buckets see traffic (memory_report's cache_device_bytes
+    # shows the true footprint).
+    cache_partitions: int = 4
     seed: int = 0
+
+
+def _make_cache_tier(backing, *, vectors, neighbors, medoid: int, config: EngineConfig):
+    """Wrap ``backing`` in the configured cache tier (or return it as-is)."""
+    if config.cache_budget_bytes <= 0:
+        return backing
+    if config.cache_policy == ADAPTIVE_POLICY:
+        cache = AdaptiveRecordCache.create(
+            backing,
+            vectors=vectors,
+            neighbors=neighbors,
+            budget_bytes=config.cache_budget_bytes,
+            medoid=medoid,
+            ema_decay=config.ema_decay,
+            refresh_every=config.refresh_every,
+            max_partitions=config.cache_partitions,
+            seed=config.seed,
+        )
+        # a budget below one record leaves the tier off
+        return cache if cache.n_slots > 0 else backing
+    hot = select_hot_set(
+        neighbors=neighbors,
+        medoid=medoid,
+        budget_bytes=config.cache_budget_bytes,
+        policy=config.cache_policy,
+        vectors=vectors,
+        seed=config.seed,
+    )
+    if hot.size:  # a budget below one record leaves the tier off
+        return CachedRecordStore.wrap(
+            backing,
+            vectors=vectors,
+            neighbors=neighbors,
+            hot_ids=hot,
+            policy=config.cache_policy,
+        )
+    return backing
 
 
 @dataclasses.dataclass
@@ -88,23 +137,13 @@ class GateANNEngine:
             record_store = HostOffloadRecordStore.create(vecs, graph.neighbors)
         else:
             record_store = InMemoryRecordStore(vectors=vecs, neighbors=graph.neighbors)
-        if config.cache_budget_bytes > 0:
-            hot = select_hot_set(
-                neighbors=graph.neighbors,
-                medoid=int(graph.medoid),
-                budget_bytes=config.cache_budget_bytes,
-                policy=config.cache_policy,
-                vectors=vecs,
-                seed=config.seed,
-            )
-            if hot.size:  # a budget below one record leaves the tier off
-                record_store = CachedRecordStore.wrap(
-                    record_store,
-                    vectors=vecs,
-                    neighbors=graph.neighbors,
-                    hot_ids=hot,
-                    policy=config.cache_policy,
-                )
+        record_store = _make_cache_tier(
+            record_store,
+            vectors=vecs,
+            neighbors=graph.neighbors,
+            medoid=int(graph.medoid),
+            config=config,
+        )
         filters = {}
         if labels is not None:
             filters["label"] = EqualityFilter(labels=jnp.asarray(labels, dtype=jnp.int32))
@@ -125,38 +164,45 @@ class GateANNEngine:
 
     # -- cache tier --------------------------------------------------------
     def with_cache(
-        self, budget_bytes: int, *, policy: str | None = None
+        self,
+        budget_bytes: int,
+        *,
+        policy: str | None = None,
+        refresh_every: int | None = None,
+        ema_decay: float | None = None,
+        cache_partitions: int | None = None,
     ) -> "GateANNEngine":
         """Re-wrap the slow tier at a new cache budget — no index rebuild.
 
         Like ``r_max``, the cache is a runtime knob: the graph, PQ codes
         and filter stores are shared with ``self``.  ``budget_bytes=0``
-        returns an engine with the cache tier removed.
+        returns an engine with the cache tier removed.  ``policy`` may be
+        a static policy (``visit_freq`` / ``bfs``) or ``adaptive``; the
+        remaining keywords override the adaptive knobs of ``EngineConfig``.
         """
-        policy = policy or self.config.cache_policy
         backing = self.record_store
-        if isinstance(backing, CachedRecordStore):
+        if isinstance(backing, (CachedRecordStore, AdaptiveRecordCache)):
             backing = backing.backing
-        store = backing
-        if budget_bytes > 0:
-            hot = select_hot_set(
-                neighbors=backing.neighbors,
-                medoid=int(self.medoid),
-                budget_bytes=budget_bytes,
-                policy=policy,
-                vectors=self.vectors,
-                seed=self.config.seed,
-            )
-            if hot.size:  # a budget below one record leaves the tier off
-                store = CachedRecordStore.wrap(
-                    backing,
-                    vectors=self.vectors,
-                    neighbors=backing.neighbors,
-                    hot_ids=hot,
-                    policy=policy,
-                )
         cfg = dataclasses.replace(
-            self.config, cache_budget_bytes=budget_bytes, cache_policy=policy
+            self.config,
+            cache_budget_bytes=budget_bytes,
+            cache_policy=policy or self.config.cache_policy,
+            refresh_every=(
+                self.config.refresh_every if refresh_every is None else refresh_every
+            ),
+            ema_decay=self.config.ema_decay if ema_decay is None else ema_decay,
+            cache_partitions=(
+                self.config.cache_partitions
+                if cache_partitions is None
+                else cache_partitions
+            ),
+        )
+        store = _make_cache_tier(
+            backing,
+            vectors=self.vectors,
+            neighbors=backing.neighbors,
+            medoid=int(self.medoid),
+            config=cfg,
         )
         return dataclasses.replace(self, config=cfg, record_store=store)
 
@@ -180,11 +226,24 @@ class GateANNEngine:
         q = jnp.asarray(queries, dtype=jnp.float32)
         lut = pqm.build_lut(self.codec, q)
         check = self.make_filter(filter_kind, filter_params)
+        store = self.record_store
         cached_mask = None
-        if isinstance(self.record_store, CachedRecordStore):
-            cached_mask = self.record_store.cached_mask_fn()
-        return searchm.filtered_search(
-            fetch=self.record_store.fetch_fn(),
+        visit_counts = None
+        bucket = None
+        adaptive = isinstance(store, AdaptiveRecordCache)
+        if adaptive:
+            # between-batch refresh: if the cadence came due and no caller
+            # (e.g. RAGServer) already refreshed, catch up before serving
+            store.maybe_refresh()
+            # route through the partition snapshot for this filter bucket
+            # and carry live visit counters through the loop
+            bucket = filter_bucket(filter_kind, filter_params)
+            store = store.store_for(bucket)
+            visit_counts = jnp.zeros((int(self.codes.shape[0]),), jnp.float32)
+        if isinstance(store, CachedRecordStore):
+            cached_mask = store.cached_mask_fn()
+        out = searchm.filtered_search(
+            fetch=store.fetch_fn(),
             neighbor_store=self.neighbor_store,
             filter_check=check,
             lut=lut,
@@ -193,7 +252,43 @@ class GateANNEngine:
             queries=q,
             config=cfg,
             cached_mask=cached_mask,
+            visit_counts=visit_counts,
         )
+        if adaptive:
+            # fold this batch's counters; the refresh itself runs between
+            # batches — either here at the next search's entry, or earlier
+            # via a serving layer calling maybe_refresh() off the critical
+            # path (RAGServer does, after every batch)
+            self.record_store.observe(bucket, out.visit_counts)
+        return out
+
+    def warm(
+        self,
+        queries: np.ndarray | jax.Array,
+        *,
+        filter_kind: str | None = None,
+        filter_params=None,
+        search_config: searchm.SearchConfig | None = None,
+    ) -> searchm.SearchOutput:
+        """Prime the adaptive cache: search, then refresh immediately.
+
+        On a static-cache (or uncached) engine this is just ``search``.
+        """
+        out = self.search(
+            queries,
+            filter_kind=filter_kind,
+            filter_params=filter_params,
+            search_config=search_config,
+        )
+        if isinstance(self.record_store, AdaptiveRecordCache):
+            self.record_store.refresh()
+        return out
+
+    def maybe_refresh(self) -> bool:
+        """Refresh the adaptive hot sets if the cadence is due."""
+        if isinstance(self.record_store, AdaptiveRecordCache):
+            return self.record_store.maybe_refresh()
+        return False
 
     # -- reporting ---------------------------------------------------------
     def memory_report(self) -> dict:
@@ -206,15 +301,32 @@ class GateANNEngine:
             "filter_store_bytes": {k: f.memory_bytes() for k, f in self.filters.items()},
         }
         store = self.record_store
-        if isinstance(store, CachedRecordStore):
+        if isinstance(store, (CachedRecordStore, AdaptiveRecordCache)):
             rep["cache_nodes"] = store.n_cached
             rep["cache_bytes"] = store.cache_bytes()
             rep["cache_device_bytes"] = store.device_bytes()
             rep["cache_policy"] = store.policy
+            if isinstance(store, AdaptiveRecordCache):
+                rep["cache_slots"] = store.n_slots
+                rep["cache_partitions"] = len(store.partitions)
+                rep["cache_refreshes"] = store.n_refreshes
             store = store.backing
         if isinstance(store, InMemoryRecordStore):
             rep["record_tier_bytes"] = store.record_bytes()
         return rep
+
+    def _refresh_amortized_us(
+        self, stats: searchm.SearchStats, cost_model: IOCostModel
+    ) -> float:
+        """Per-query share of adaptive hot-set refresh cost (0 if static)."""
+        store = self.record_store
+        if not isinstance(store, AdaptiveRecordCache):
+            return 0.0
+        return cost_model.refresh_amortized_us(
+            store.n_slots * store.last_refresh_sets,
+            store.refresh_every,
+            int(stats.n_ios.shape[0]),
+        )
 
     def modeled_qps(
         self, stats: searchm.SearchStats, *, n_threads: int = 32,
@@ -226,6 +338,7 @@ class GateANNEngine:
             n_threads=n_threads,
             n_exact=float(jnp.mean(stats.n_exact)),
             n_cache_hits=float(jnp.mean(stats.n_cache_hits)),
+            refresh_amortized_us=self._refresh_amortized_us(stats, cost_model),
         )
 
     def modeled_latency_us(
@@ -238,6 +351,7 @@ class GateANNEngine:
             float(jnp.mean(stats.n_exact)),
             pipeline_depth=pipeline_depth,
             n_cache_hits=float(jnp.mean(stats.n_cache_hits)),
+            refresh_amortized_us=self._refresh_amortized_us(stats, cost_model),
         )
 
 

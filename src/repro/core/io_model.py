@@ -37,10 +37,29 @@ class IOCostModel:
     list_mgmt_us: float = 1.3        # frontier maintenance per expanded node
     iops_ceiling: float = 430_000.0  # aggregate CPU-side I/O processing budget
     pipeline_depth: int = 32         # W — concurrent in-flight reads
+    refresh_us_per_record: float = 0.5  # adaptive cache: counter top-k +
+                                     #   record upload per hot slot, paid
+                                     #   once per refresh (amortized below)
+
+    def refresh_cost_us(self, n_records: float) -> float:
+        """One adaptive hot-set refresh: re-materialize ``n_records`` slots."""
+        return float(n_records) * self.refresh_us_per_record
+
+    def refresh_amortized_us(self, n_records: float, refresh_every: int,
+                             batch_queries: int) -> float:
+        """Per-query share of the refresh cost at a given cadence.
+
+        A refresh runs once per ``refresh_every`` batches of
+        ``batch_queries`` queries, off the critical path (between
+        batches), so its cost is amortized across the interval.
+        """
+        interval = max(refresh_every, 1) * max(batch_queries, 1)
+        return self.refresh_cost_us(n_records) / interval
 
     def latency_us(self, n_ios: float, n_tunnels: float, n_exact: float | None = None,
                    pipeline_depth: int | None = None,
-                   n_cache_hits: float = 0.0) -> float:
+                   n_cache_hits: float = 0.0,
+                   refresh_amortized_us: float = 0.0) -> float:
         """Modeled single-thread per-query latency.
 
         I/O latency is overlapped across W in-flight reads (PipeANN-style):
@@ -59,11 +78,13 @@ class IOCostModel:
             + n_tunnels * self.tunnel_us
             + n_cache_hits * self.cache_hit_us
             + (fetched + n_tunnels) * self.list_mgmt_us
+            + refresh_amortized_us
         )
         return float(device + cpu)
 
     def qps(self, n_ios: float, n_tunnels: float, n_threads: int = 32,
-            n_exact: float | None = None, n_cache_hits: float = 0.0) -> float:
+            n_exact: float | None = None, n_cache_hits: float = 0.0,
+            refresh_amortized_us: float = 0.0) -> float:
         """Modeled throughput: min(CPU-scaling limit, aggregate IOPS ceiling).
 
         Only slow-tier reads count against the IOPS ceiling — cache hits
@@ -72,7 +93,8 @@ class IOCostModel:
         if n_ios <= 0 and n_tunnels <= 0 and n_cache_hits <= 0:
             return 0.0  # degenerate query that did no work
         lat_s = max(
-            self.latency_us(n_ios, n_tunnels, n_exact, n_cache_hits=n_cache_hits), 1e-3
+            self.latency_us(n_ios, n_tunnels, n_exact, n_cache_hits=n_cache_hits,
+                            refresh_amortized_us=refresh_amortized_us), 1e-3
         ) / 1e6
         cpu_bound = n_threads / lat_s
         if n_ios > 0:

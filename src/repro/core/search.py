@@ -72,6 +72,9 @@ class SearchOutput(NamedTuple):
     ids: jax.Array  # (B, K) result ids (filter-passing, exact-ranked)
     dists: jax.Array  # (B, K)
     stats: SearchStats
+    # (N,) per-node fetch-path visit counts accumulated on top of the
+    # caller-supplied ``visit_counts`` array; None when counting is off.
+    visit_counts: jax.Array | None = None
 
 
 def _adc_ids(lut: jax.Array, codes: jax.Array, ids: jax.Array, use_kernel: bool) -> jax.Array:
@@ -114,6 +117,7 @@ def filtered_search(
     queries: jax.Array,  # (B, D) full-precision queries
     config: SearchConfig,
     cached_mask: CachedMaskFn | None = None,  # (B, W) ids -> cache-hit mask
+    visit_counts: jax.Array | None = None,  # (N,) f32 running fetch counters
 ) -> SearchOutput:
     b, d = queries.shape
     n = codes.shape[0]
@@ -162,14 +166,20 @@ def filtered_search(
         n_hops=jnp.zeros((b,), jnp.int32),
         n_cache_hits=jnp.zeros((b,), jnp.int32),
     )
-    state0 = (frontier, results, visited, stats0)
+    # Optional online frequency counting for the adaptive cache: the (N,)
+    # counter array is loop-carried device state — each round scatter-adds
+    # the fetch-path dispatches (the population a record cache can serve).
+    # ``None`` keeps the extra state out of the trace entirely.
+    track_visits = visit_counts is not None
+    vc0 = visit_counts if track_visits else jnp.zeros((0,), jnp.float32)
+    state0 = (frontier, results, visited, stats0, vc0)
 
     def cond(state):
-        frontier, _, _, stats = state
+        frontier, _, _, stats, _ = state
         return jnp.any(fr.has_unexpanded(frontier)) & jnp.all(stats.n_hops < config.max_hops)
 
     def body(state):
-        frontier, results, visited, stats = state
+        frontier, results, visited, stats, vc = state
         sel_ids, slots, valid = fr.best_unexpanded(frontier, W)
         frontier = fr.mark_expanded(frontier, slots, valid)
 
@@ -211,6 +221,11 @@ def filtered_search(
             hit_mask = cached_mask(sel_ids) & fetch_mask
         slow_mask = fetch_mask & (~hit_mask)
 
+        if track_visits:
+            vc = vc.at[jnp.maximum(sel_ids, 0).ravel()].add(
+                jnp.where(fetch_mask, 1.0, 0.0).ravel()
+            )
+
         # ---- fetch path: record read + exact distance + full-R expansion
         fetch_ids = jnp.where(fetch_mask, sel_ids, fr.INVALID)
         vecs, disk_nbrs = fetch(fetch_ids)  # (B, W, D), (B, W, R)
@@ -243,7 +258,12 @@ def filtered_search(
             n_hops=stats.n_hops + 1,
             n_cache_hits=stats.n_cache_hits + jnp.sum(hit_mask, axis=1).astype(jnp.int32),
         )
-        return frontier, results, visited, stats
+        return frontier, results, visited, stats, vc
 
-    frontier, results, visited, stats = jax.lax.while_loop(cond, body, state0)
-    return SearchOutput(ids=results.ids, dists=results.dists, stats=stats)
+    frontier, results, visited, stats, vc = jax.lax.while_loop(cond, body, state0)
+    return SearchOutput(
+        ids=results.ids,
+        dists=results.dists,
+        stats=stats,
+        visit_counts=vc if track_visits else None,
+    )

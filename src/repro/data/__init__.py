@@ -1,4 +1,9 @@
-from repro.data.synthetic import make_bigann_like, make_deep_like, make_queries
+from repro.data.synthetic import (
+    make_bigann_like,
+    make_deep_like,
+    make_queries,
+    make_zipfian_queries,
+)
 from repro.data.labels import (
     uniform_labels,
     zipf_labels,
@@ -12,6 +17,7 @@ __all__ = [
     "make_bigann_like",
     "make_deep_like",
     "make_queries",
+    "make_zipfian_queries",
     "uniform_labels",
     "zipf_labels",
     "kmeans_correlated_labels",

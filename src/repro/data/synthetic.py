@@ -41,3 +41,36 @@ def make_queries(corpus: np.ndarray, n_queries: int, seed: int = 1, noise: float
     scale = np.abs(corpus).mean() * noise
     q = corpus[idx] + rng.normal(0.0, scale, size=(n_queries, corpus.shape[1]))
     return q.astype(np.float32)
+
+
+def make_zipfian_queries(
+    corpus: np.ndarray,
+    n_queries: int,
+    *,
+    n_centers: int = 32,
+    alpha: float = 1.1,
+    seed: int = 1,
+    noise: float = 0.05,
+    mask: np.ndarray | None = None,
+):
+    """Skewed production-style workload: queries cluster around a few hot
+    corpus points with Zipf(alpha) popularity.
+
+    Center k (of ``n_centers`` points drawn from ``mask``-selected rows,
+    or the whole corpus) is chosen with probability ∝ 1/(k+1)^alpha, so
+    a handful of regions receive most of the traffic — the regime where
+    an adaptive cache beats a static, filter-blind hot set.
+    """
+    rng = np.random.default_rng(seed)
+    pool = np.flatnonzero(mask) if mask is not None else np.arange(corpus.shape[0])
+    if pool.size == 0:
+        raise ValueError("make_zipfian_queries: mask selects no corpus rows")
+    if n_centers <= 0:
+        raise ValueError(f"make_zipfian_queries: n_centers must be > 0, got {n_centers}")
+    centers = rng.choice(pool, size=min(n_centers, pool.size), replace=False)
+    w = 1.0 / np.arange(1, centers.size + 1) ** alpha
+    p = w / w.sum()
+    picks = centers[rng.choice(centers.size, size=n_queries, p=p)]
+    scale = np.abs(corpus).mean() * noise
+    q = corpus[picks] + rng.normal(0.0, scale, size=(n_queries, corpus.shape[1]))
+    return q.astype(np.float32)

@@ -13,7 +13,11 @@ Serving is where the hot-node cache tier earns its keep: production
 query streams concentrate on the medoid neighborhood, so build the
 engine with ``EngineConfig.cache_budget_bytes`` (or re-wrap with
 ``engine.with_cache``) and the server's cumulative ``io_report`` shows
-the fraction of record fetches that never touched the slow tier.
+the fraction of record fetches that never touched the slow tier.  With
+``cache_policy="adaptive"`` the server also drives the cache control
+loop: after every batch it triggers the (cheap, between-batch) hot-set
+refresh check, and ``io_report`` reports how the cache is adapting —
+refresh count, live filter partitions, and the hit rate trend.
 """
 from __future__ import annotations
 
@@ -29,6 +33,7 @@ from repro.core.engine import GateANNEngine
 from repro.core.search import SearchConfig
 from repro.distributed.sharding import Layout
 from repro.models import transformer as tfm
+from repro.store.adaptive import AdaptiveRecordCache
 
 
 @dataclasses.dataclass
@@ -52,23 +57,36 @@ class RAGServer:
     served_ios: int = 0
     served_tunnels: int = 0
     served_cache_hits: int = 0
+    # hit rate of the most recent batch — shows cache adaptation over time
+    last_batch_hit_rate: float = 0.0
 
     def _account(self, stats):
         self.served_queries += int(np.asarray(stats.n_ios).shape[0])
-        self.served_ios += int(np.sum(np.asarray(stats.n_ios)))
+        ios = int(np.sum(np.asarray(stats.n_ios)))
+        hits = int(np.sum(np.asarray(stats.n_cache_hits)))
+        self.served_ios += ios
         self.served_tunnels += int(np.sum(np.asarray(stats.n_tunnels)))
-        self.served_cache_hits += int(np.sum(np.asarray(stats.n_cache_hits)))
+        self.served_cache_hits += hits
+        self.last_batch_hit_rate = hits / max(ios + hits, 1)
 
     def io_report(self) -> dict:
         """Lifetime tier mix: how many record fetches the cache absorbed."""
         fetches = self.served_ios + self.served_cache_hits
-        return {
+        rep = {
             "queries": self.served_queries,
             "slow_tier_reads": self.served_ios,
             "cache_hits": self.served_cache_hits,
             "tunnels": self.served_tunnels,
             "cache_hit_rate": self.served_cache_hits / max(fetches, 1),
+            "last_batch_hit_rate": self.last_batch_hit_rate,
         }
+        store = getattr(self.engine, "record_store", None)
+        if isinstance(store, AdaptiveRecordCache):
+            rep["cache_policy"] = store.policy
+            rep["cache_refreshes"] = store.n_refreshes
+            rep["cache_partitions"] = len(store.partitions)
+            rep["cache_slots"] = store.n_slots
+        return rep
 
     def retrieve(self, requests: list[RAGRequest]):
         q = np.stack([r.query_vec for r in requests])
@@ -82,6 +100,9 @@ class RAGServer:
             q, filter_kind=kind, filter_params=params, search_config=self.search_config
         )
         self._account(out.stats)
+        # adaptive cache maintenance runs between batches, off the
+        # retrieval critical path (engine.search already observed counts)
+        self.engine.maybe_refresh()
         return np.asarray(out.ids), out.stats
 
     def build_prompts(self, requests: list[RAGRequest], retrieved_ids: np.ndarray):

@@ -12,8 +12,16 @@ from repro.store.cache import (
     select_hot_set,
     visit_freq_hot_set,
 )
+from repro.store.adaptive import (
+    ADAPTIVE_POLICY,
+    AdaptiveRecordCache,
+    filter_bucket,
+)
 
 __all__ = [
+    "ADAPTIVE_POLICY",
+    "AdaptiveRecordCache",
+    "filter_bucket",
     "InMemoryRecordStore",
     "ShardedRecordStore",
     "HostOffloadRecordStore",

@@ -1,0 +1,273 @@
+"""Adaptive, filter-aware record cache — the static hot set made a control loop.
+
+The static ``CachedRecordStore`` (store/cache.py) picks its hot set once,
+from *unfiltered* sample traversals.  That is the wrong population under a
+selective predicate: gate-mode fetches are drawn from the filter-passing
+nodes only, so a cache populated for the unfiltered visit distribution
+thrashes exactly where filtered search pays the most I/O.  This module
+closes the loop:
+
+  * **online frequency counting** — the search loop carries an (N,)
+    counter array as device state and scatter-adds each round's
+    fetch-path dispatches (``filtered_search(visit_counts=...)``); no
+    Python in the hot path.  Batch counts are folded into an EMA
+    (``counts = decay * counts + batch``) so the hot set tracks the
+    *recent* workload and old regimes age out.
+  * **periodic refresh** — ``refresh()`` re-materializes the
+    device-resident hot set from the live counters under the same
+    ``cache_budget_bytes``.  Every materialization packs exactly
+    ``n_slots`` rows (zero-padded), so refreshes never change jit shapes
+    and therefore never retrace the search loop.
+  * **per-filter hot sets** — a small LRU of (filter-kind, param-bucket)
+    -> partition, each with its own counters and its own materialized hot
+    set.  A selective label predicate gets a cache partition populated by
+    *its* fetch distribution instead of polluting (and being polluted by)
+    the global one.  Note each materialized partition is a full
+    ``budget_bytes`` block: device residency is up to
+    ``(1 + max_partitions) x budget`` (``device_bytes()`` reports the
+    true footprint).
+
+Results stay bit-identical to the uncached engine by construction: the
+cache only reroutes record fetches between the slow tier (``n_ios``) and
+the cache tier (``n_cache_hits``) — the I/O-conservation property tests
+enforce this for every budget / policy / refresh cadence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.store.cache import CachedRecordStore, record_nbytes, select_hot_set
+
+ADAPTIVE_POLICY = "adaptive"
+
+
+def filter_bucket(kind: str | None, params) -> tuple | None:
+    """Hashable (filter-kind, param-bucket) partition key; None = global.
+
+    Buckets are deliberately coarse — a partition should capture a query
+    *population* (e.g. "label == 3", "norm in bin 7"), not one batch:
+
+      * equality — the batch's most common target label.
+      * range    — (lo, hi) rounded to 3 significant decimals (batch mean).
+      * subset   — the bit-pattern of the batch's first query tags.
+    """
+    if kind is None or params is None:
+        return None
+    p = np.asarray(params)
+    if kind == "label":
+        vals, counts = np.unique(p.astype(np.int64), return_counts=True)
+        return (kind, int(vals[np.argmax(counts)]))
+    if kind == "range":
+        # params is a (lo, hi) pair exactly as RangeFilter.bind unpacks it:
+        # a 2-tuple of scalars/arrays, or an array whose axis 0 is (lo, hi)
+        lo, hi = p[0], p[1]
+        return (kind, round(float(np.mean(lo)), 3), round(float(np.mean(hi)), 3))
+    if kind == "tags":
+        row = p[0] if p.ndim > 1 else p
+        return (kind, row.astype(np.uint32).tobytes())
+    return (kind, p.tobytes())
+
+
+@dataclasses.dataclass
+class _Partition:
+    counts: jax.Array  # (N,) f32 EMA of this filter bucket's fetches
+    store: CachedRecordStore | None = None  # materialized at refresh
+    dirty: bool = True  # saw traffic since its store was last materialized
+
+
+@dataclasses.dataclass
+class AdaptiveRecordCache:
+    """Mutable cache controller; the engine routes fetches through it.
+
+    Searches read from an immutable ``CachedRecordStore`` snapshot (the
+    partition's if one is materialized for the query's filter bucket, the
+    global one otherwise); ``observe`` folds the returned visit counters
+    into the EMAs; ``refresh`` republishes the snapshots from the live
+    counters.  Mutation happens only between searches, never inside jit.
+    """
+
+    backing: Any  # slow-tier record store
+    vectors: jax.Array  # (N, D) full records for re-materialization
+    neighbors: jax.Array  # (N, R)
+    budget_bytes: int
+    ema_decay: float = 0.9
+    refresh_every: int = 4  # batches between refreshes (0 = manual only)
+    max_partitions: int = 4  # LRU capacity for per-filter hot sets
+    seed_hot_ids: np.ndarray | None = None  # cold-start hot set
+
+    counts: jax.Array = None  # (N,) f32 global EMA
+    partitions: "OrderedDict[tuple, _Partition]" = None
+    global_store: CachedRecordStore = None
+    n_refreshes: int = 0
+    batches_since_refresh: int = 0
+    last_refresh_sets: int = 1  # hot sets rebuilt by the latest refresh
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def create(
+        cls,
+        backing: Any,
+        *,
+        vectors,
+        neighbors,
+        budget_bytes: int,
+        medoid: int,
+        ema_decay: float = 0.9,
+        refresh_every: int = 4,
+        max_partitions: int = 4,
+        seed: int = 0,
+    ) -> "AdaptiveRecordCache":
+        vecs = jnp.asarray(vectors, jnp.float32)
+        nbrs = jnp.asarray(neighbors, jnp.int32)
+        # cold start: the static visit_freq hot set — the best filter-blind
+        # guess until real traffic populates the counters
+        seed_hot = select_hot_set(
+            neighbors=nbrs, medoid=medoid, budget_bytes=budget_bytes,
+            policy="visit_freq", vectors=vecs, seed=seed,
+        )
+        self = cls(
+            backing=backing,
+            vectors=vecs,
+            neighbors=nbrs,
+            budget_bytes=int(budget_bytes),
+            ema_decay=float(ema_decay),
+            refresh_every=int(refresh_every),
+            max_partitions=int(max_partitions),
+            seed_hot_ids=np.asarray(seed_hot, np.int32),
+        )
+        self.counts = jnp.zeros((nbrs.shape[0],), jnp.float32)
+        self.partitions = OrderedDict()
+        self.global_store = self._materialize(self.seed_hot_ids)
+        return self
+
+    @property
+    def n_slots(self) -> int:
+        d = int(self.vectors.shape[1])
+        r = int(self.neighbors.shape[1])
+        n = int(self.neighbors.shape[0])
+        return min(self.budget_bytes // record_nbytes(d, r), n)
+
+    @property
+    def policy(self) -> str:
+        return ADAPTIVE_POLICY
+
+    # -- the read path (immutable snapshots, safe inside jit) --------------
+    def store_for(self, bucket: tuple | None) -> CachedRecordStore:
+        """The snapshot serving this filter bucket (LRU-touches it)."""
+        part = self.partitions.get(bucket) if bucket is not None else None
+        if part is not None:
+            self.partitions.move_to_end(bucket)
+            if part.store is not None:
+                return part.store
+        return self.global_store
+
+    # -- the control loop --------------------------------------------------
+    def observe(self, bucket: tuple | None, batch_counts: jax.Array) -> None:
+        """Fold one batch's visit counters into the EMAs (device math)."""
+        bc = jnp.asarray(batch_counts, jnp.float32)
+        self.counts = self.ema_decay * self.counts + bc
+        if bucket is not None:
+            part = self.partitions.get(bucket)
+            if part is None:
+                part = _Partition(counts=jnp.zeros_like(self.counts))
+                self.partitions[bucket] = part
+                while len(self.partitions) > self.max_partitions:
+                    self.partitions.popitem(last=False)  # evict LRU
+            part.counts = self.ema_decay * part.counts + bc
+            part.dirty = True
+            self.partitions.move_to_end(bucket)
+        self.batches_since_refresh += 1
+
+    def _materialize(self, hot_ids: np.ndarray) -> CachedRecordStore:
+        """A snapshot with a fixed ``n_slots``-row block (device gather —
+        O(n_slots) per refresh, never a corpus round-trip, never a
+        retrace)."""
+        return CachedRecordStore.wrap(
+            self.backing,
+            vectors=self.vectors,
+            neighbors=self.neighbors,
+            hot_ids=hot_ids,
+            policy=ADAPTIVE_POLICY,
+            n_slots=self.n_slots,
+        )
+
+    def _hot_from_counts(self, counts: jax.Array) -> np.ndarray:
+        """Top-``n_slots`` ids by live counter, seed-padded for cold slots.
+
+        O(N + k log k): argpartition isolates the k winners, then only
+        those are sorted (count desc, id asc for determinism) — a full
+        corpus argsort per refreshed set would dominate the between-batch
+        window at large N.
+        """
+        c = np.asarray(counts)
+        k = min(self.n_slots, c.size)
+        cand = np.argpartition(-c, k - 1)[:k] if 0 < k < c.size else np.arange(c.size)[:k]
+        order = cand[np.lexsort((cand, -c[cand]))]
+        hot = order[c[order] > 0].astype(np.int32)
+        if hot.size < self.n_slots and self.seed_hot_ids is not None:
+            extra = self.seed_hot_ids[~np.isin(self.seed_hot_ids, hot)]
+            hot = np.concatenate([hot, extra[: self.n_slots - hot.size]])
+        return hot
+
+    def refresh(self) -> None:
+        """Re-materialize the stale hot sets from the live counters.
+
+        Only the global set and *dirty* partitions (traffic since their
+        last materialization) are rebuilt — an idle partition keeps its
+        snapshot for free.  ``last_refresh_sets`` records how many sets
+        the refresh actually rebuilt, for honest cost modeling.
+        """
+        sets = 1
+        self.global_store = self._materialize(self._hot_from_counts(self.counts))
+        for part in self.partitions.values():
+            if part.dirty or part.store is None:
+                part.store = self._materialize(self._hot_from_counts(part.counts))
+                part.dirty = False
+                sets += 1
+        self.last_refresh_sets = sets
+        self.n_refreshes += 1
+        self.batches_since_refresh = 0
+
+    def maybe_refresh(self) -> bool:
+        """Refresh if the cadence is due; returns whether it ran."""
+        if self.refresh_every > 0 and self.batches_since_refresh >= self.refresh_every:
+            self.refresh()
+            return True
+        return False
+
+    # -- reporting ---------------------------------------------------------
+    def n_materialized(self) -> int:
+        return 1 + sum(1 for p in self.partitions.values() if p.store is not None)
+
+    def device_bytes(self) -> int:
+        """Snapshot blocks + counters + slot maps actually held on device."""
+        per_store = self.global_store.device_bytes()
+        n = int(self.neighbors.shape[0])
+        counters = (1 + len(self.partitions)) * n * 4
+        return self.n_materialized() * per_store + counters
+
+    def cache_bytes(self) -> int:
+        return self.global_store.cache_bytes()
+
+    @property
+    def n_cached(self) -> int:
+        return self.global_store.n_cached
+
+    def hot_ids(self) -> np.ndarray:
+        return self.global_store.hot_ids()
+
+    # -- passthroughs (engine/test code reaches the backing arrays) --------
+    def fetch_fn(self):
+        return self.global_store.fetch_fn()
+
+    def cached_mask_fn(self):
+        return self.global_store.cached_mask_fn()
+
+    def record_bytes(self) -> int:
+        return self.backing.record_bytes()

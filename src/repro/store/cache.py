@@ -176,22 +176,45 @@ class CachedRecordStore:
         neighbors: np.ndarray | jax.Array,
         hot_ids: np.ndarray,
         policy: str = "visit_freq",
+        n_slots: int | None = None,
     ) -> "CachedRecordStore":
-        """Cache ``hot_ids`` rows of the full (vectors, neighbors) arrays."""
+        """Cache ``hot_ids`` rows of the full (vectors, neighbors) arrays.
+
+        With ``n_slots``, the cache block is truncated/zero-padded to
+        exactly that many rows (surplus rows stay unmapped — ``slot_of``
+        never points at them), so repeated wraps at one budget produce
+        identically-shaped arrays and never retrace the jitted search
+        loop — the adaptive cache refreshes through this path.  The hot
+        rows are gathered on device, so a refresh costs O(n_slots), not
+        a corpus round-trip.
+        """
         vecs = jnp.asarray(vectors, jnp.float32)
         nbrs = jnp.asarray(neighbors, jnp.int32)
         hot = np.asarray(hot_ids, np.int32)
+        if n_slots is not None:
+            hot = hot[:n_slots]
         n = nbrs.shape[0]
         slot_of = np.full((n,), -1, np.int32)
         slot_of[hot] = np.arange(hot.size, dtype=np.int32)
         # an empty hot set keeps one dummy row (never hit: slot_of is all
         # -1) so the jit-side gather always has a non-empty operand
         rows = jnp.asarray(hot) if hot.size else jnp.zeros((1,), jnp.int32)
+        cache_vecs = vecs[rows]
+        cache_nbrs = nbrs[rows]
+        target = max(n_slots, 1) if n_slots is not None else int(cache_vecs.shape[0])
+        pad = target - int(cache_vecs.shape[0])
+        if pad > 0:
+            cache_vecs = jnp.concatenate(
+                [cache_vecs, jnp.zeros((pad, vecs.shape[1]), jnp.float32)]
+            )
+            cache_nbrs = jnp.concatenate(
+                [cache_nbrs, jnp.full((pad, nbrs.shape[1]), -1, jnp.int32)]
+            )
         return cls(
             backing=backing,
             slot_of=jnp.asarray(slot_of),
-            cache_vectors=vecs[rows],
-            cache_neighbors=nbrs[rows],
+            cache_vectors=cache_vecs,
+            cache_neighbors=cache_nbrs,
             policy=policy,
         )
 

@@ -18,8 +18,10 @@ def pytest_configure(config):
     )
 
 
-@pytest.fixture(scope="session")
-def tiny_corpus():
+# Canonical tiny setup — plain functions so non-pytest callers (e.g. the
+# recall-pin regenerator in test_recall_regression.py) build the *same*
+# corpus/engine the session fixtures use and can never drift from them.
+def make_tiny_corpus():
     from repro.data import make_bigann_like, make_queries, uniform_labels
 
     n, d = 2000, 24
@@ -29,19 +31,28 @@ def tiny_corpus():
     return corpus, labels, queries
 
 
-@pytest.fixture(scope="session")
-def tiny_engine(tiny_corpus):
-    """One engine for every module — the Vamana build dominates tier-1
-    setup time, so it runs once per session (N/D/L/W kept small)."""
+def make_tiny_engine(corpus, labels):
     from repro.core import EngineConfig, GateANNEngine
 
-    corpus, labels, _ = tiny_corpus
     return GateANNEngine.build(
         corpus,
         config=EngineConfig(degree=20, build_l=40, pq_chunks=8, r_max=10),
         labels=labels,
         attributes=np.linalg.norm(corpus, axis=1).astype(np.float32),
     )
+
+
+@pytest.fixture(scope="session")
+def tiny_corpus():
+    return make_tiny_corpus()
+
+
+@pytest.fixture(scope="session")
+def tiny_engine(tiny_corpus):
+    """One engine for every module — the Vamana build dominates tier-1
+    setup time, so it runs once per session (N/D/L/W kept small)."""
+    corpus, labels, _ = tiny_corpus
+    return make_tiny_engine(corpus, labels)
 
 
 @pytest.fixture(scope="session")

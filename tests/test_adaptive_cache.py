@@ -1,0 +1,223 @@
+"""Adaptive cache subsystem: counters, refresh, partitions, serving loop.
+
+The invariant that matters everywhere: adaptivity changes *accounting
+only*.  Result ids/dists are bit-identical to the uncached engine at any
+budget, refresh cadence, or partition state — the hot set may move under
+the search loop between batches but never inside one.
+"""
+import numpy as np
+import pytest
+
+from repro.core import SearchConfig
+from repro.store import AdaptiveRecordCache, CachedRecordStore, filter_bucket
+
+RECORD = 4096
+
+
+def _search(engine, queries, mode="gate", L=64, W=4, target=0):
+    tgt = np.full(queries.shape[0], target, np.int32)
+    return engine.search(
+        queries, filter_kind="label", filter_params=tgt,
+        search_config=SearchConfig(mode=mode, search_l=L, beam_width=W),
+    )
+
+
+@pytest.fixture()
+def adaptive_engine(tiny_engine):
+    """Fresh adaptive engine per test — the cache is stateful."""
+    return tiny_engine.with_cache(128 * RECORD, policy="adaptive",
+                                  refresh_every=2)
+
+
+def test_visit_counts_conserve_fetches(adaptive_engine, tiny_engine, tiny_corpus):
+    """The loop-carried counters count exactly the fetch-path dispatches:
+    sum(counts) == sum(n_ios + n_cache_hits), and (in gate mode) only
+    filter-passing nodes are ever counted."""
+    corpus, labels, queries = tiny_corpus
+    out = _search(adaptive_engine, queries)
+    counts = np.asarray(adaptive_engine.record_store.counts)
+    fetched = int(np.sum(np.asarray(out.stats.n_ios))) + int(
+        np.sum(np.asarray(out.stats.n_cache_hits))
+    )
+    assert int(counts.sum()) == fetched
+    assert (np.asarray(labels)[counts > 0] == 0).all()
+
+
+def test_adaptive_ids_identical_across_batches(adaptive_engine, tiny_engine,
+                                               tiny_corpus):
+    """Refreshes between batches must never change results — only move
+    fetches between the slow tier and the cache tier."""
+    _, _, queries = tiny_corpus
+    base = _search(tiny_engine, queries)
+    base_ios = np.asarray(base.stats.n_ios)
+    # refresh_every=2, refresh runs lazily at search entry: batches 3 and
+    # 5 find the cadence due, so 5 batches cross two refresh boundaries
+    for batch in range(5):
+        out = _search(adaptive_engine, queries)
+        np.testing.assert_array_equal(
+            np.asarray(out.ids), np.asarray(base.ids), err_msg=f"batch={batch}"
+        )
+        np.testing.assert_allclose(
+            np.asarray(out.dists), np.asarray(base.dists), rtol=1e-6
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out.stats.n_ios) + np.asarray(out.stats.n_cache_hits),
+            base_ios, err_msg=f"batch={batch}",
+        )
+    assert adaptive_engine.record_store.n_refreshes == 2
+
+
+def test_adaptation_beats_static_on_repeated_workload(tiny_engine, tiny_corpus):
+    """After warming on the live workload, the adaptive hot set must hit
+    at least as often as the static filter-blind one at the same budget
+    (and strictly more on this selective repeated workload)."""
+    _, _, queries = tiny_corpus
+    static = tiny_engine.with_cache(128 * RECORD, policy="visit_freq")
+    adapt = tiny_engine.with_cache(128 * RECORD, policy="adaptive")
+    adapt.warm(queries, filter_kind="label",
+               filter_params=np.zeros(queries.shape[0], np.int32),
+               search_config=SearchConfig(mode="gate", search_l=64, beam_width=4))
+    out_s = _search(static, queries)
+    out_a = _search(adapt, queries)
+    hits_s = int(np.sum(np.asarray(out_s.stats.n_cache_hits)))
+    hits_a = int(np.sum(np.asarray(out_a.stats.n_cache_hits)))
+    assert hits_a > hits_s, (hits_a, hits_s)
+    np.testing.assert_array_equal(np.asarray(out_a.ids), np.asarray(out_s.ids))
+
+
+def test_refresh_keeps_shapes_stable(adaptive_engine, tiny_corpus):
+    """Every refresh must re-materialize identically-shaped cache blocks,
+    otherwise each refresh would retrace the jitted search loop."""
+    _, _, queries = tiny_corpus
+    store = adaptive_engine.record_store
+    shape0 = tuple(store.global_store.cache_vectors.shape)
+    slot0 = tuple(store.global_store.slot_of.shape)
+    for _ in range(3):
+        _search(adaptive_engine, queries)
+        store.refresh()
+        assert tuple(store.global_store.cache_vectors.shape) == shape0
+        assert tuple(store.global_store.slot_of.shape) == slot0
+        for part in store.partitions.values():
+            assert tuple(part.store.cache_vectors.shape) == shape0
+    assert store.n_cached <= store.n_slots
+
+
+def test_per_filter_partitions_and_lru(tiny_engine, tiny_corpus):
+    """Each filter bucket gets its own partition; the LRU keeps only the
+    most recent ``cache_partitions`` of them."""
+    _, _, queries = tiny_corpus
+    eng = tiny_engine.with_cache(64 * RECORD, policy="adaptive",
+                                 refresh_every=0, cache_partitions=2)
+    store = eng.record_store
+    for target in (0, 1, 2, 3):
+        _search(eng, queries[:4], target=target)
+    assert set(store.partitions) == {("label", 2), ("label", 3)}
+    store.refresh()
+    # a partition's learned hot set is drawn from ITS fetch population:
+    # in gate mode only filter-passing nodes are fetched, so every node
+    # with a live counter passes that partition's predicate
+    _, labels, _ = tiny_corpus
+    for (kind, tgt), part in store.partitions.items():
+        counts = np.asarray(part.counts)
+        assert (np.asarray(labels)[counts > 0] == tgt).all()
+        assert isinstance(part.store, CachedRecordStore)
+    assert store.last_refresh_sets == 3  # global + both dirty partitions
+    store.refresh()
+    assert store.last_refresh_sets == 1  # idle partitions keep their snapshot
+
+
+def test_partition_snapshot_served_after_refresh(tiny_engine, tiny_corpus):
+    _, _, queries = tiny_corpus
+    eng = tiny_engine.with_cache(64 * RECORD, policy="adaptive", refresh_every=0)
+    store = eng.record_store
+    _search(eng, queries, target=0)
+    bucket = filter_bucket("label", np.zeros(4, np.int32))
+    assert store.store_for(bucket) is store.global_store  # not materialized yet
+    store.refresh()
+    assert store.store_for(bucket) is store.partitions[bucket].store
+
+
+def test_filter_bucket_keys():
+    assert filter_bucket(None, None) is None
+    assert filter_bucket("label", np.asarray([3, 3, 1])) == ("label", 3)
+    lo = np.asarray([0.5, 0.5]); hi = np.asarray([1.5, 1.5])
+    assert filter_bucket("range", np.stack([lo, hi])) == ("range", 0.5, 1.5)
+    b1 = filter_bucket("tags", np.asarray([[3, 0]], np.uint32))
+    b2 = filter_bucket("tags", np.asarray([[3, 0]], np.uint32))
+    assert b1 == b2 and b1[0] == "tags"
+
+
+def test_wrap_pads_to_fixed_slots(tiny_engine):
+    """The adaptive refresh path: wrap(n_slots=...) must pad the block to
+    a fixed shape while mapping only the real hot ids."""
+    backing = tiny_engine.record_store
+    vecs, nbrs = tiny_engine.vectors, backing.neighbors
+    store = CachedRecordStore.wrap(
+        backing, vectors=vecs, neighbors=nbrs,
+        hot_ids=np.asarray([5, 9], np.int32), policy="adaptive", n_slots=16,
+    )
+    assert store.cache_vectors.shape == (16, vecs.shape[1])
+    assert store.n_cached == 2  # only the real hot ids are mapped
+    assert store.hot_ids().tolist() == [5, 9]
+    # truncation side: more hot ids than slots keeps the first n_slots
+    store2 = CachedRecordStore.wrap(
+        backing, vectors=vecs, neighbors=nbrs,
+        hot_ids=np.arange(32, dtype=np.int32), policy="adaptive", n_slots=16,
+    )
+    assert store2.n_cached == 16
+    assert store2.cache_vectors.shape == (16, vecs.shape[1])
+
+
+def test_sub_record_budget_leaves_adaptive_off(tiny_engine, tiny_corpus):
+    _, _, queries = tiny_corpus
+    eng = tiny_engine.with_cache(100, policy="adaptive")
+    assert not isinstance(eng.record_store, AdaptiveRecordCache)
+    out = _search(eng, queries[:4])
+    np.testing.assert_array_equal(np.asarray(out.stats.n_cache_hits), 0)
+
+
+def test_modeled_cost_prices_refresh(tiny_engine, tiny_corpus):
+    """Adaptive latency includes the amortized refresh term, so at equal
+    stats it must price >= the static engine, and the term must shrink
+    with a slower cadence."""
+    _, _, queries = tiny_corpus
+    fast = tiny_engine.with_cache(128 * RECORD, policy="adaptive",
+                                  refresh_every=1)
+    slow = tiny_engine.with_cache(128 * RECORD, policy="adaptive",
+                                  refresh_every=8)
+    static = tiny_engine.with_cache(128 * RECORD)
+    out = _search(static, queries)
+    lat_static = static.modeled_latency_us(out.stats)
+    lat_fast = fast.modeled_latency_us(out.stats)
+    lat_slow = slow.modeled_latency_us(out.stats)
+    assert lat_fast > lat_slow > lat_static
+
+
+def test_rag_server_drives_the_control_loop(tiny_engine, tiny_corpus):
+    """RAGServer.retrieve refreshes the adaptive cache between batches and
+    io_report surfaces the adaptation state."""
+    from repro.serve.rag import RAGRequest, RAGServer
+
+    corpus, _, queries = tiny_corpus
+    eng = tiny_engine.with_cache(128 * RECORD, policy="adaptive",
+                                 refresh_every=1)
+    server = RAGServer(
+        engine=eng, cfg=None, params=None, layout=None,
+        passage_tokens=np.zeros((corpus.shape[0], 4), np.int32),
+        search_config=SearchConfig(mode="gate", search_l=64, beam_width=4),
+    )
+    reqs = [
+        RAGRequest(query_vec=q, prompt_tokens=np.zeros(4, np.int32),
+                   filter_kind="label", filter_params=np.int32(0))
+        for q in queries[:8]
+    ]
+    server.retrieve(reqs)
+    first_rate = server.last_batch_hit_rate
+    server.retrieve(reqs)  # same batch again — now served from the hot set
+    rep = server.io_report()
+    assert rep["cache_policy"] == "adaptive"
+    assert rep["cache_refreshes"] >= 2
+    assert rep["cache_partitions"] == 1
+    assert rep["last_batch_hit_rate"] > first_rate
+    assert rep["cache_hits"] > 0
+    assert 0.0 <= rep["cache_hit_rate"] <= 1.0

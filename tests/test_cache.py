@@ -173,6 +173,58 @@ def test_modeled_qps_improves_with_cache(tiny_engine, tiny_corpus):
     ) < tiny_engine.modeled_latency_us(out0.stats, pipeline_depth=1)
 
 
+# The I/O-conservation property, extended to the adaptive policy: for
+# every (budget, policy, refresh cadence, mode), n_ios + n_cache_hits per
+# query equals the uncached engine's n_ios, and result ids/dists are
+# bit-identical — across batches, so adaptive refreshes happening *between*
+# batches are covered too.  Seeded-parametrize (no hypothesis), tier-1 fast.
+CONSERVATION_GRID = [
+    # (policy, budget_records, refresh_every, mode, n_batches)
+    ("visit_freq", 32, 0, "gate", 1),
+    ("visit_freq", 512, 0, "post", 1),
+    ("bfs", 128, 0, "gate", 1),
+    ("adaptive", 32, 1, "gate", 3),
+    ("adaptive", 128, 2, "gate", 3),
+    ("adaptive", 128, 1, "post", 2),
+    ("adaptive", 512, 4, "unfiltered", 2),
+]
+
+
+@pytest.mark.parametrize("policy,nrec,refresh_every,mode,n_batches",
+                         CONSERVATION_GRID)
+def test_io_conservation_every_policy(tiny_engine, tiny_corpus, policy, nrec,
+                                      refresh_every, mode, n_batches):
+    _, _, queries = tiny_corpus
+    if mode == "unfiltered":
+        base = tiny_engine.search(
+            queries, search_config=SearchConfig(mode=mode, search_l=64,
+                                                beam_width=4))
+    else:
+        base = _search(tiny_engine, queries, mode=mode)
+    base_ios = np.asarray(base.stats.n_ios)
+    eng = tiny_engine.with_cache(nrec * RECORD, policy=policy,
+                                 refresh_every=refresh_every)
+    for batch in range(n_batches):
+        if mode == "unfiltered":
+            out = eng.search(
+                queries, search_config=SearchConfig(mode=mode, search_l=64,
+                                                    beam_width=4))
+        else:
+            out = _search(eng, queries, mode=mode)
+        msg = f"policy={policy} nrec={nrec} batch={batch}"
+        np.testing.assert_array_equal(
+            np.asarray(out.ids), np.asarray(base.ids), err_msg=msg)
+        np.testing.assert_allclose(
+            np.asarray(out.dists), np.asarray(base.dists), rtol=1e-6,
+            err_msg=msg)
+        np.testing.assert_array_equal(
+            np.asarray(out.stats.n_ios) + np.asarray(out.stats.n_cache_hits),
+            base_ios, err_msg=msg)
+        np.testing.assert_array_equal(
+            np.asarray(out.stats.n_tunnels), np.asarray(base.stats.n_tunnels),
+            err_msg=msg)
+
+
 def test_cached_gate_matches_oracle(tiny_engine, tiny_corpus):
     """Full-loop check: the cached engine matches the NumPy oracle with the
     same hot set, including the n_ios / n_cache_hits split."""

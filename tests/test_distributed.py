@@ -107,6 +107,75 @@ def test_distributed_retrieve_step_runs_and_filters():
     """)
 
 
+@pytest.mark.parametrize("mode", ["gate", "post"])
+def test_distributed_matches_single_host_oracle(mode):
+    """Oracle parity for core/distributed_search.py: on a tiny CPU mesh the
+    sharded fixed-hop loop must return the same ids/distances and I/O
+    counters as the single-host ``filtered_search`` (which is itself
+    pinned to the NumPy oracle of Algorithm 1 in test_search_oracle)."""
+    _run(f"""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.tree_util import Partial
+    from repro.core.distributed_search import DistSearchConfig, make_retrieve_step
+    from repro.core import pq as pqm
+    from repro.core.search import SearchConfig, filtered_search
+    from repro.core.filter_store import EqualityFilter
+    from repro.core.neighbor_store import NeighborStore
+    from repro.core.graph import build_vamana
+    from repro.data import make_bigann_like, make_queries, uniform_labels
+    from repro.store.vector_store import InMemoryRecordStore
+
+    mode = {mode!r}
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    n, d, r_max, L, W, K = 600, 16, 8, 32, 4, 10
+    corpus = make_bigann_like(n, d, seed=3)
+    labels = uniform_labels(n, 5, seed=3)
+    g = build_vamana(corpus, degree=12, build_l=24, batch_size=256, seed=3)
+    codec = pqm.train_pq(jnp.asarray(corpus), n_chunks=8, iters=4)
+    codes = pqm.encode_pq(codec, jnp.asarray(corpus))
+    queries = make_queries(corpus, 8, seed=4)
+    lut = pqm.build_lut(codec, jnp.asarray(queries))
+    targets = jnp.zeros((8,), jnp.int32)
+
+    # single-host reference: the oracle-pinned Algorithm 1 loop
+    store = InMemoryRecordStore(vectors=jnp.asarray(corpus),
+                                neighbors=jnp.asarray(g.neighbors))
+    ref = filtered_search(
+        fetch=store.fetch_fn(),
+        neighbor_store=NeighborStore.from_graph(g.neighbors, r_max),
+        filter_check=EqualityFilter(jnp.asarray(labels)).bind(targets),
+        lut=lut, codes=codes, entry=g.medoid, queries=jnp.asarray(queries),
+        config=SearchConfig(mode=mode, search_l=L, beam_width=W, result_k=K),
+    )
+
+    # distributed run: generous hop budget + visited capacity so the
+    # frontier fully drains and the ring buffer never overwrites
+    rows = -(-n // 4)
+    v_p = np.pad(corpus, ((0, rows*4-n), (0, 0)))
+    g_p = np.pad(np.asarray(g.neighbors), ((0, rows*4-n), (0, 0)),
+                 constant_values=-1)
+    cfg = DistSearchConfig(search_l=L, beam_width=W, result_k=K,
+                           n_hops=96, visited_cap=4096, mode=mode)
+    step = make_retrieve_step(mesh, cfg, rows_per_shard=rows)
+    out = step(jnp.asarray(queries), lut, codes,
+               jnp.asarray(np.asarray(g.neighbors)[:, :r_max]),
+               jnp.asarray(labels), jnp.asarray(v_p), jnp.asarray(g_p),
+               g.medoid, targets)
+
+    ids_ref = np.asarray(ref.ids)
+    ids_dist = np.asarray(out["ids"])
+    np.testing.assert_array_equal(ids_dist, ids_ref)
+    valid = ids_ref >= 0
+    np.testing.assert_allclose(np.asarray(out["dists"])[valid],
+                               np.asarray(ref.dists)[valid], rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(out["n_ios"]),
+                                  np.asarray(ref.stats.n_ios))
+    np.testing.assert_array_equal(np.asarray(out["n_tunnels"]),
+                                  np.asarray(ref.stats.n_tunnels))
+    print("distributed oracle parity OK:", mode)
+    """)
+
+
 @pytest.mark.slow  # jits a sharded model train step on 8 emulated devices
 def test_train_step_sharded_2x4():
     _run("""
