@@ -1,0 +1,123 @@
+"""Disk sweep: *measured* page reads vs the cost model's ``n_ios``.
+
+Every other benchmark prices slow-tier I/O through the calibrated cost
+model.  This one builds the standard engine, persists it to the
+page-aligned index format, reloads it with ``store_tier="disk"`` and
+compares, per search mode and per cache budget:
+
+  * measured  — ``DiskRecordStore.pages_read`` deltas (the host callback
+                counts exactly the 4 KB-aligned sectors it gathered)
+  * modeled   — ``sum(SearchStats.n_ios) * pages_per_record`` (what the
+                cost model prices)
+
+The two must reconcile *exactly* — the search loop masks cache hits and
+filter-gated nodes to -1 before the fetch, so the file only ever sees
+the slow-tier reads.  Emits the benchmark-contract CSV
+``name,us_per_call,derived``:
+
+  disk_<mode>_r<records>_pages_q    derived = measured pages read / query
+  disk_<mode>_r<records>_model_q    derived = modeled pages / query
+  disk_<mode>_r<records>_reconciled derived = 1.0 iff measured == modeled
+  disk_ids_match                    derived = 1.0 iff every disk-tier run
+                                    returned ids identical to in-memory
+  disk_gate_lt_post                 derived = 1.0 iff gate read strictly
+                                    fewer pages than post (uncached)
+
+    PYTHONPATH=src python -m benchmarks.disk_sweep [--quick] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import GateANNEngine, SearchConfig
+
+BUDGET_RECORDS = (0, 256, 1024)
+MODES = ("gate", "post", "unfiltered")
+
+
+def index_path(tag: str = "") -> str:
+    os.makedirs(common.CACHE_DIR, exist_ok=True)
+    return os.path.join(common.CACHE_DIR, f"index_{tag}{common.N}_{common.DIM}.gann")
+
+
+def sweep_disk(ctx, *, budgets=BUDGET_RECORDS, modes=MODES, search_l=100):
+    engine = ctx["engine"]
+    queries = ctx["queries"]
+    nq = queries.shape[0]
+    path = index_path()
+    engine.save(path)
+    print(f"# saved index: {os.path.getsize(path)} B", file=sys.stderr)
+
+    # one load: all budgets re-wrap the same DiskRecordStore (same file
+    # handle, same measured counters, same jit traces per mode)
+    disk_engine = GateANNEngine.load(path, store_tier="disk")
+    store = disk_engine.record_store
+
+    rows = []
+    ids_match = True
+    gate_pages = post_pages = None
+    for mode in modes:
+        kind = None if mode == "unfiltered" else "label"
+        params = None if mode == "unfiltered" else np.zeros(nq, np.int32)
+        cfg = SearchConfig(mode=mode, search_l=search_l, beam_width=8)
+        mem_out = engine.search(queries, filter_kind=kind, filter_params=params,
+                                search_config=cfg)
+        mem_ids = np.asarray(mem_out.ids)
+        for nrec in budgets:
+            # budgets are in *records*; the store knows its sector size
+            disk = disk_engine.with_cache(nrec * store.sector_bytes)
+            before = store.pages_read
+            out = disk.search(queries, filter_kind=kind, filter_params=params,
+                              search_config=cfg)
+            ids = np.asarray(out.ids)  # materialize => all callbacks ran
+            measured = store.pages_read - before
+            modeled = int(np.sum(np.asarray(out.stats.n_ios))) * store.pages_per_record
+            ids_match &= bool(np.array_equal(ids, mem_ids))
+            if mode == "gate" and nrec == 0:
+                gate_pages = measured
+            if mode == "post" and nrec == 0:
+                post_pages = measured
+            lat = disk.modeled_latency_us(out.stats)
+            rows.append(dict(name=f"disk_{mode}_r{nrec}_pages_q", lat1_us=lat,
+                             derived=measured / nq))
+            rows.append(dict(name=f"disk_{mode}_r{nrec}_model_q", lat1_us=lat,
+                             derived=modeled / nq))
+            rows.append(dict(name=f"disk_{mode}_r{nrec}_reconciled", lat1_us=0.0,
+                             derived=float(measured == modeled)))
+    rows.append(dict(name="disk_ids_match", lat1_us=0.0, derived=float(ids_match)))
+    if gate_pages is not None and post_pages is not None:
+        rows.append(dict(name="disk_gate_lt_post", lat1_us=0.0,
+                         derived=float(gate_pages < post_pages)))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="gate+post only, budgets (0, 256)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write all rows as a JSON artifact")
+    args = ap.parse_args()
+    ctx = common.standard_setup()
+    kw = {}
+    if args.quick:
+        kw = dict(budgets=(0, 256), modes=("gate", "post"))
+    rows = sweep_disk(ctx, **kw)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['lat1_us']:.1f},{r['derived']:.4f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "disk_sweep", "rows": rows}, f, indent=1)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    print("# sweep done", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -67,3 +67,38 @@ for n_records in (0, 256, 1024):
     hits = float(np.mean(np.asarray(out.stats.n_cache_hits)))
     print(f"{n_records:9d} rec {ios:8.1f} {hits:8.1f} "
           f"{cached.modeled_qps(out.stats):9.0f}")
+
+# 5. Persist the index and serve it from disk: save() writes one
+#    page-aligned file (4 KB record sectors + PQ/graph/filter sidecars);
+#    load() restores without rebuilding the graph or retraining PQ, and
+#    store_tier="disk" serves records straight off the file with
+#    *measured* (not modeled) page reads.
+import os, tempfile
+
+path = os.path.join(tempfile.mkdtemp(), "quickstart.gann")
+t0 = time.time()
+engine.save(path)
+print(f"\nsaved index -> {path} ({os.path.getsize(path)//1024} KiB) "
+      f"in {time.time()-t0:.1f}s")
+
+disk = GateANNEngine.load(path, store_tier="disk")  # no rebuild, no retrain
+store = disk.record_store
+print(f"{'mode':12s} {'pages/q':>8s} {'ios/q':>8s} {'ids==mem':>9s}")
+for mode in ("post", "gate"):
+    before = store.pages_read
+    out = disk.search(
+        queries, filter_kind="label", filter_params=target,
+        search_config=SearchConfig(mode=mode, search_l=100, beam_width=8),
+    )
+    ids = np.asarray(out.ids)  # materialize => measured counters final
+    ref = engine.search(
+        queries, filter_kind="label", filter_params=target,
+        search_config=SearchConfig(mode=mode, search_l=100, beam_width=8),
+    )
+    match = bool(np.array_equal(ids, np.asarray(ref.ids)))
+    pages = (store.pages_read - before) / NQ
+    ios = float(np.mean(np.asarray(out.stats.n_ios)))
+    print(f"{mode:12s} {pages:8.1f} {ios:8.1f} {str(match):>9s}")
+
+print("\nThe disk tier *measures* the paper's central quantity: gate mode "
+      "reads a fraction of post's 4 KB sectors, now counted off a real file.")

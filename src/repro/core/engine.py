@@ -30,8 +30,10 @@ from repro.core import search as searchm
 from repro.core.filter_store import CheckFn, EqualityFilter, RangeFilter, SubsetFilter, match_all
 from repro.core.io_model import DEFAULT_COST_MODEL, IOCostModel
 from repro.core.neighbor_store import NeighborStore
+from repro.store import format as idx_format
 from repro.store.adaptive import ADAPTIVE_POLICY, AdaptiveRecordCache, filter_bucket
 from repro.store.cache import CachedRecordStore, select_hot_set
+from repro.store.disk import DiskRecordStore
 from repro.store.vector_store import HostOffloadRecordStore, InMemoryRecordStore
 
 
@@ -42,7 +44,7 @@ class EngineConfig:
     alpha: float = 1.2
     pq_chunks: int = 16  # paper default 32 on 128-dim; scaled with D
     r_max: int = 16  # in-memory neighbors per node (runtime knob)
-    store_tier: str = "memory"  # memory | host
+    store_tier: str = "memory"  # memory | host | disk (disk needs a path)
     cache_budget_bytes: int = 0  # hot-record cache size (0 disables the tier)
     cache_policy: str = "visit_freq"  # visit_freq | bfs | adaptive
     refresh_every: int = 4  # adaptive: batches between hot-set refreshes
@@ -54,6 +56,34 @@ class EngineConfig:
     # shows the true footprint).
     cache_partitions: int = 4
     seed: int = 0
+
+
+def _store_neighbors(store, expected_n: int | None = None) -> jax.Array:
+    """Full adjacency of a record store, whatever its tier.
+
+    The in-memory/host/disk tiers expose ``neighbors`` (the disk tier
+    parses it from its sidecar section); the sharded tier only has its
+    ``local_neighbors`` rows — acceptable only when they cover the whole
+    corpus (``expected_n`` guards against wrapping a cache around a
+    partial shard, whose rows are locally indexed).  Cache wiring
+    threads adjacency through this helper instead of reaching for
+    ``backing.neighbors`` directly.
+    """
+    nbrs = getattr(store, "neighbors", None)
+    if nbrs is None:
+        nbrs = getattr(store, "local_neighbors", None)
+    if nbrs is None:
+        raise TypeError(
+            f"record store {type(store).__name__} exposes no adjacency "
+            "(neighbors / local_neighbors)"
+        )
+    if expected_n is not None and int(nbrs.shape[0]) != int(expected_n):
+        raise ValueError(
+            f"record store {type(store).__name__} holds {int(nbrs.shape[0])} "
+            f"adjacency rows but the corpus has {int(expected_n)} — a "
+            "partial (sharded) backing cannot be wrapped here"
+        )
+    return nbrs
 
 
 def _make_cache_tier(backing, *, vectors, neighbors, medoid: int, config: EngineConfig):
@@ -93,6 +123,28 @@ def _make_cache_tier(backing, *, vectors, neighbors, medoid: int, config: Engine
     return backing
 
 
+def _write_index_file(path, *, config, vectors, neighbors, codec, codes,
+                      medoid: int, filters: dict) -> None:
+    """Serialize every engine component into one page-aligned index file."""
+    filter_arrays = {}
+    if "label" in filters:
+        filter_arrays["label"] = np.asarray(filters["label"].labels, np.int32)
+    if "range" in filters:
+        filter_arrays["range"] = np.asarray(filters["range"].values, np.float32)
+    if "tags" in filters:
+        filter_arrays["tags"] = np.asarray(filters["tags"].tag_bits, np.uint32)
+    idx_format.write_index(
+        path,
+        vectors=np.asarray(vectors, np.float32),
+        neighbors=np.asarray(neighbors, np.int32),
+        pq_books=np.asarray(codec.books, np.float32),
+        pq_codes=np.asarray(codes, np.int32),
+        medoid=int(medoid),
+        config=dataclasses.asdict(config),
+        filters=filter_arrays,
+    )
+
+
 @dataclasses.dataclass
 class GateANNEngine:
     config: EngineConfig
@@ -115,8 +167,14 @@ class GateANNEngine:
         attributes: np.ndarray | None = None,
         tag_bits: np.ndarray | None = None,
         graph: graphm.VamanaGraph | None = None,
+        index_path: str | None = None,
     ) -> "GateANNEngine":
         config = config or EngineConfig()
+        if config.store_tier == "disk" and index_path is None:
+            raise ValueError(
+                "store_tier='disk' needs index_path=... (the index file to "
+                "write and serve from) — or build in memory and save()/load()"
+            )
         vecs = jnp.asarray(vectors, dtype=jnp.float32)
         n, d = vecs.shape
         if graph is None:
@@ -133,7 +191,22 @@ class GateANNEngine:
         codec = pqm.train_pq(vecs, n_chunks=pq_chunks, key=jax.random.PRNGKey(config.seed))
         codes = pqm.encode_pq(codec, vecs)
         nbr_store = NeighborStore.from_graph(graph.neighbors, config.r_max)
-        if config.store_tier == "host":
+        filters = {}
+        if labels is not None:
+            filters["label"] = EqualityFilter(labels=jnp.asarray(labels, dtype=jnp.int32))
+        if attributes is not None:
+            filters["range"] = RangeFilter(values=jnp.asarray(attributes, dtype=jnp.float32))
+        if tag_bits is not None:
+            filters["tags"] = SubsetFilter(tag_bits=jnp.asarray(tag_bits))
+        if config.store_tier == "disk":
+            # persist first, then serve the slow tier straight off the file
+            _write_index_file(
+                index_path, config=config, vectors=vecs,
+                neighbors=graph.neighbors, codec=codec, codes=codes,
+                medoid=int(graph.medoid), filters=filters,
+            )
+            record_store = DiskRecordStore.open(index_path)
+        elif config.store_tier == "host":
             record_store = HostOffloadRecordStore.create(vecs, graph.neighbors)
         else:
             record_store = InMemoryRecordStore(vectors=vecs, neighbors=graph.neighbors)
@@ -144,13 +217,6 @@ class GateANNEngine:
             medoid=int(graph.medoid),
             config=config,
         )
-        filters = {}
-        if labels is not None:
-            filters["label"] = EqualityFilter(labels=jnp.asarray(labels, dtype=jnp.int32))
-        if attributes is not None:
-            filters["range"] = RangeFilter(values=jnp.asarray(attributes, dtype=jnp.float32))
-        if tag_bits is not None:
-            filters["tags"] = SubsetFilter(tag_bits=jnp.asarray(tag_bits))
         return cls(
             config=config,
             vectors=vecs,
@@ -159,6 +225,99 @@ class GateANNEngine:
             codec=codec,
             codes=codes,
             medoid=graph.medoid,
+            filters=filters,
+        )
+
+    # -- persistence -------------------------------------------------------
+    def save(self, path: str) -> None:
+        """Write the whole index (records, graph, PQ, filters, config) to
+        one page-aligned file (``repro.store.format``).
+
+        ``load`` restores it without rebuilding the graph or retraining
+        PQ; a disk-tier load serves records straight off this file.
+        """
+        backing = self.record_store
+        while isinstance(backing, (CachedRecordStore, AdaptiveRecordCache)):
+            backing = backing.backing
+        _write_index_file(
+            path, config=self.config, vectors=self.vectors,
+            neighbors=_store_neighbors(backing, int(self.vectors.shape[0])),
+            codec=self.codec, codes=self.codes, medoid=int(self.medoid),
+            filters=self.filters,
+        )
+
+    @classmethod
+    def load(
+        cls,
+        path: str,
+        config_overrides: dict | None = None,
+        **overrides,
+    ) -> "GateANNEngine":
+        """Restore an engine from a saved index file — no graph build, no
+        PQ retraining, bit-identical search results.
+
+        The saved ``EngineConfig`` is the default; ``config_overrides``
+        (or keyword overrides) change the *runtime* knobs — e.g.
+        ``store_tier="disk"`` serves records off the file with measured
+        I/O, ``r_max`` re-slices the neighbor store, ``cache_*`` attaches
+        a cache tier.
+        """
+        idx = idx_format.read_index(path)
+        h = idx.header
+        known = {f.name for f in dataclasses.fields(EngineConfig)}
+        user = {**(config_overrides or {}), **overrides}
+        unknown = set(user) - known
+        if unknown:
+            raise ValueError(
+                f"unknown EngineConfig override(s) {sorted(unknown)}; "
+                f"valid fields: {sorted(known)}"
+            )
+        # stored configs may carry fields from other format versions —
+        # tolerate those, but never silently drop an explicit override
+        cfg = {k: v for k, v in (h.config or {}).items() if k in known}
+        cfg.update(user)
+        config = EngineConfig(**cfg)
+        neighbors = jnp.asarray(idx.neighbors(), jnp.int32)
+        books = jnp.asarray(idx.pq_books(), jnp.float32)
+        codec = pqm.PQCodec(
+            books=books, n_chunks=int(books.shape[0]),
+            n_centroids=int(books.shape[1]),
+        )
+        codes = jnp.asarray(idx.pq_codes(), jnp.int32)
+        if config.store_tier == "disk":
+            record_store = DiskRecordStore.open(path)
+            # share the store's single record-section parse instead of
+            # materializing a second full-precision copy (the engine's
+            # ``vectors`` field is ground-truth/debug + cache-selection
+            # state; the disk search path itself never reads it)
+            vectors = record_store.vectors
+        elif config.store_tier == "host":
+            vectors = jnp.asarray(idx.vectors(), jnp.float32)
+            record_store = HostOffloadRecordStore.create(vectors, neighbors)
+        else:
+            vectors = jnp.asarray(idx.vectors(), jnp.float32)
+            record_store = InMemoryRecordStore(vectors=vectors, neighbors=neighbors)
+        record_store = _make_cache_tier(
+            record_store, vectors=vectors, neighbors=neighbors,
+            medoid=h.medoid, config=config,
+        )
+        filters = {}
+        for kind in idx.filter_kinds():
+            arr = idx.filter_array(kind)
+            if kind == "label":
+                filters[kind] = EqualityFilter(labels=jnp.asarray(arr, jnp.int32))
+            elif kind == "range":
+                filters[kind] = RangeFilter(values=jnp.asarray(arr, jnp.float32))
+            elif kind == "tags":
+                filters[kind] = SubsetFilter(tag_bits=jnp.asarray(arr, jnp.uint32))
+        return cls(
+            config=config,
+            vectors=vectors,
+            record_store=record_store,
+            neighbor_store=NeighborStore.from_graph(neighbors, config.r_max),
+            codec=codec,
+            codes=codes,
+            medoid=jnp.int32(h.medoid),
             filters=filters,
         )
 
@@ -200,7 +359,7 @@ class GateANNEngine:
         store = _make_cache_tier(
             backing,
             vectors=self.vectors,
-            neighbors=backing.neighbors,
+            neighbors=_store_neighbors(backing, int(self.vectors.shape[0])),
             medoid=int(self.medoid),
             config=cfg,
         )
@@ -312,7 +471,19 @@ class GateANNEngine:
                 rep["cache_refreshes"] = store.n_refreshes
             store = store.backing
         if isinstance(store, InMemoryRecordStore):
+            rep["record_tier"] = "memory"
             rep["record_tier_bytes"] = store.record_bytes()
+        elif isinstance(store, DiskRecordStore):
+            # on-disk footprint + measured (not modeled) read counters
+            rep["record_tier"] = "disk"
+            rep["record_tier_bytes"] = store.record_bytes()
+            rep["disk_path"] = store.path
+            rep["disk_index_bytes"] = store.index_bytes()
+            rep["disk_sector_bytes"] = store.sector_bytes
+            rep["disk_pages_read"] = store.pages_read
+            rep["disk_bytes_read"] = store.bytes_read
+        elif isinstance(store, HostOffloadRecordStore):
+            rep["record_tier"] = "host"
         return rep
 
     def _refresh_amortized_us(
@@ -356,14 +527,17 @@ class GateANNEngine:
 
 
 def recall_at_k(result_ids: jax.Array, gt_ids: np.ndarray, k: int = 10) -> float:
-    """Recall@k against exact filtered ground truth (rows -1-padded)."""
+    """Recall@k against exact filtered ground truth (rows -1-padded).
+
+    Vectorized broadcast membership count — a (B, k, k) equality mask
+    instead of per-row Python sets (this is the hot path of the recall
+    regression suite and every benchmark sweep).  Ground-truth rows hold
+    unique ids, so counting each matched gt id once is exactly the set
+    intersection of the old implementation.
+    """
     res = np.asarray(result_ids)[:, :k]
-    hits = 0
-    denom = 0
-    for r, g in zip(res, np.asarray(gt_ids)[:, :k]):
-        gset = set(int(x) for x in g if x >= 0)
-        if not gset:
-            continue
-        hits += len(gset & set(int(x) for x in r if x >= 0))
-        denom += len(gset)
-    return hits / max(denom, 1)
+    gt = np.asarray(gt_ids)[:, :k]
+    gt_valid = gt >= 0
+    found = (gt[:, :, None] == res[:, None, :]) & (res[:, None, :] >= 0)
+    hits = int((found.any(axis=2) & gt_valid).sum())
+    return hits / max(int(gt_valid.sum()), 1)

@@ -30,7 +30,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.engine import GateANNEngine
-from repro.core.search import SearchConfig
+from repro.core.search import SearchConfig, SearchStats
 from repro.distributed.sharding import Layout
 from repro.models import transformer as tfm
 from repro.store.adaptive import AdaptiveRecordCache
@@ -89,21 +89,48 @@ class RAGServer:
         return rep
 
     def retrieve(self, requests: list[RAGRequest]):
-        q = np.stack([r.query_vec for r in requests])
-        kinds = {r.filter_kind for r in requests}
-        assert len(kinds) == 1, "batch requests by predicate kind"
-        kind = next(iter(kinds))
-        params = None
-        if kind is not None:
-            params = jnp.stack([jnp.asarray(r.filter_params) for r in requests])
-        out = self.engine.search(
-            q, filter_kind=kind, filter_params=params, search_config=self.search_config
-        )
-        self._account(out.stats)
+        """Serve one request batch, mixed predicate kinds included.
+
+        Requests are grouped by ``filter_kind`` (the engine's jitted loop
+        takes one predicate family per call), each group is searched as a
+        sub-batch, and results/stats are scattered back into request
+        order — callers see one (ids, stats) pair regardless of mix.
+
+        Sub-batches are searched at their natural size: a new group size
+        compiles a new trace, so a stream of arbitrary mixes pays some
+        warm-up compilation.  Padding groups to a common size would bound
+        the traces but make the padded rows do real traversal work —
+        polluting the *measured* disk-tier read counters — so batch-size
+        bucketing belongs in the caller (see ROADMAP) where the padding
+        rows can be accounted for.
+        """
+        groups: dict = {}
+        for i, r in enumerate(requests):
+            groups.setdefault(r.filter_kind, []).append(i)
+        k = self.search_config.result_k
+        all_ids = np.full((len(requests), k), -1, np.int32)
+        stat_fields = {f: np.zeros((len(requests),), np.int32)
+                       for f in SearchStats._fields}
+        for kind, idxs in groups.items():
+            q = np.stack([requests[i].query_vec for i in idxs])
+            params = None
+            if kind is not None:
+                params = jnp.stack(
+                    [jnp.asarray(requests[i].filter_params) for i in idxs]
+                )
+            out = self.engine.search(
+                q, filter_kind=kind, filter_params=params,
+                search_config=self.search_config,
+            )
+            all_ids[idxs] = np.asarray(out.ids)[:, :k]
+            for f in SearchStats._fields:
+                stat_fields[f][idxs] = np.asarray(getattr(out.stats, f))
+        stats = SearchStats(**stat_fields)
+        self._account(stats)
         # adaptive cache maintenance runs between batches, off the
         # retrieval critical path (engine.search already observed counts)
         self.engine.maybe_refresh()
-        return np.asarray(out.ids), out.stats
+        return all_ids, stats
 
     def build_prompts(self, requests: list[RAGRequest], retrieved_ids: np.ndarray):
         """Prompt = [passage tokens for top-k hits] + [request prompt]."""

@@ -17,11 +17,33 @@ from repro.store.adaptive import (
     AdaptiveRecordCache,
     filter_bucket,
 )
+from repro.store.format import (
+    FORMAT_VERSION,
+    PAGE_BYTES,
+    IndexFile,
+    IndexFormatError,
+    IndexHeader,
+    read_header,
+    read_index,
+    record_sector_bytes,
+    write_index,
+)
+from repro.store.disk import DiskRecordStore
 
 __all__ = [
     "ADAPTIVE_POLICY",
     "AdaptiveRecordCache",
     "filter_bucket",
+    "FORMAT_VERSION",
+    "PAGE_BYTES",
+    "IndexFile",
+    "IndexFormatError",
+    "IndexHeader",
+    "read_header",
+    "read_index",
+    "record_sector_bytes",
+    "write_index",
+    "DiskRecordStore",
     "InMemoryRecordStore",
     "ShardedRecordStore",
     "HostOffloadRecordStore",

@@ -1,0 +1,131 @@
+"""File-backed slow tier — the record store that actually does I/O.
+
+``DiskRecordStore`` serves ``(B, W)`` id beams straight off the
+page-aligned record section of an index file (store/format.py) through
+``jax.experimental.io_callback``: the jitted search loop dispatches a
+beam, the host callback gathers the corresponding 4 KB-aligned sectors
+from an ``np.memmap``, and the result re-enters the trace.  Same
+``RecordFetchFn`` contract as the in-memory/host/sharded stores, so the
+cache tiers (``CachedRecordStore`` / ``AdaptiveRecordCache``) wrap it
+unchanged — a cache hit masks the id to -1 before the callback, so a hit
+costs zero file reads.
+
+Unlike every other tier, this one *measures* its I/O instead of modeling
+it: monotonic ``pages_read`` / ``bytes_read`` / ``records_read`` counters
+advance inside the host callback by exactly the sectors gathered.  Tests
+and ``benchmarks/disk_sweep.py`` reconcile counter deltas against the
+search loop's ``SearchStats.n_ios`` — the paper's central quantity
+(sector reads removed by tunneling) measured, not modeled.
+
+Counter discipline: jax dispatch is asynchronous, so read the counters
+only after materializing the search outputs (``np.asarray(out.ids)`` or
+``jax.block_until_ready``) — every fetch feeds the loop-carried state, so
+output materialization implies all callbacks ran.
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+from jax.tree_util import Partial
+
+from repro.store.format import PAGE_BYTES, IndexFile, read_header
+
+
+class DiskRecordStore:
+    """Slow-tier record store backed by an on-disk index file."""
+
+    def __init__(self, path: str):
+        header = read_header(path)
+        self.path = path
+        self.header = header
+        self.n = header.n
+        self.dim = header.dim
+        self.degree = header.degree
+        self.sector_bytes = header.sector_bytes
+        self.pages_per_record = header.sector_bytes // PAGE_BYTES
+        # measured, monotonic I/O counters (advanced by the host callback)
+        self.pages_read = 0
+        self.bytes_read = 0
+        self.records_read = 0
+        self._records = IndexFile(header).records()  # (N,) sector memmap
+        self._neighbors = None  # lazy full-adjacency parse (host convenience)
+        self._vectors = None
+        # one Partial per store: stable pytree identity, so repeated
+        # searches against the same store never retrace the jitted loop
+        self._fetch = Partial(self._traced_fetch)
+
+    @classmethod
+    def open(cls, path: str) -> "DiskRecordStore":
+        return cls(path)
+
+    # -- the measured host read --------------------------------------------
+    def _host_fetch(self, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Gather record sectors for ``ids`` (>= 0); count what was read."""
+        ids = np.asarray(ids)
+        valid = ids >= 0
+        flat = np.clip(ids, 0, self.n - 1).reshape(-1)
+        vmask = valid.reshape(-1)
+        vecs = np.zeros(ids.shape + (self.dim,), np.float32)
+        nbrs = np.full(ids.shape + (self.degree,), -1, np.int32)
+        m = int(vmask.sum())
+        if m:
+            got = self._records[flat[vmask]]  # the only file reads
+            vecs.reshape(-1, self.dim)[vmask] = got["vec"]
+            nbrs.reshape(-1, self.degree)[vmask] = got["nbrs"]
+        self.records_read += m
+        self.pages_read += m * self.pages_per_record
+        self.bytes_read += m * self.sector_bytes
+        return vecs, nbrs
+
+    def _traced_fetch(self, ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        out_shapes = (
+            jax.ShapeDtypeStruct(ids.shape + (self.dim,), jnp.float32),
+            jax.ShapeDtypeStruct(ids.shape + (self.degree,), jnp.int32),
+        )
+        # ordered: fetches must all execute (and in program order) so the
+        # measured counters reconcile exactly with SearchStats.n_ios
+        return io_callback(self._host_fetch, out_shapes, ids, ordered=True)
+
+    def fetch_fn(self):
+        return self._fetch
+
+    # -- measured-I/O reporting --------------------------------------------
+    def io_counters(self) -> dict:
+        return {
+            "records_read": self.records_read,
+            "pages_read": self.pages_read,
+            "bytes_read": self.bytes_read,
+        }
+
+    def reset_io_counters(self) -> None:
+        self.pages_read = self.bytes_read = self.records_read = 0
+
+    def index_bytes(self) -> int:
+        """Total on-disk footprint of the index file."""
+        return int(os.path.getsize(self.path))
+
+    def record_bytes(self) -> int:
+        """Slow-tier record-section bytes (same pricing as the other tiers)."""
+        return self.n * self.sector_bytes
+
+    # -- host-side passthroughs (cache wiring, tests, ground truth) --------
+    @property
+    def neighbors(self) -> jax.Array:
+        if self._neighbors is None:
+            self._neighbors = jnp.asarray(
+                IndexFile(self.header).neighbors(), jnp.int32
+            )
+        return self._neighbors
+
+    @property
+    def vectors(self) -> jax.Array:
+        if self._vectors is None:
+            self._vectors = jnp.asarray(
+                np.ascontiguousarray(self._records["vec"]), jnp.float32
+            )
+        return self._vectors

@@ -1,0 +1,378 @@
+"""Persistent index format — versioned, page-aligned, memmap-readable.
+
+GateANN is an SSD system: the quantity the paper optimizes is 4 KB-sector
+reads.  This module gives the reproduction real at-rest state with the
+same geometry, following the page-aligned layouts of PAGER and DiskANN:
+
+  page 0 .. HEADER_PAGES-1   header: magic | version | json_len | JSON
+                             (section table, shapes/dtypes/offsets, the
+                             medoid, and the EngineConfig used at build)
+  records section            N record *sectors*, one per node, each
+                             ``record_sector_bytes(D, R)`` long (a 4 KB
+                             multiple): full vector f32[D] | degree i32 |
+                             adjacency i32[R] (-1 padded) | zero pad —
+                             exactly the sector ``InMemoryRecordStore
+                             .record_bytes()`` already prices
+  sidecar sections           full adjacency (the neighbor-store source),
+                             PQ codebooks, PQ codes, and one section per
+                             filter store — each starting on a page
+                             boundary
+
+Every section offset is 4 KB-aligned, so the record section can be
+served straight off the file by ``DiskRecordStore`` (store/disk.py) one
+aligned sector per node, and every sidecar loads as a zero-copy
+``np.memmap`` view.  Readers validate magic, version, and that every
+section lies inside the file (truncation), and raise ``IndexFormatError``
+otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any
+
+import numpy as np
+
+from repro.store.cache import record_nbytes
+
+FORMAT_MAGIC = b"GANN"
+FORMAT_VERSION = 1
+PAGE_BYTES = 4096
+HEADER_PAGES = 4  # 16 KB of header keeps the JSON table comfortable
+_PRELUDE = np.dtype([("magic", "S4"), ("version", "<u4"), ("json_len", "<u8")])
+
+# section names with a fixed meaning (filters are "filter_<kind>")
+SEC_RECORDS = "records"
+SEC_NEIGHBORS = "neighbors"
+SEC_PQ_BOOKS = "pq_books"
+SEC_PQ_CODES = "pq_codes"
+FILTER_PREFIX = "filter_"
+
+
+class IndexFormatError(ValueError):
+    """Bad magic, unsupported version, or a corrupt/truncated index file."""
+
+
+def record_sector_bytes(dim: int, degree: int) -> int:
+    """Bytes of one on-disk record sector (a 4 KB multiple)."""
+    return record_nbytes(dim, degree)
+
+
+def record_dtype(dim: int, degree: int) -> np.dtype:
+    """Structured view of one record sector (pad folded into itemsize)."""
+    return np.dtype(
+        {
+            "names": ["vec", "deg", "nbrs"],
+            "formats": [("<f4", (dim,)), "<i4", ("<i4", (degree,))],
+            "offsets": [0, 4 * dim, 4 * dim + 4],
+            "itemsize": record_sector_bytes(dim, degree),
+        }
+    )
+
+
+def pack_records(vectors: np.ndarray, neighbors: np.ndarray) -> np.ndarray:
+    """(N, D) f32 + (N, R) i32 -> (N,) structured record sectors."""
+    n, d = vectors.shape
+    r = neighbors.shape[1]
+    rec = np.zeros((n,), dtype=record_dtype(d, r))
+    rec["vec"] = np.asarray(vectors, "<f4")
+    rec["deg"] = (np.asarray(neighbors) >= 0).sum(axis=1).astype("<i4")
+    rec["nbrs"] = np.asarray(neighbors, "<i4")
+    return rec
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexHeader:
+    path: str
+    version: int
+    n: int
+    dim: int
+    degree: int
+    sector_bytes: int
+    medoid: int
+    config: dict
+    sections: dict  # name -> {offset, nbytes, dtype, shape}
+    file_bytes: int
+
+    def describe(self) -> str:
+        """Human-readable layout summary (``convert_index.py inspect``)."""
+        lines = [
+            f"GateANN index v{self.version}: {self.path}",
+            f"  n={self.n} dim={self.dim} degree={self.degree} "
+            f"medoid={self.medoid} sector={self.sector_bytes} B "
+            f"file={self.file_bytes} B",
+            f"  config: {json.dumps(self.config, sort_keys=True)}",
+            f"  {'section':<16s} {'offset':>12s} {'bytes':>12s} "
+            f"{'dtype':>6s} shape",
+        ]
+        for name, s in self.sections.items():
+            lines.append(
+                f"  {name:<16s} {s['offset']:>12d} {s['nbytes']:>12d} "
+                f"{s['dtype']:>6s} {tuple(s['shape'])}"
+            )
+        return "\n".join(lines)
+
+
+def _page_up(nbytes: int) -> int:
+    return ((nbytes + PAGE_BYTES - 1) // PAGE_BYTES) * PAGE_BYTES
+
+
+def write_index(
+    path: str,
+    *,
+    vectors: np.ndarray,
+    neighbors: np.ndarray,
+    pq_books: np.ndarray,
+    pq_codes: np.ndarray,
+    medoid: int,
+    config: dict | None = None,
+    filters: dict[str, np.ndarray] | None = None,
+) -> IndexHeader:
+    """Write a complete index file; returns the header it wrote.
+
+    ``filters`` maps filter kind (``label`` / ``range`` / ``tags``) to the
+    per-node metadata array; dtypes are preserved in the section table.
+    """
+    vectors = np.ascontiguousarray(vectors, "<f4")
+    neighbors = np.ascontiguousarray(neighbors, "<i4")
+    n, d = vectors.shape
+    r = neighbors.shape[1]
+    if neighbors.shape[0] != n:
+        raise ValueError(f"vectors n={n} but neighbors n={neighbors.shape[0]}")
+    arrays: dict[str, np.ndarray] = {
+        SEC_RECORDS: pack_records(vectors, neighbors),
+        SEC_NEIGHBORS: neighbors,
+        SEC_PQ_BOOKS: np.ascontiguousarray(pq_books, "<f4"),
+        SEC_PQ_CODES: np.ascontiguousarray(pq_codes, "<i4"),
+    }
+    for kind, arr in (filters or {}).items():
+        arrays[FILTER_PREFIX + kind] = np.ascontiguousarray(arr)
+
+    sections: dict[str, dict] = {}
+    offset = HEADER_PAGES * PAGE_BYTES
+    for name, arr in arrays.items():
+        sections[name] = {
+            "offset": offset,
+            "nbytes": int(arr.nbytes),
+            "dtype": arr.dtype.str if arr.dtype.names is None else "record",
+            "shape": list(arr.shape),
+        }
+        offset += _page_up(int(arr.nbytes))
+
+    meta = {
+        "n": int(n),
+        "dim": int(d),
+        "degree": int(r),
+        "sector_bytes": record_sector_bytes(d, r),
+        "medoid": int(medoid),
+        "config": dict(config or {}),
+        "sections": sections,
+    }
+    blob = json.dumps(meta, sort_keys=True).encode("utf-8")
+    capacity = HEADER_PAGES * PAGE_BYTES - _PRELUDE.itemsize
+    if len(blob) > capacity:
+        raise IndexFormatError(
+            f"header table {len(blob)} B exceeds {capacity} B; "
+            f"raise HEADER_PAGES"
+        )
+    prelude = np.zeros((), dtype=_PRELUDE)
+    prelude["magic"] = FORMAT_MAGIC
+    prelude["version"] = FORMAT_VERSION
+    prelude["json_len"] = len(blob)
+
+    # write-then-rename: a crash mid-write never leaves a corrupt index
+    # at the final path, and saving over a file that backs a live
+    # DiskRecordStore is safe — the old memmap keeps the old inode
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            f.write(prelude.tobytes())
+            f.write(blob)
+            f.write(b"\0" * (HEADER_PAGES * PAGE_BYTES - _PRELUDE.itemsize - len(blob)))
+            for name, arr in arrays.items():
+                if f.tell() != sections[name]["offset"]:
+                    raise IndexFormatError(
+                        f"internal: section {name} landing at {f.tell()} "
+                        f"but table says {sections[name]['offset']}"
+                    )
+                arr.tofile(f)  # streams — no section-sized bytes copy
+                f.write(b"\0" * (_page_up(arr.nbytes) - arr.nbytes))
+            f.flush()
+            os.fsync(f.fileno())  # data durable before the rename commits
+        os.replace(tmp, path)
+        dir_fd = os.open(os.path.dirname(os.path.abspath(path)), os.O_RDONLY)
+        try:
+            os.fsync(dir_fd)  # ... and the rename itself durable
+        finally:
+            os.close(dir_fd)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    return read_header(path)
+
+
+def read_header(path: str) -> IndexHeader:
+    """Parse and validate the header pages (magic, version, truncation)."""
+    try:
+        file_bytes = os.path.getsize(path)
+    except OSError as e:
+        raise IndexFormatError(f"cannot stat index file {path}: {e}") from e
+    if file_bytes < HEADER_PAGES * PAGE_BYTES:
+        raise IndexFormatError(
+            f"{path}: {file_bytes} B is smaller than the "
+            f"{HEADER_PAGES * PAGE_BYTES} B header"
+        )
+    with open(path, "rb") as f:
+        raw = f.read(HEADER_PAGES * PAGE_BYTES)
+    prelude = np.frombuffer(raw, dtype=_PRELUDE, count=1)[0]
+    if bytes(prelude["magic"]) != FORMAT_MAGIC:
+        raise IndexFormatError(f"{path}: bad magic {bytes(prelude['magic'])!r} — "
+                               "not a GateANN index file")
+    version = int(prelude["version"])
+    if not 1 <= version <= FORMAT_VERSION:
+        raise IndexFormatError(
+            f"{path}: format version {version} not supported "
+            f"(this build reads <= {FORMAT_VERSION})"
+        )
+    json_len = int(prelude["json_len"])
+    if json_len > len(raw) - _PRELUDE.itemsize:
+        raise IndexFormatError(f"{path}: header table length {json_len} overruns "
+                               "the header pages — corrupt header")
+    try:
+        meta = json.loads(raw[_PRELUDE.itemsize : _PRELUDE.itemsize + json_len])
+    except ValueError as e:
+        raise IndexFormatError(f"{path}: unparseable header table: {e}") from e
+    # a bit-flipped header can parse as JSON and still be garbage: any
+    # missing/ill-typed field must surface as IndexFormatError, not as a
+    # KeyError/TypeError leaking out of the reader
+    try:
+        n = int(meta["n"])
+        sector_bytes = int(meta["sector_bytes"])
+        sections = dict(meta.get("sections", {}))
+        spans = []
+        for name, s in sections.items():
+            offset, nbytes = int(s["offset"]), int(s["nbytes"])
+            if offset % PAGE_BYTES:
+                raise IndexFormatError(f"{path}: section {name} offset "
+                                       f"{offset} is not page-aligned")
+            if offset < HEADER_PAGES * PAGE_BYTES:
+                raise IndexFormatError(f"{path}: section {name} offset "
+                                       f"{offset} overlaps the header pages")
+            if nbytes < 0:
+                raise IndexFormatError(f"{path}: section {name} has "
+                                       f"negative size {nbytes}")
+            spans.append((offset, offset + _page_up(nbytes), name))
+            if offset + nbytes > file_bytes:
+                raise IndexFormatError(
+                    f"{path}: section {name} ends at {offset + nbytes} but "
+                    f"the file is {file_bytes} B — truncated index"
+                )
+            # dtype x shape must account for exactly nbytes, else a lying
+            # table would mmap past the section (or fail as a raw ValueError)
+            shape = tuple(int(x) for x in s["shape"])
+            if s["dtype"] == "record":
+                want = (n,)
+                itemsize = sector_bytes if sector_bytes > 0 else -1
+            else:
+                want = shape
+                itemsize = np.dtype(s["dtype"]).itemsize
+            expect = int(np.prod(want, dtype=np.int64)) * itemsize
+            if shape != want or expect != nbytes:
+                raise IndexFormatError(
+                    f"{path}: section {name} declares shape {shape} x "
+                    f"{s['dtype']} but nbytes={nbytes} (expected {expect} "
+                    f"for shape {want}) — corrupt section table"
+                )
+        header = IndexHeader(
+            path=path,
+            version=version,
+            n=int(meta["n"]),
+            dim=int(meta["dim"]),
+            degree=int(meta["degree"]),
+            sector_bytes=int(meta["sector_bytes"]),
+            medoid=int(meta["medoid"]),
+            config=dict(meta.get("config", {})),
+            sections=sections,
+            file_bytes=file_bytes,
+        )
+    except (KeyError, TypeError, ValueError) as e:
+        if isinstance(e, IndexFormatError):
+            raise
+        raise IndexFormatError(f"{path}: corrupt header table: {e!r}") from e
+    spans.sort()
+    for (_, end_a, name_a), (start_b, _, name_b) in zip(spans, spans[1:]):
+        if start_b < end_a:
+            raise IndexFormatError(f"{path}: sections {name_a} and {name_b} "
+                                   "overlap — corrupt section table")
+    if header.n < 0 or header.dim <= 0 or header.degree <= 0:
+        raise IndexFormatError(f"{path}: nonsensical geometry "
+                               f"n={header.n} dim={header.dim} degree={header.degree}")
+    if not 0 <= header.medoid < max(header.n, 1):
+        raise IndexFormatError(f"{path}: medoid {header.medoid} out of "
+                               f"range [0, {header.n})")
+    if header.sector_bytes != record_sector_bytes(header.dim, header.degree):
+        raise IndexFormatError(
+            f"{path}: sector_bytes={header.sector_bytes} inconsistent with "
+            f"dim={header.dim} degree={header.degree} (expected "
+            f"{record_sector_bytes(header.dim, header.degree)})"
+        )
+    return header
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexFile:
+    """Read-side handle: header + zero-copy memmap views per section."""
+
+    header: IndexHeader
+
+    def section(self, name: str) -> np.memmap:
+        s = self.header.sections.get(name)
+        if s is None:
+            raise IndexFormatError(f"{self.header.path}: no section {name!r}")
+        h = self.header
+        dtype = (
+            record_dtype(h.dim, h.degree) if s["dtype"] == "record"
+            else np.dtype(s["dtype"])
+        )
+        shape = tuple(s["shape"]) if s["dtype"] != "record" else (h.n,)
+        try:
+            return np.memmap(h.path, dtype=dtype, mode="r", offset=s["offset"],
+                             shape=shape)
+        except (ValueError, OSError) as e:
+            raise IndexFormatError(
+                f"{h.path}: cannot map section {name}: {e}"
+            ) from e
+
+    def has_section(self, name: str) -> bool:
+        return name in self.header.sections
+
+    def records(self) -> np.memmap:
+        return self.section(SEC_RECORDS)
+
+    def vectors(self) -> np.ndarray:
+        """Full-precision vectors parsed out of the record sectors."""
+        return np.ascontiguousarray(self.records()["vec"])
+
+    def neighbors(self) -> np.ndarray:
+        return np.ascontiguousarray(self.section(SEC_NEIGHBORS))
+
+    def pq_books(self) -> np.ndarray:
+        return np.ascontiguousarray(self.section(SEC_PQ_BOOKS))
+
+    def pq_codes(self) -> np.ndarray:
+        return np.ascontiguousarray(self.section(SEC_PQ_CODES))
+
+    def filter_kinds(self) -> list[str]:
+        return [
+            name[len(FILTER_PREFIX):]
+            for name in self.header.sections
+            if name.startswith(FILTER_PREFIX)
+        ]
+
+    def filter_array(self, kind: str) -> np.ndarray:
+        return np.ascontiguousarray(self.section(FILTER_PREFIX + kind))
+
+
+def read_index(path: str) -> IndexFile:
+    return IndexFile(header=read_header(path))

@@ -1,0 +1,346 @@
+"""Persistence: save/load roundtrip, the disk tier, and measured I/O.
+
+The contract under test:
+
+  * ``save`` -> ``load`` returns an engine whose search output (ids,
+    dists, every stats counter) is bit-identical to the freshly built
+    in-memory engine, in all five modes, for both the memory and the
+    disk record tier — load never rebuilds the graph or retrains PQ.
+  * The disk tier *measures* its reads: ``DiskRecordStore.pages_read``
+    deltas reconcile exactly with summed ``SearchStats.n_ios`` (x pages
+    per record), gate reads strictly fewer pages than post on a
+    selective filter, and the cache tier composes on top unchanged.
+  * The format rejects bad magic, newer versions, and truncated files.
+"""
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import GateANNEngine, SearchConfig
+from repro.store import (
+    FORMAT_VERSION,
+    PAGE_BYTES,
+    DiskRecordStore,
+    IndexFormatError,
+    read_header,
+    read_index,
+)
+from repro.store.format import pack_records, record_sector_bytes
+
+MODES = ("gate", "post", "early", "pre_naive", "unfiltered")
+RECORD = 4096  # tiny-corpus records round up to one 4 KB sector
+
+
+def _search(engine, queries, mode, L=64, W=4):
+    kind = None if mode == "unfiltered" else "label"
+    params = None if mode == "unfiltered" else np.zeros(queries.shape[0], np.int32)
+    return engine.search(
+        queries, filter_kind=kind, filter_params=params,
+        search_config=SearchConfig(mode=mode, search_l=L, beam_width=W),
+    )
+
+
+@pytest.fixture(scope="module")
+def index_path(tiny_engine, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("index") / "tiny.gann")
+    tiny_engine.save(path)
+    return path
+
+
+@pytest.fixture(scope="module")
+def mem_engine(index_path):
+    return GateANNEngine.load(index_path)
+
+
+@pytest.fixture(scope="module")
+def disk_engine(index_path):
+    return GateANNEngine.load(index_path, store_tier="disk")
+
+
+# -- roundtrip --------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_roundtrip_bit_identical(tiny_engine, tiny_corpus, mem_engine,
+                                 disk_engine, mode):
+    """Loaded engines (both tiers) match the freshly built one exactly."""
+    _, _, queries = tiny_corpus
+    base = _search(tiny_engine, queries, mode)
+    for name, eng in (("memory", mem_engine), ("disk", disk_engine)):
+        out = _search(eng, queries, mode)
+        msg = f"tier={name} mode={mode}"
+        np.testing.assert_array_equal(np.asarray(out.ids),
+                                      np.asarray(base.ids), err_msg=msg)
+        np.testing.assert_array_equal(np.asarray(out.dists),
+                                      np.asarray(base.dists), err_msg=msg)
+        for f in base.stats._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(out.stats, f)),
+                np.asarray(getattr(base.stats, f)), err_msg=f"{msg} stats.{f}")
+
+
+def test_load_never_rebuilds(index_path, monkeypatch):
+    """load must not touch the graph builder or the PQ trainer."""
+    from repro.core import engine as enginem
+
+    def boom(*a, **k):
+        raise AssertionError("load rebuilt index state")
+
+    monkeypatch.setattr(enginem.graphm, "build_vamana", boom)
+    monkeypatch.setattr(enginem.pqm, "train_pq", boom)
+    eng = GateANNEngine.load(index_path)
+    assert eng.codes.shape[0] == eng.vectors.shape[0]
+
+
+def test_loaded_components_match(tiny_engine, mem_engine):
+    np.testing.assert_array_equal(np.asarray(mem_engine.vectors),
+                                  np.asarray(tiny_engine.vectors))
+    np.testing.assert_array_equal(np.asarray(mem_engine.codes),
+                                  np.asarray(tiny_engine.codes))
+    np.testing.assert_array_equal(np.asarray(mem_engine.codec.books),
+                                  np.asarray(tiny_engine.codec.books))
+    np.testing.assert_array_equal(
+        np.asarray(mem_engine.neighbor_store.neighbors),
+        np.asarray(tiny_engine.neighbor_store.neighbors))
+    assert int(mem_engine.medoid) == int(tiny_engine.medoid)
+    assert set(mem_engine.filters) == set(tiny_engine.filters)
+    assert mem_engine.config == tiny_engine.config
+
+
+def test_load_config_overrides(index_path):
+    eng = GateANNEngine.load(index_path, r_max=4)
+    assert eng.neighbor_store.r_max == 4
+    eng2 = GateANNEngine.load(index_path, {"r_max": 6})
+    assert eng2.neighbor_store.r_max == 6
+    # misspelled overrides must raise, not silently no-op
+    with pytest.raises(ValueError, match="cache_budget"):
+        GateANNEngine.load(index_path, cache_budget=1 << 20)
+
+
+def test_save_over_live_disk_engine(index_path, tmp_path, tiny_corpus):
+    """Re-saving onto the file backing a live disk engine must not corrupt
+    the mapping mid-search (write-then-rename keeps the old inode)."""
+    _, _, queries = tiny_corpus
+    path = str(tmp_path / "live.gann")
+    shutil.copyfile(index_path, path)
+    disk = GateANNEngine.load(path, store_tier="disk")
+    base = _search(disk, queries[:4], "gate")
+    disk.save(path)  # overwrites the very file the memmap is backed by
+    out = _search(disk, queries[:4], "gate")
+    np.testing.assert_array_equal(np.asarray(out.ids), np.asarray(base.ids))
+    # and a fresh load of the re-saved file agrees too
+    out2 = _search(GateANNEngine.load(path, store_tier="disk"), queries[:4], "gate")
+    np.testing.assert_array_equal(np.asarray(out2.ids), np.asarray(base.ids))
+
+
+# -- measured I/O -----------------------------------------------------------
+
+def test_disk_pages_reconcile_and_gate_lt_post(disk_engine, tiny_corpus):
+    """Measured sector reads == modeled n_ios; tunneling saves real pages."""
+    _, _, queries = tiny_corpus
+    store = disk_engine.record_store
+    assert isinstance(store, DiskRecordStore)
+    pages = {}
+    for mode in ("gate", "post"):
+        before = store.pages_read
+        out = _search(disk_engine, queries, mode)
+        ids = np.asarray(out.ids)  # materialize => all callbacks ran
+        assert ids.shape[0] == queries.shape[0]
+        measured = store.pages_read - before
+        modeled = int(np.sum(np.asarray(out.stats.n_ios))) * store.pages_per_record
+        assert measured == modeled, mode
+        pages[mode] = measured
+    assert pages["gate"] < pages["post"]
+    assert store.bytes_read == store.pages_read * PAGE_BYTES
+    assert store.records_read * store.pages_per_record == store.pages_read
+
+
+def test_cache_tier_composes_on_disk(disk_engine, tiny_corpus):
+    """A cache in front of the disk tier: identical ids, I/O conservation,
+    and the file only ever sees the misses (measured)."""
+    _, _, queries = tiny_corpus
+    store = disk_engine.record_store
+    base = _search(disk_engine, queries, "gate")
+    base_ids = np.asarray(base.ids)
+    base_ios = np.asarray(base.stats.n_ios)
+    cached = disk_engine.with_cache(64 * RECORD)
+    before = store.pages_read
+    out = _search(cached, queries, "gate")
+    ids = np.asarray(out.ids)
+    measured = store.pages_read - before
+    np.testing.assert_array_equal(ids, base_ids)
+    ios = np.asarray(out.stats.n_ios)
+    hits = np.asarray(out.stats.n_cache_hits)
+    np.testing.assert_array_equal(ios + hits, base_ios)
+    assert int(hits.sum()) > 0
+    assert measured == int(ios.sum()) * store.pages_per_record
+
+
+def test_adaptive_cache_composes_on_disk(disk_engine, tiny_corpus):
+    _, _, queries = tiny_corpus
+    base = _search(disk_engine, queries, "gate")
+    eng = disk_engine.with_cache(64 * RECORD, policy="adaptive", refresh_every=1)
+    for _ in range(2):
+        out = _search(eng, queries, "gate")
+        np.testing.assert_array_equal(np.asarray(out.ids), np.asarray(base.ids))
+        np.testing.assert_array_equal(
+            np.asarray(out.stats.n_ios) + np.asarray(out.stats.n_cache_hits),
+            np.asarray(base.stats.n_ios))
+
+
+def test_memory_report_disk_lines(disk_engine, index_path):
+    rep = disk_engine.memory_report()
+    assert rep["record_tier"] == "disk"
+    assert rep["disk_path"] == index_path
+    assert rep["disk_index_bytes"] == os.path.getsize(index_path)
+    assert rep["record_tier_bytes"] == rep["n"] * rep["disk_sector_bytes"]
+    assert rep["disk_pages_read"] >= 0
+    assert rep["disk_bytes_read"] == rep["disk_pages_read"] * PAGE_BYTES
+
+
+# -- the format itself ------------------------------------------------------
+
+def test_header_layout(index_path, tiny_engine):
+    h = read_header(index_path)
+    n, d = tiny_engine.vectors.shape
+    assert h.version == FORMAT_VERSION
+    assert (h.n, h.dim) == (n, d)
+    assert h.medoid == int(tiny_engine.medoid)
+    assert h.sector_bytes == record_sector_bytes(h.dim, h.degree)
+    assert h.config["r_max"] == tiny_engine.config.r_max
+    for name, s in h.sections.items():
+        assert s["offset"] % PAGE_BYTES == 0, name
+        assert s["offset"] + s["nbytes"] <= h.file_bytes, name
+    for expect in ("records", "neighbors", "pq_books", "pq_codes",
+                   "filter_label", "filter_range"):
+        assert expect in h.sections
+    assert "tiny.gann" in h.describe()
+
+
+def test_record_sectors_page_aligned(tiny_engine):
+    vecs = np.asarray(tiny_engine.vectors[:5])
+    nbrs = np.asarray(tiny_engine.record_store.neighbors[:5])
+    rec = pack_records(vecs, nbrs)
+    assert rec.dtype.itemsize % PAGE_BYTES == 0
+    np.testing.assert_array_equal(rec["vec"], vecs.astype("<f4"))
+    np.testing.assert_array_equal(rec["nbrs"], nbrs.astype("<i4"))
+    np.testing.assert_array_equal(rec["deg"], (nbrs >= 0).sum(1))
+
+
+def test_disk_fetch_matches_memory(disk_engine, tiny_engine):
+    """The host callback returns the same bytes as the in-memory store."""
+    import jax.numpy as jnp
+
+    ids = jnp.asarray([[0, 1, 7, -1, 1999]], jnp.int32)
+    vecs_d, nbrs_d = disk_engine.record_store.fetch_fn()(ids)
+    vecs_m, nbrs_m = tiny_engine.record_store.fetch_fn()(ids)
+    np.testing.assert_array_equal(np.asarray(vecs_d), np.asarray(vecs_m))
+    np.testing.assert_array_equal(np.asarray(nbrs_d), np.asarray(nbrs_m))
+
+
+def test_bad_magic_rejected(index_path, tmp_path):
+    bad = str(tmp_path / "bad_magic.gann")
+    shutil.copyfile(index_path, bad)
+    with open(bad, "r+b") as f:
+        f.write(b"NOPE")
+    with pytest.raises(IndexFormatError, match="magic"):
+        read_header(bad)
+    with pytest.raises(IndexFormatError):
+        GateANNEngine.load(bad)
+
+
+def test_newer_version_rejected(index_path, tmp_path):
+    bad = str(tmp_path / "vnext.gann")
+    shutil.copyfile(index_path, bad)
+    with open(bad, "r+b") as f:
+        f.seek(4)
+        f.write(np.uint32(FORMAT_VERSION + 1).tobytes())
+    with pytest.raises(IndexFormatError, match="version"):
+        GateANNEngine.load(bad)
+
+
+def test_truncated_file_rejected(index_path, tmp_path):
+    bad = str(tmp_path / "trunc.gann")
+    shutil.copyfile(index_path, bad)
+    h = read_header(index_path)
+    os.truncate(bad, h.file_bytes // 2)
+    with pytest.raises(IndexFormatError, match="truncat"):
+        read_header(bad)
+    with pytest.raises(IndexFormatError):
+        GateANNEngine.load(bad, store_tier="disk")
+
+
+def _write_raw_header(path, meta, pad_bytes=0):
+    """A syntactically valid header with arbitrary (possibly bogus) meta."""
+    import json
+
+    from repro.store.format import HEADER_PAGES, _PRELUDE, FORMAT_MAGIC
+
+    blob = json.dumps(meta).encode()
+    prelude = np.zeros((), dtype=_PRELUDE)
+    prelude["magic"] = FORMAT_MAGIC
+    prelude["version"] = FORMAT_VERSION
+    prelude["json_len"] = len(blob)
+    with open(path, "wb") as f:
+        f.write(prelude.tobytes())
+        f.write(blob)
+        f.write(b"\0" * (HEADER_PAGES * PAGE_BYTES - _PRELUDE.itemsize - len(blob)))
+        f.write(b"\0" * pad_bytes)
+
+
+@pytest.mark.parametrize("meta", [
+    {},  # everything missing
+    {"n": 4, "dim": 2, "degree": 2, "sector_bytes": 4096, "medoid": 0,
+     "sections": {"records": {"offset": 16384}}},  # section missing nbytes
+    {"n": 4, "dim": 2, "degree": 2, "sector_bytes": 0, "medoid": 0,
+     "sections": {}},  # zero sector size (would div-by-zero downstream)
+    {"n": 4, "dim": -1, "degree": 2, "sector_bytes": 4096, "medoid": 0,
+     "sections": {}},  # nonsensical geometry
+    {"n": "lots", "dim": 2, "degree": 2, "sector_bytes": 4096, "medoid": 0,
+     "sections": {}},  # ill-typed field
+    {"n": 100000, "dim": 2, "degree": 2, "sector_bytes": 4096, "medoid": 0,
+     "sections": {"records": {"offset": 16384, "nbytes": 4096,
+                              "dtype": "record", "shape": [1]}}},
+    # ^ lying records shape: nbytes fits the file but not n x sector
+    {"n": 4, "dim": 2, "degree": 2, "sector_bytes": 4096, "medoid": 0,
+     "sections": {"pq_codes": {"offset": 16384, "nbytes": 99,
+                               "dtype": "<i4", "shape": [4, 8]}}},
+    # ^ dtype x shape inconsistent with nbytes (would mmap wrong bytes)
+    {"n": 4, "dim": 2, "degree": 2, "sector_bytes": 4096, "medoid": 0,
+     "sections": {"neighbors": {"offset": 16384, "nbytes": -5000,
+                                "dtype": "<i4", "shape": [4, 2]}}},
+    # ^ negative section size
+    {"n": 4, "dim": 2000, "degree": 2, "sector_bytes": 4096, "medoid": 0,
+     "sections": {}},
+    # ^ sector_bytes inconsistent with dim/degree (record dtype would
+    #   read past the section at the wrong pages_per_record)
+    {"n": 4, "dim": 2, "degree": 2, "sector_bytes": 4096, "medoid": 10 ** 9,
+     "sections": {}},  # medoid out of [0, n)
+    {"n": 4, "dim": 2, "degree": 2, "sector_bytes": 4096, "medoid": 0,
+     "sections": {"pq_codes": {"offset": 0, "nbytes": 0,
+                               "dtype": "<i4", "shape": [0, 0]}}},
+    # ^ section claiming the header pages as data
+    {"n": 4, "dim": 2, "degree": 2, "sector_bytes": 4096, "medoid": 0,
+     "sections": {"pq_codes": {"offset": 16384, "nbytes": 4096,
+                               "dtype": "<u1", "shape": [4096]},
+                  "neighbors": {"offset": 16384, "nbytes": 4096,
+                                "dtype": "<u1", "shape": [4096]}}},
+    # ^ overlapping sections
+])
+def test_corrupt_parseable_header_rejected(tmp_path, meta):
+    """JSON that parses but lies must still come out as IndexFormatError."""
+    p = str(tmp_path / "corrupt.gann")
+    _write_raw_header(p, meta, pad_bytes=8192)
+    with pytest.raises(IndexFormatError):
+        read_header(p)
+
+
+def test_not_an_index_rejected(tmp_path):
+    p = str(tmp_path / "tiny.gann")
+    with open(p, "wb") as f:
+        f.write(b"hello world")
+    with pytest.raises(IndexFormatError):
+        read_header(p)
+    with pytest.raises(IndexFormatError):
+        read_index(os.path.join(str(tmp_path), "missing.gann"))

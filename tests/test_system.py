@@ -1,6 +1,7 @@
 """End-to-end behaviour tests for the GateANN system (engine-level)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import SearchConfig, recall_at_k
 from repro.core.io_model import DEFAULT_COST_MODEL
@@ -55,6 +56,101 @@ def test_rmax_is_runtime_knob(tiny_corpus):
                      search_config=SearchConfig(mode="gate", search_l=64))
     ids = np.asarray(out.ids)
     assert (np.asarray(labels)[ids[ids >= 0]] == 0).all()
+
+
+def test_with_cache_threads_neighbors_explicitly(tiny_engine):
+    """with_cache must not require a ``neighbors`` attribute on the
+    backing — the sharded tier only exposes ``local_neighbors`` (and a
+    regression here broke every non-in-memory backing)."""
+    import dataclasses
+
+    from repro.store import CachedRecordStore, ShardedRecordStore
+
+    backing = ShardedRecordStore(
+        local_vectors=tiny_engine.vectors,
+        local_neighbors=tiny_engine.record_store.neighbors,
+        rows_per_shard=int(tiny_engine.vectors.shape[0]),
+    )
+    eng = dataclasses.replace(tiny_engine, record_store=backing)
+    cached = eng.with_cache(32 * 4096)
+    assert isinstance(cached.record_store, CachedRecordStore)
+    assert cached.record_store.backing is backing
+    assert cached.record_store.n_cached == 32
+    # and budget 0 unwraps back to the bare backing without touching it
+    assert cached.with_cache(0).record_store is backing
+    # a *partial* shard (local rows != corpus rows) must be rejected
+    # loudly — its adjacency is locally indexed, not global
+    half = int(tiny_engine.vectors.shape[0]) // 2
+    partial = ShardedRecordStore(
+        local_vectors=tiny_engine.vectors[:half],
+        local_neighbors=tiny_engine.record_store.neighbors[:half],
+        rows_per_shard=half,
+    )
+    eng_partial = dataclasses.replace(tiny_engine, record_store=partial)
+    with pytest.raises(ValueError, match="partial"):
+        eng_partial.with_cache(32 * 4096)
+
+
+def test_recall_at_k_matches_reference():
+    """The broadcast recall must equal the old per-row set loop exactly."""
+
+    def reference(result_ids, gt_ids, k=10):
+        res = np.asarray(result_ids)[:, :k]
+        hits = denom = 0
+        for r, g in zip(res, np.asarray(gt_ids)[:, :k]):
+            gset = set(int(x) for x in g if x >= 0)
+            if not gset:
+                continue
+            hits += len(gset & set(int(x) for x in r if x >= 0))
+            denom += len(gset)
+        return hits / max(denom, 1)
+
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        b, k = int(rng.integers(1, 12)), int(rng.integers(1, 12))
+        res = rng.integers(-1, 40, size=(b, k + 2))  # dup ids + -1 pads
+        gt = np.full((b, k), -1, np.int64)
+        for row in range(b):  # unique ids per gt row, variable fill
+            fill = int(rng.integers(0, k + 1))
+            gt[row, :fill] = rng.choice(40, size=fill, replace=False)
+        got = recall_at_k(res, gt, k)
+        want = reference(res, gt, k)
+        assert got == pytest.approx(want), (trial, got, want)
+    assert recall_at_k(np.full((3, 5), -1), np.full((3, 5), -1), 5) == 0.0
+
+
+def test_rag_mixed_predicate_batch(tiny_engine, tiny_corpus):
+    """retrieve() must serve a batch mixing predicate kinds (grouped by
+    kind, results merged in request order) instead of asserting."""
+    from repro.serve.rag import RAGRequest, RAGServer
+
+    _, _, queries = tiny_corpus
+    n = int(tiny_engine.vectors.shape[0])
+    server = RAGServer(
+        engine=tiny_engine, cfg=None, params=None, layout=None,
+        passage_tokens=np.zeros((n, 2), np.int32),
+        search_config=SearchConfig(mode="gate", search_l=48, beam_width=4),
+    )
+    reqs = []
+    for i in range(6):
+        if i % 3 == 0:  # unfiltered request
+            reqs.append(RAGRequest(query_vec=queries[i], prompt_tokens=np.zeros(2, np.int32)))
+        else:  # equality predicate, two different targets
+            reqs.append(RAGRequest(
+                query_vec=queries[i], prompt_tokens=np.zeros(2, np.int32),
+                filter_kind="label", filter_params=np.int32(i % 2),
+            ))
+    ids, stats = server.retrieve(reqs)
+    assert ids.shape == (6, server.search_config.result_k)
+    assert np.asarray(stats.n_ios).shape == (6,)
+    # per-request rows must equal the homogeneous sub-batch runs
+    for kind, idxs in (("label", [1, 2, 4, 5]), (None, [0, 3])):
+        sub = [reqs[i] for i in idxs]
+        sub_ids, sub_stats = server.retrieve(sub)
+        np.testing.assert_array_equal(ids[idxs], sub_ids)
+        np.testing.assert_array_equal(
+            np.asarray(stats.n_ios)[idxs], np.asarray(sub_stats.n_ios))
+    assert server.served_queries == 6 + 6  # both retrieve calls accounted
 
 
 def test_multilabel_subset_search(tiny_corpus):
