@@ -1,27 +1,41 @@
-"""Disk sweep: *measured* page reads vs the cost model's ``n_ios``.
+"""Disk sweep: *measured* reads and syscalls vs the cost model's ``n_ios``.
 
 Every other benchmark prices slow-tier I/O through the calibrated cost
 model.  This one builds the standard engine, persists it to the
 page-aligned index format, reloads it with ``store_tier="disk"`` and
 compares, per search mode and per cache budget:
 
-  * measured  — ``DiskRecordStore.pages_read`` deltas (the host callback
-                counts exactly the 4 KB-aligned sectors it gathered)
+  * measured  — ``DiskRecordStore`` counter deltas (the host callback
+                counts the sectors the loop requested AND what the
+                coalesced reader physically did)
   * modeled   — ``sum(SearchStats.n_ios) * pages_per_record`` (what the
                 cost model prices)
 
-The two must reconcile *exactly* — the search loop masks cache hits and
-filter-gated nodes to -1 before the fetch, so the file only ever sees
-the slow-tier reads.  Emits the benchmark-contract CSV
-``name,us_per_call,derived``:
+Two reconciliation contracts, both enforced nightly:
 
-  disk_<mode>_r<records>_pages_q    derived = measured pages read / query
+  * logical (exact): requested pages == modeled pages — cache hits and
+    filter-gated nodes never reach the file.
+  * physical (coalesced): ``unique_sectors_read <= sum(n_ios)`` (equality
+    iff no round fetched the same record for two queries at once), and
+    one vectored syscall per search round on the preadv path
+    (``syscalls == read_rounds``) or one per merged range on the
+    fallback (``syscalls == ranges_read``).
+
+Emits the benchmark-contract CSV ``name,us_per_call,derived``:
+
+  disk_<mode>_r<records>_pages_q    derived = requested pages / query
   disk_<mode>_r<records>_model_q    derived = modeled pages / query
   disk_<mode>_r<records>_reconciled derived = 1.0 iff measured == modeled
+  disk_<mode>_r<records>_uniq_q     derived = unique sectors read / query
+  disk_<mode>_r<records>_sys_round  derived = syscalls / read round
   disk_ids_match                    derived = 1.0 iff every disk-tier run
                                     returned ids identical to in-memory
   disk_gate_lt_post                 derived = 1.0 iff gate read strictly
                                     fewer pages than post (uncached)
+  disk_unique_le_ios                derived = 1.0 iff unique <= requested
+                                    sectors held in every cell
+  disk_syscall_contract             derived = 1.0 iff the syscall law for
+                                    the store's io_mode held in every cell
 
     PYTHONPATH=src python -m benchmarks.disk_sweep [--quick] [--json PATH]
 """
@@ -58,9 +72,12 @@ def sweep_disk(ctx, *, budgets=BUDGET_RECORDS, modes=MODES, search_l=100):
     # handle, same measured counters, same jit traces per mode)
     disk_engine = GateANNEngine.load(path, store_tier="disk")
     store = disk_engine.record_store
+    print(f"# disk io_mode: {store.io_mode}", file=sys.stderr)
 
     rows = []
     ids_match = True
+    unique_ok = True
+    syscall_ok = True
     gate_pages = post_pages = None
     for mode in modes:
         kind = None if mode == "unfiltered" else "label"
@@ -72,13 +89,30 @@ def sweep_disk(ctx, *, budgets=BUDGET_RECORDS, modes=MODES, search_l=100):
         for nrec in budgets:
             # budgets are in *records*; the store knows its sector size
             disk = disk_engine.with_cache(nrec * store.sector_bytes)
-            before = store.pages_read
+            before = store.io_counters()
             out = disk.search(queries, filter_kind=kind, filter_params=params,
                               search_config=cfg)
             ids = np.asarray(out.ids)  # materialize => all callbacks ran
-            measured = store.pages_read - before
+            after = store.io_counters()
+            d = {k: after[k] - before[k] for k in after}
+            measured = d["pages_read"]
             modeled = int(np.sum(np.asarray(out.stats.n_ios))) * store.pages_per_record
             ids_match &= bool(np.array_equal(ids, mem_ids))
+            # physical contracts: dedup never reads more than requested;
+            # the preadv path spends one vectored syscall per round (per
+            # touched segment), the pread fallback one per merged range
+            unique_ok &= d["unique_sectors_read"] <= d["records_read"]
+            if store.io_mode == "preadv":
+                # == read_rounds on this (unsharded) index; a sharded one
+                # may spend up to one call per touched segment per round
+                syscall_ok &= (
+                    d["read_rounds"] <= d["syscalls"]
+                    <= d["read_rounds"] * store.n_shards
+                )
+            elif store.io_mode == "pread":
+                syscall_ok &= d["syscalls"] == d["ranges_read"]
+            else:  # gather oracle issues no explicit syscalls
+                syscall_ok &= d["syscalls"] == 0
             if mode == "gate" and nrec == 0:
                 gate_pages = measured
             if mode == "post" and nrec == 0:
@@ -90,10 +124,18 @@ def sweep_disk(ctx, *, budgets=BUDGET_RECORDS, modes=MODES, search_l=100):
                              derived=modeled / nq))
             rows.append(dict(name=f"disk_{mode}_r{nrec}_reconciled", lat1_us=0.0,
                              derived=float(measured == modeled)))
+            rows.append(dict(name=f"disk_{mode}_r{nrec}_uniq_q", lat1_us=lat,
+                             derived=d["unique_sectors_read"] / nq))
+            rows.append(dict(name=f"disk_{mode}_r{nrec}_sys_round", lat1_us=0.0,
+                             derived=d["syscalls"] / max(d["read_rounds"], 1)))
     rows.append(dict(name="disk_ids_match", lat1_us=0.0, derived=float(ids_match)))
     if gate_pages is not None and post_pages is not None:
         rows.append(dict(name="disk_gate_lt_post", lat1_us=0.0,
                          derived=float(gate_pages < post_pages)))
+    rows.append(dict(name="disk_unique_le_ios", lat1_us=0.0,
+                     derived=float(unique_ok)))
+    rows.append(dict(name="disk_syscall_contract", lat1_us=0.0,
+                     derived=float(syscall_ok)))
     return rows
 
 

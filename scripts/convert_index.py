@@ -5,11 +5,19 @@
         --corpus corpus.npy [--labels labels.npy] [--attributes attrs.npy] \
         --out index.gann [--degree 32] [--build-l 64] [--pq-chunks 16]
 
-    # print the header: version, geometry, section table
+    # print the header: version, geometry, section table, shard manifest
     PYTHONPATH=src python scripts/convert_index.py inspect --index index.gann
 
     # load the index disk-tier, run a search smoke, reconcile measured I/O
     PYTHONPATH=src python scripts/convert_index.py verify --index index.gann
+
+    # split the record sectors into one segment file per model-axis shard
+    PYTHONPATH=src python scripts/convert_index.py shard \
+        --index index.gann --out sharded.gann --shards 4
+
+    # fold a sharded index back into a monolithic records section
+    PYTHONPATH=src python scripts/convert_index.py merge \
+        --index sharded.gann --out merged.gann
 """
 from __future__ import annotations
 
@@ -50,6 +58,40 @@ def cmd_inspect(args) -> int:
     return 0
 
 
+def _rewrite(index: str, out: str, shards: int) -> int:
+    """Re-shard an existing index: same records/graph/PQ/filters/config,
+    different record-segment layout (1 == monolithic)."""
+    from repro.store import read_index, write_index
+
+    idx = read_index(index)
+    h = idx.header
+    print(f"rewriting {index} ({h.n_shards} shard(s)) -> {out} "
+          f"({shards} shard(s))", file=sys.stderr)
+    write_index(
+        out,
+        vectors=idx.vectors(),
+        neighbors=idx.neighbors(),
+        pq_books=idx.pq_books(),
+        pq_codes=idx.pq_codes(),
+        medoid=h.medoid,
+        config=h.config,
+        filters={k: idx.filter_array(k) for k in idx.filter_kinds()},
+        shards=shards,
+    )
+    return cmd_inspect(argparse.Namespace(index=out))
+
+
+def cmd_shard(args) -> int:
+    if args.shards < 2:
+        print("shard: --shards must be >= 2 (use merge for 1)", file=sys.stderr)
+        return 2
+    return _rewrite(args.index, args.out, args.shards)
+
+
+def cmd_merge(args) -> int:
+    return _rewrite(args.index, args.out, 1)
+
+
 def cmd_verify(args) -> int:
     """Disk-tier load + search smoke: ids must match the in-memory load
     and measured page reads must reconcile with ``SearchStats.n_ios``."""
@@ -68,19 +110,25 @@ def cmd_verify(args) -> int:
     ok = True
     for mode in ("gate", "post") if kind else ("unfiltered",):
         cfg = SearchConfig(mode=mode, search_l=args.search_l, beam_width=4)
-        before = store.pages_read
+        before = store.io_counters()
         out_d = disk.search(queries, filter_kind=kind, filter_params=params,
                             search_config=cfg)
         ids_d = np.asarray(out_d.ids)  # materialize => callbacks done
-        measured = store.pages_read - before
+        after = store.io_counters()
+        d = {k: after[k] - before[k] for k in after}
+        measured = d["pages_read"]
         modeled = int(np.sum(np.asarray(out_d.stats.n_ios))) * store.pages_per_record
         out_m = mem.search(queries, filter_kind=kind, filter_params=params,
                            search_config=cfg)
         same = bool(np.array_equal(ids_d, np.asarray(out_m.ids)))
         reconciled = measured == modeled
-        ok &= same and reconciled
+        coalesced = d["unique_sectors_read"] <= d["records_read"]
+        ok &= same and reconciled and coalesced
         print(f"{mode:10s} ids_match={same} pages_read={measured} "
-              f"modeled={modeled} reconciled={reconciled}")
+              f"modeled={modeled} reconciled={reconciled} "
+              f"unique={d['unique_sectors_read']} syscalls={d['syscalls']} "
+              f"rounds={d['read_rounds']} [{store.io_mode}, "
+              f"{store.n_shards} shard(s)]")
     print("verify:", "OK" if ok else "FAILED")
     return 0 if ok else 1
 
@@ -111,6 +159,17 @@ def main() -> int:
     v.add_argument("--nq", type=int, default=8)
     v.add_argument("--search-l", type=int, default=48)
     v.set_defaults(fn=cmd_verify)
+
+    s = sub.add_parser("shard", help="split records into per-shard segments")
+    s.add_argument("--index", required=True)
+    s.add_argument("--out", required=True)
+    s.add_argument("--shards", type=int, required=True)
+    s.set_defaults(fn=cmd_shard)
+
+    m = sub.add_parser("merge", help="fold segments back into one records section")
+    m.add_argument("--index", required=True)
+    m.add_argument("--out", required=True)
+    m.set_defaults(fn=cmd_merge)
 
     args = ap.parse_args()
     return args.fn(args)

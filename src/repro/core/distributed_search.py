@@ -27,13 +27,79 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.frontier import _dedup_mask
+from repro.store import format as idx_format
 
 INVALID = jnp.int32(-1)
 INF = jnp.float32(3.4e38)
+
+
+def load_shard_records(
+    path: str, shard: int, *, n_shards: int | None = None
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Open ONLY this shard's record rows off a persistent index.
+
+    This is the per-host load path for the ``model``-axis record tier:
+    on a sharded index (``engine.save(shards=k)``) it memmaps just the
+    local segment file — the other shards' bytes are never opened; on a
+    monolithic index it memmaps a row-slice of the records section
+    (touching only those pages), with ``n_shards`` supplied by the
+    caller.  Rows are padded to ``rows_per_shard`` (zero vectors, -1
+    adjacency) exactly like ``ShardedRecordStore.shard_arrays``, so the
+    result drops into ``make_retrieve_step``'s ``rec_vecs`` /
+    ``rec_graph`` slots.
+
+    Returns ``(vectors (rows, D) f32, neighbors (rows, R) i32, rows)``.
+    """
+    idx = idx_format.read_index(path)
+    h = idx.header
+    if h.shards:
+        k = h.n_shards
+        if n_shards is not None and n_shards != k:
+            raise ValueError(
+                f"{path} is sharded {k}-way but n_shards={n_shards} requested"
+            )
+        rows = int(h.shards["rows_per_shard"])
+        if not 0 <= shard < k:
+            raise ValueError(f"shard {shard} out of range [0, {k})")
+        recs = idx.segment_records(shard)
+    else:
+        if n_shards is None:
+            raise ValueError(
+                f"{path} has monolithic records — pass n_shards to slice it"
+            )
+        k = int(n_shards)
+        rows = -(-h.n // k)
+        if not 0 <= shard < k:
+            raise ValueError(f"shard {shard} out of range [0, {k})")
+        recs = idx.records()[shard * rows : min((shard + 1) * rows, h.n)]
+    vecs = np.ascontiguousarray(recs["vec"], np.float32)
+    nbrs = np.ascontiguousarray(recs["nbrs"], np.int32)
+    pad = rows - vecs.shape[0]
+    if pad > 0:  # the last shard may run short of rows_per_shard
+        vecs = np.pad(vecs, ((0, pad), (0, 0)))
+        nbrs = np.pad(nbrs, ((0, pad), (0, 0)), constant_values=-1)
+    return vecs, nbrs, rows
+
+
+def load_sharded_record_arrays(
+    path: str, *, n_shards: int | None = None
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Stack every shard's rows for the single-process ``shard_map``
+    harness (tests / CPU-mesh emulation): the concatenation of
+    ``load_shard_records`` over all shards, shaped exactly like
+    ``ShardedRecordStore.shard_arrays`` output."""
+    idx = idx_format.read_index(path)
+    k = idx.header.n_shards if idx.header.shards else int(n_shards or 1)
+    parts = [load_shard_records(path, s, n_shards=None if idx.header.shards else k)
+             for s in range(k)]
+    vecs = np.concatenate([p[0] for p in parts])
+    nbrs = np.concatenate([p[1] for p in parts])
+    return vecs, nbrs, parts[0][2]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -124,8 +124,9 @@ def _make_cache_tier(backing, *, vectors, neighbors, medoid: int, config: Engine
 
 
 def _write_index_file(path, *, config, vectors, neighbors, codec, codes,
-                      medoid: int, filters: dict) -> None:
-    """Serialize every engine component into one page-aligned index file."""
+                      medoid: int, filters: dict, shards: int = 1) -> None:
+    """Serialize every engine component into one page-aligned index file
+    (plus one record segment per shard when ``shards > 1``)."""
     filter_arrays = {}
     if "label" in filters:
         filter_arrays["label"] = np.asarray(filters["label"].labels, np.int32)
@@ -142,13 +143,18 @@ def _write_index_file(path, *, config, vectors, neighbors, codec, codes,
         medoid=int(medoid),
         config=dataclasses.asdict(config),
         filters=filter_arrays,
+        shards=shards,
     )
 
 
 @dataclasses.dataclass
 class GateANNEngine:
     config: EngineConfig
-    vectors: jax.Array  # (N, D) — kept for ground-truth/debug only
+    # (N, D) full-precision corpus — ground-truth/debug only.  A device
+    # array for memory/host tiers; a LAZY host memmap view for disk-tier
+    # loads (np.asarray it on the explicit ground-truth path — the search
+    # path never reads it, so the corpus stays on disk)
+    vectors: Any
     record_store: Any
     neighbor_store: NeighborStore
     codec: pqm.PQCodec
@@ -229,12 +235,19 @@ class GateANNEngine:
         )
 
     # -- persistence -------------------------------------------------------
-    def save(self, path: str) -> None:
+    def save(self, path: str, *, shards: int = 1) -> None:
         """Write the whole index (records, graph, PQ, filters, config) to
         one page-aligned file (``repro.store.format``).
 
         ``load`` restores it without rebuilding the graph or retraining
         PQ; a disk-tier load serves records straight off this file.
+
+        ``shards=k`` splits the record sectors into one page-aligned
+        segment file per ``model``-axis shard (``<path>.seg<i>`` + a
+        manifest in the header) — a mesh host then opens only its own
+        shard's rows (``core.distributed_search.load_shard_records``),
+        and a single-host disk load serves all segments through one
+        coalesced reader.
         """
         backing = self.record_store
         while isinstance(backing, (CachedRecordStore, AdaptiveRecordCache)):
@@ -243,7 +256,7 @@ class GateANNEngine:
             path, config=self.config, vectors=self.vectors,
             neighbors=_store_neighbors(backing, int(self.vectors.shape[0])),
             codec=self.codec, codes=self.codes, medoid=int(self.medoid),
-            filters=self.filters,
+            filters=self.filters, shards=shards,
         )
 
     @classmethod
@@ -286,10 +299,11 @@ class GateANNEngine:
         codes = jnp.asarray(idx.pq_codes(), jnp.int32)
         if config.store_tier == "disk":
             record_store = DiskRecordStore.open(path)
-            # share the store's single record-section parse instead of
-            # materializing a second full-precision copy (the engine's
-            # ``vectors`` field is ground-truth/debug + cache-selection
-            # state; the disk search path itself never reads it)
+            # the store's LAZY host memmap view — no device transfer, no
+            # copy.  The engine's ``vectors`` field is ground-truth/debug
+            # state the disk search path never reads; cache selection
+            # gathers only hot rows host-side (select_hot_set degrades
+            # visit_freq to BFS rather than materialize the corpus)
             vectors = record_store.vectors
         elif config.store_tier == "host":
             vectors = jnp.asarray(idx.vectors(), jnp.float32)
@@ -482,6 +496,10 @@ class GateANNEngine:
             rep["disk_sector_bytes"] = store.sector_bytes
             rep["disk_pages_read"] = store.pages_read
             rep["disk_bytes_read"] = store.bytes_read
+            rep["disk_io_mode"] = store.io_mode
+            rep["disk_shards"] = store.n_shards
+            rep["disk_syscalls"] = store.syscalls
+            rep["disk_unique_sectors_read"] = store.unique_sectors_read
         elif isinstance(store, HostOffloadRecordStore):
             rep["record_tier"] = "host"
         return rep

@@ -88,8 +88,16 @@ class RAGServer:
             rep["cache_slots"] = store.n_slots
         return rep
 
+    def _empty_stats(self) -> SearchStats:
+        z = np.zeros((0,), np.int32)
+        return SearchStats(**{f: z for f in SearchStats._fields})
+
     def retrieve(self, requests: list[RAGRequest]):
         """Serve one request batch, mixed predicate kinds included.
+
+        An empty batch returns empty ids/stats ((0, K) / (0,)-shaped) —
+        production streams legitimately drain to nothing between ticks,
+        and the serving loop must not crash on them.
 
         Requests are grouped by ``filter_kind`` (the engine's jitted loop
         takes one predicate family per call), each group is searched as a
@@ -104,10 +112,12 @@ class RAGServer:
         bucketing belongs in the caller (see ROADMAP) where the padding
         rows can be accounted for.
         """
+        k = self.search_config.result_k
+        if not requests:
+            return np.zeros((0, k), np.int32), self._empty_stats()
         groups: dict = {}
         for i, r in enumerate(requests):
             groups.setdefault(r.filter_kind, []).append(i)
-        k = self.search_config.result_k
         all_ids = np.full((len(requests), k), -1, np.int32)
         stat_fields = {f: np.zeros((len(requests),), np.int32)
                        for f in SearchStats._fields}
@@ -134,6 +144,8 @@ class RAGServer:
 
     def build_prompts(self, requests: list[RAGRequest], retrieved_ids: np.ndarray):
         """Prompt = [passage tokens for top-k hits] + [request prompt]."""
+        if not requests:  # max() over an empty sequence has no identity
+            return np.zeros((0, 0), np.int32)
         prompts = []
         for r, ids in zip(requests, retrieved_ids):
             chunks = [self.passage_tokens[i] for i in ids if i >= 0]
@@ -149,6 +161,8 @@ class RAGServer:
     def generate(self, requests: list[RAGRequest], *, max_new_tokens: int = 16):
         """retrieve -> prefill -> greedy decode. Returns (tokens, stats)."""
         ids, stats = self.retrieve(requests)
+        if not requests:  # nothing to decode — keep the output shapes
+            return np.zeros((0, max_new_tokens), np.int32), stats
         prompts = self.build_prompts(requests, ids)
         b, p_len = prompts.shape
         total = p_len + max_new_tokens

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.store.cache import CachedRecordStore, record_nbytes, select_hot_set
+from repro.store.vector_store import is_lazy_host
 
 ADAPTIVE_POLICY = "adaptive"
 
@@ -93,7 +94,10 @@ class AdaptiveRecordCache:
     """
 
     backing: Any  # slow-tier record store
-    vectors: jax.Array  # (N, D) full records for re-materialization
+    # (N, D) full records for re-materialization — a device array for the
+    # in-memory tiers, or the disk tier's LAZY host memmap view (refreshes
+    # then gather only the hot rows host-side; the corpus stays on disk)
+    vectors: Any
     neighbors: jax.Array  # (N, R)
     budget_bytes: int
     ema_decay: float = 0.9
@@ -123,10 +127,11 @@ class AdaptiveRecordCache:
         max_partitions: int = 4,
         seed: int = 0,
     ) -> "AdaptiveRecordCache":
-        vecs = jnp.asarray(vectors, jnp.float32)
+        vecs = vectors if is_lazy_host(vectors) else jnp.asarray(vectors, jnp.float32)
         nbrs = jnp.asarray(neighbors, jnp.int32)
         # cold start: the static visit_freq hot set — the best filter-blind
-        # guess until real traffic populates the counters
+        # guess until real traffic populates the counters (select_hot_set
+        # degrades to BFS when the vectors are a lazy disk view)
         seed_hot = select_hot_set(
             neighbors=nbrs, medoid=medoid, budget_bytes=budget_bytes,
             policy="visit_freq", vectors=vecs, seed=seed,

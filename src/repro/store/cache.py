@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.tree_util import Partial
 
-from repro.store.vector_store import RecordFetchFn
+from repro.store.vector_store import RecordFetchFn, is_lazy_host
 
 CACHE_POLICIES = ("visit_freq", "bfs")
 
@@ -132,10 +132,13 @@ def select_hot_set(
     assert policy in CACHE_POLICIES, policy
     nbrs = np.asarray(neighbors)
     n, r = nbrs.shape
-    dim = int(np.asarray(vectors).shape[1]) if vectors is not None else 0
+    dim = int(vectors.shape[1]) if vectors is not None else 0
     per_record = record_nbytes(dim, r)
     n_slots = min(int(budget_bytes) // per_record, n)
-    if policy == "visit_freq" and vectors is not None:
+    # visit_freq samples whole-corpus traversals on device — with a lazy
+    # disk-backed vectors view that would materialize the corpus, so fall
+    # back to the BFS warm-up policy (vectors still size the budget above)
+    if policy == "visit_freq" and vectors is not None and not is_lazy_host(vectors):
         return visit_freq_hot_set(
             vectors, nbrs, int(medoid), n_slots, n_samples=n_samples, seed=seed
         )
@@ -188,7 +191,6 @@ class CachedRecordStore:
         rows are gathered on device, so a refresh costs O(n_slots), not
         a corpus round-trip.
         """
-        vecs = jnp.asarray(vectors, jnp.float32)
         nbrs = jnp.asarray(neighbors, jnp.int32)
         hot = np.asarray(hot_ids, np.int32)
         if n_slots is not None:
@@ -199,13 +201,22 @@ class CachedRecordStore:
         # an empty hot set keeps one dummy row (never hit: slot_of is all
         # -1) so the jit-side gather always has a non-empty operand
         rows = jnp.asarray(hot) if hot.size else jnp.zeros((1,), jnp.int32)
-        cache_vecs = vecs[rows]
+        dim = int(vectors.shape[1])
+        if is_lazy_host(vectors):
+            # disk-backed lazy view: gather ONLY the hot rows host-side —
+            # shipping the whole corpus to device would defeat the tier
+            rows_np = hot if hot.size else np.zeros((1,), np.int32)
+            cache_vecs = jnp.asarray(
+                np.ascontiguousarray(vectors[rows_np]), jnp.float32
+            )
+        else:
+            cache_vecs = jnp.asarray(vectors, jnp.float32)[rows]
         cache_nbrs = nbrs[rows]
         target = max(n_slots, 1) if n_slots is not None else int(cache_vecs.shape[0])
         pad = target - int(cache_vecs.shape[0])
         if pad > 0:
             cache_vecs = jnp.concatenate(
-                [cache_vecs, jnp.zeros((pad, vecs.shape[1]), jnp.float32)]
+                [cache_vecs, jnp.zeros((pad, dim), jnp.float32)]
             )
             cache_nbrs = jnp.concatenate(
                 [cache_nbrs, jnp.full((pad, nbrs.shape[1]), -1, jnp.int32)]

@@ -3,19 +3,53 @@
 ``DiskRecordStore`` serves ``(B, W)`` id beams straight off the
 page-aligned record section of an index file (store/format.py) through
 ``jax.experimental.io_callback``: the jitted search loop dispatches a
-beam, the host callback gathers the corresponding 4 KB-aligned sectors
-from an ``np.memmap``, and the result re-enters the trace.  Same
-``RecordFetchFn`` contract as the in-memory/host/sharded stores, so the
-cache tiers (``CachedRecordStore`` / ``AdaptiveRecordCache``) wrap it
-unchanged — a cache hit masks the id to -1 before the callback, so a hit
-costs zero file reads.
+beam, the host callback reads the corresponding 4 KB-aligned sectors,
+and the result re-enters the trace.  Same ``RecordFetchFn`` contract as
+the in-memory/host/sharded stores, so the cache tiers
+(``CachedRecordStore`` / ``AdaptiveRecordCache``) wrap it unchanged — a
+cache hit masks the id to -1 before the callback, so a hit costs zero
+file reads.
+
+The read path is **coalesced**, the way PipeANN keeps W reads in flight
+instead of issuing them one by one: each round's beam is sorted,
+deduplicated, and merged into contiguous sector ranges, then fetched as
+
+  * ``io_mode="preadv"`` (default where available) — ONE vectored
+    ``os.preadv`` per round and segment: wanted ranges scatter directly
+    into the output buffer, the gaps between them land in a reusable
+    discard buffer (counted in ``gap_sectors_read`` — the page-cache
+    over-read this trade buys its single syscall with; production
+    deployments bound it by sharding, see below).  Rounds wider than
+    ``IOV_MAX`` split into multiple counted calls.
+  * ``io_mode="pread"`` — one ``os.pread`` per merged range (no
+    over-read; ``syscalls == ranges_read``).
+  * ``io_mode="gather"`` — the legacy per-record memmap fancy-gather
+    (page faults, no explicit syscalls; kept as the parity oracle).
+
+Results are scattered back to beam order, so search output is
+bit-identical across all three modes.
 
 Unlike every other tier, this one *measures* its I/O instead of modeling
-it: monotonic ``pages_read`` / ``bytes_read`` / ``records_read`` counters
-advance inside the host callback by exactly the sectors gathered.  Tests
-and ``benchmarks/disk_sweep.py`` reconcile counter deltas against the
-search loop's ``SearchStats.n_ios`` — the paper's central quantity
-(sector reads removed by tunneling) measured, not modeled.
+it.  Two counter families advance inside the host callback, guarded by a
+``threading.Lock`` (engines sharing one store — every ``with_cache``
+re-wrap does — must not lose updates):
+
+  * logical  — ``records_read`` / ``pages_read`` / ``bytes_read``: the
+    sectors the search loop *requested* (duplicates included).  These
+    reconcile EXACTLY with summed ``SearchStats.n_ios`` — the mask
+    discipline check (cache hits and filter-gated nodes never reach the
+    file).
+  * physical — ``unique_sectors_read`` / ``ranges_read`` / ``syscalls``
+    / ``gap_sectors_read`` / ``read_rounds``: what the coalesced reader
+    actually did.  Contract: ``unique_sectors_read <= records_read``
+    with equality when a round has no intra-round duplicates, and on the
+    preadv path ``syscalls == read_rounds`` (one vectored read per round
+    per touched segment).
+
+A sharded index (``engine.save(shards=k)``) opens one reader per record
+segment; only the segments a round's beam touches are read (and on a
+mesh, ``core.distributed_search.load_shard_records`` opens just the
+local shard's file).
 
 Counter discipline: jax dispatch is asynchronous, so read the counters
 only after materializing the search outputs (``np.asarray(out.ids)`` or
@@ -24,7 +58,9 @@ output materialization implies all callbacks ran.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
+import threading
 from typing import Tuple
 
 import jax
@@ -33,13 +69,193 @@ import numpy as np
 from jax.experimental import io_callback
 from jax.tree_util import Partial
 
-from repro.store.format import PAGE_BYTES, IndexFile, read_header
+from repro.store.format import (
+    PAGE_BYTES,
+    SEGMENT_HEADER_PAGES,
+    IndexFile,
+    record_dtype,
+    read_header,
+)
+from repro.store.vector_store import is_lazy_host  # re-export (home base)
+
+_HAVE_PREADV = hasattr(os, "preadv")
+_HAVE_PREAD = hasattr(os, "pread")
+_IOV_MAX = 1000  # stay under the kernel's 1024-iovec ceiling
+_GAP_CHUNK = 1 << 20  # discard-buffer granularity for bridged gaps
+
+IO_MODES = ("preadv", "pread", "gather")
+
+
+def default_io_mode() -> str:
+    if _HAVE_PREADV:
+        return "preadv"
+    if _HAVE_PREAD:
+        return "pread"
+    return "gather"
+
+
+def merge_ranges(sectors: np.ndarray) -> np.ndarray:
+    """Sorted unique sector ids -> (R, 2) [start, count) contiguous runs."""
+    sectors = np.asarray(sectors, np.int64)
+    if sectors.size == 0:
+        return np.zeros((0, 2), np.int64)
+    breaks = np.flatnonzero(np.diff(sectors) != 1)
+    starts = np.concatenate([[0], breaks + 1])
+    ends = np.concatenate([breaks, [sectors.size - 1]])
+    return np.stack([sectors[starts], ends - starts + 1], axis=1)
+
+
+def _preadv_full(fd, views, offset) -> int:
+    """Vectored read of ``views`` at ``offset``, resuming short reads and
+    chunking at IOV_MAX; returns the number of preadv calls issued."""
+    calls = 0
+    pending = list(views)
+    off = int(offset)
+    while pending:
+        batch = pending[:_IOV_MAX]
+        want = sum(len(v) for v in batch)
+        got = os.preadv(fd, batch, off)
+        calls += 1
+        if got <= 0:
+            raise IOError(f"preadv: unexpected EOF at offset {off}")
+        off += got
+        if got == want:
+            pending = pending[_IOV_MAX:]
+            continue
+        # short read (EOF excluded by validation; signals can still truncate)
+        k = 0
+        while got >= len(batch[k]):
+            got -= len(batch[k])
+            k += 1
+        rest = list(batch[k:])
+        if got:
+            rest[0] = rest[0][got:]
+        pending = rest + pending[_IOV_MAX:]
+    return calls
+
+
+def _pread_full(fd, view, offset) -> int:
+    """Plain positional read into ``view``; returns syscalls issued."""
+    calls = 0
+    off = int(offset)
+    mv = memoryview(view)
+    while len(mv):
+        data = os.pread(fd, len(mv), off)
+        calls += 1
+        if not data:
+            raise IOError(f"pread: unexpected EOF at offset {off}")
+        mv[: len(data)] = data
+        mv = mv[len(data):]
+        off += len(data)
+    return calls
+
+
+@dataclasses.dataclass
+class _Segment:
+    """One open record file: fd for coalesced reads, lazy memmap for the
+    gather oracle and the lazy ``vectors`` view."""
+
+    path: str
+    row_start: int
+    n_rows: int
+    data_offset: int  # file offset of sector 0 (row ``row_start``)
+    rec_dtype: np.dtype
+    fd: int = -1
+    _mmap: np.memmap | None = None
+    # first-open is lazy and stores are shared across threads — an
+    # unsynchronized double-open would leak the losing thread's fd
+    _open_lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
+
+    def open_fd(self) -> int:
+        if self.fd < 0:
+            with self._open_lock:
+                if self.fd < 0:
+                    self.fd = os.open(self.path, os.O_RDONLY)
+        return self.fd
+
+    def records(self) -> np.memmap:
+        if self._mmap is None:
+            with self._open_lock:
+                if self._mmap is None:
+                    self._mmap = np.memmap(
+                        self.path, dtype=self.rec_dtype, mode="r",
+                        offset=self.data_offset, shape=(self.n_rows,),
+                    )
+        return self._mmap
+
+    def close(self) -> None:
+        with self._open_lock:
+            if self.fd >= 0:
+                os.close(self.fd)
+                self.fd = -1
+            self._mmap = None
+
+
+class LazySegmentVectors:
+    """Read-only lazy ``(N, D)`` corpus view over per-segment record
+    memmaps — the sharded counterpart of the single-segment memmap view.
+
+    Row indexing (int / slice / integer- or boolean-array) gathers ONLY
+    the touched rows off the touched segments; ``np.asarray`` is the
+    explicit materialization (ground-truth/debug) path.  Flagged
+    ``__lazy_host__`` so ``is_lazy_host`` keeps cache wiring host-side
+    regardless of segment count.
+    """
+
+    __lazy_host__ = True
+
+    def __init__(self, segments: list[_Segment], dim: int):
+        self._segments = segments
+        self._row_starts = np.asarray([s.row_start for s in segments], np.int64)
+        self._n = segments[-1].row_start + segments[-1].n_rows
+        self._dim = int(dim)
+
+    @property
+    def shape(self) -> tuple:
+        return (self._n, self._dim)
+
+    @property
+    def dtype(self):
+        return np.dtype(np.float32)
+
+    ndim = 2
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __getitem__(self, idx):
+        if isinstance(idx, (int, np.integer)):
+            if not -self._n <= idx < self._n:
+                raise IndexError(f"row {idx} out of range [0, {self._n})")
+            return self[np.asarray([idx], np.int64)][0]
+        if isinstance(idx, slice):
+            idx = np.arange(*idx.indices(self._n), dtype=np.int64)
+        idx = np.asarray(idx)
+        if idx.dtype == bool:
+            idx = np.flatnonzero(idx)
+        if idx.ndim != 1:
+            raise TypeError(
+                "LazySegmentVectors supports 1-D row indexing only; "
+                "np.asarray(...) it for anything fancier"
+            )
+        rows = np.where(idx < 0, idx + self._n, idx).astype(np.int64)
+        out = np.empty((rows.size, self._dim), np.float32)
+        seg_of = np.searchsorted(self._row_starts, rows, side="right") - 1
+        for si in np.unique(seg_of):
+            seg = self._segments[si]
+            mask = seg_of == si
+            out[mask] = seg.records()["vec"][rows[mask] - seg.row_start]
+        return out
+
+    def __array__(self, dtype=None, copy=None):  # noqa: D105 — np protocol
+        out = np.concatenate([s.records()["vec"] for s in self._segments])
+        return out.astype(dtype) if dtype is not None else out
 
 
 class DiskRecordStore:
     """Slow-tier record store backed by an on-disk index file."""
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, *, io_mode: str = "auto"):
         header = read_header(path)
         self.path = path
         self.header = header
@@ -48,24 +264,137 @@ class DiskRecordStore:
         self.degree = header.degree
         self.sector_bytes = header.sector_bytes
         self.pages_per_record = header.sector_bytes // PAGE_BYTES
-        # measured, monotonic I/O counters (advanced by the host callback)
-        self.pages_read = 0
-        self.bytes_read = 0
-        self.records_read = 0
-        self._records = IndexFile(header).records()  # (N,) sector memmap
+        if io_mode == "auto":
+            io_mode = default_io_mode()
+        if io_mode not in IO_MODES:
+            raise ValueError(f"io_mode={io_mode!r} not in {IO_MODES}")
+        if io_mode == "preadv" and not _HAVE_PREADV:
+            io_mode = "pread" if _HAVE_PREAD else "gather"
+        if io_mode == "pread" and not _HAVE_PREAD:
+            io_mode = "gather"
+        self.io_mode = io_mode
+        # measured, monotonic I/O counters (advanced by the host callback,
+        # guarded by _lock — stores are shared across with_cache re-wraps
+        # and may serve several engines/threads at once)
+        self._lock = threading.Lock()
+        self._reset_counters_locked()
+        rd = record_dtype(header.dim, header.degree)
+        idx = IndexFile(header)
+        if header.shards:
+            self._segments = []
+            for i, seg in enumerate(header.shards["segments"]):
+                idx.segment_records(i)  # validates the GSEG header now
+                self._segments.append(_Segment(
+                    path=header.segment_path(i),
+                    row_start=seg["row_start"], n_rows=seg["n_rows"],
+                    data_offset=SEGMENT_HEADER_PAGES * PAGE_BYTES,
+                    rec_dtype=rd,
+                ))
+        else:
+            self._segments = [_Segment(
+                path=path, row_start=0, n_rows=header.n,
+                data_offset=header.sections["records"]["offset"],
+                rec_dtype=rd,
+            )]
+        self._row_starts = np.asarray(
+            [s.row_start for s in self._segments], np.int64
+        )
+        self._scratch = bytearray(0)  # discard buffer for bridged gaps
         self._neighbors = None  # lazy full-adjacency parse (host convenience)
-        self._vectors = None
+        self._vectors_view = None  # lazy host view — never a device array
         # one Partial per store: stable pytree identity, so repeated
         # searches against the same store never retrace the jitted loop
         self._fetch = Partial(self._traced_fetch)
 
     @classmethod
-    def open(cls, path: str) -> "DiskRecordStore":
-        return cls(path)
+    def open(cls, path: str, **kwargs) -> "DiskRecordStore":
+        return cls(path, **kwargs)
+
+    def close(self) -> None:
+        for seg in self._segments:
+            seg.close()
+
+    def __del__(self):  # best-effort fd cleanup
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    # -- the coalesced physical read ---------------------------------------
+    def _gap_views(self, gap_bytes: int) -> list:
+        """Discard iovecs bridging ``gap_bytes`` (reused buffer — preadv
+        overwrites it per gap, and the contents are never looked at)."""
+        chunk = min(gap_bytes, _GAP_CHUNK)
+        if len(self._scratch) < chunk:
+            self._scratch = bytearray(chunk)
+        views = []
+        mv = memoryview(self._scratch)
+        while gap_bytes:
+            take = min(gap_bytes, _GAP_CHUNK)
+            views.append(mv[:take])
+            gap_bytes -= take
+        return views
+
+    def _read_unique(self, uniq: np.ndarray) -> Tuple[np.ndarray, dict]:
+        """Read the (sorted, unique) record sectors ``uniq`` coalesced.
+
+        Returns the (U,) structured records plus the physical-I/O tally
+        for this round (syscalls / ranges / gap sectors).
+        """
+        sector = self.sector_bytes
+        u = int(uniq.size)
+        buf = np.empty(u * sector, np.uint8)
+        out_mv = memoryview(buf)
+        io = {"syscalls": 0, "ranges": 0, "gap_sectors": 0}
+        seg_of = np.searchsorted(self._row_starts, uniq, side="right") - 1
+        bounds = np.searchsorted(seg_of, np.arange(len(self._segments) + 1))
+        pos = 0  # output cursor: sorted ids -> contiguous output slices
+        for si in range(len(self._segments)):
+            lo, hi = int(bounds[si]), int(bounds[si + 1])
+            if lo == hi:
+                continue
+            seg = self._segments[si]
+            local = uniq[lo:hi] - seg.row_start
+            ranges = merge_ranges(local)
+            io["ranges"] += int(ranges.shape[0])
+            if self.io_mode == "gather":
+                mm = seg.records()
+                got = mm[local]
+                buf.view(self._segments[0].rec_dtype)[pos : pos + local.size] = got
+                pos += local.size
+                continue
+            fd = seg.open_fd()
+            if self.io_mode == "pread":
+                for start, count in ranges:
+                    nb = int(count) * sector
+                    io["syscalls"] += _pread_full(
+                        fd, out_mv[pos * sector : pos * sector + nb],
+                        seg.data_offset + int(start) * sector,
+                    )
+                    pos += int(count)
+                continue
+            # preadv: one vectored call per round and segment — wanted
+            # ranges scatter straight into the output, bridged gaps land
+            # in the discard buffer
+            views = []
+            prev_end = None
+            for start, count in ranges:
+                if prev_end is not None and start > prev_end:
+                    gap = int(start - prev_end)
+                    io["gap_sectors"] += gap
+                    views.extend(self._gap_views(gap * sector))
+                nb = int(count) * sector
+                views.append(out_mv[pos * sector : pos * sector + nb])
+                pos += int(count)
+                prev_end = int(start + count)
+            io["syscalls"] += _preadv_full(
+                fd, views, seg.data_offset + int(ranges[0, 0]) * sector
+            )
+        return buf.view(self._segments[0].rec_dtype), io
 
     # -- the measured host read --------------------------------------------
     def _host_fetch(self, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """Gather record sectors for ``ids`` (>= 0); count what was read."""
+        """Serve record sectors for ``ids`` (>= 0); count what was read."""
         ids = np.asarray(ids)
         valid = ids >= 0
         flat = np.clip(ids, 0, self.n - 1).reshape(-1)
@@ -73,13 +402,25 @@ class DiskRecordStore:
         vecs = np.zeros(ids.shape + (self.dim,), np.float32)
         nbrs = np.full(ids.shape + (self.degree,), -1, np.int32)
         m = int(vmask.sum())
+        io = {"syscalls": 0, "ranges": 0, "gap_sectors": 0}
+        u = 0
         if m:
-            got = self._records[flat[vmask]]  # the only file reads
+            uniq, inv = np.unique(flat[vmask], return_inverse=True)
+            u = int(uniq.size)
+            recs, io = self._read_unique(uniq)
+            got = recs[inv]  # scatter back to beam order (dups included)
             vecs.reshape(-1, self.dim)[vmask] = got["vec"]
             nbrs.reshape(-1, self.degree)[vmask] = got["nbrs"]
-        self.records_read += m
-        self.pages_read += m * self.pages_per_record
-        self.bytes_read += m * self.sector_bytes
+        with self._lock:
+            self.records_read += m
+            self.pages_read += m * self.pages_per_record
+            self.bytes_read += m * self.sector_bytes
+            self.unique_sectors_read += u
+            self.ranges_read += io["ranges"]
+            self.syscalls += io["syscalls"]
+            self.gap_sectors_read += io["gap_sectors"]
+            self.fetch_rounds += 1
+            self.read_rounds += int(u > 0)
         return vecs, nbrs
 
     def _traced_fetch(self, ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -95,23 +436,51 @@ class DiskRecordStore:
         return self._fetch
 
     # -- measured-I/O reporting --------------------------------------------
+    def _reset_counters_locked(self) -> None:
+        # logical: what the search loop requested (reconciles with n_ios)
+        self.records_read = 0
+        self.pages_read = 0
+        self.bytes_read = 0
+        # physical: what the coalesced reader actually did
+        self.unique_sectors_read = 0
+        self.ranges_read = 0
+        self.syscalls = 0
+        self.gap_sectors_read = 0
+        self.fetch_rounds = 0
+        self.read_rounds = 0
+
     def io_counters(self) -> dict:
-        return {
-            "records_read": self.records_read,
-            "pages_read": self.pages_read,
-            "bytes_read": self.bytes_read,
-        }
+        with self._lock:
+            return {
+                "records_read": self.records_read,
+                "pages_read": self.pages_read,
+                "bytes_read": self.bytes_read,
+                "unique_sectors_read": self.unique_sectors_read,
+                "ranges_read": self.ranges_read,
+                "syscalls": self.syscalls,
+                "gap_sectors_read": self.gap_sectors_read,
+                "fetch_rounds": self.fetch_rounds,
+                "read_rounds": self.read_rounds,
+            }
 
     def reset_io_counters(self) -> None:
-        self.pages_read = self.bytes_read = self.records_read = 0
+        with self._lock:
+            self._reset_counters_locked()
 
     def index_bytes(self) -> int:
-        """Total on-disk footprint of the index file."""
-        return int(os.path.getsize(self.path))
+        """Total on-disk footprint: main file plus any record segments."""
+        total = int(os.path.getsize(self.path))
+        if self.header.shards:
+            total += sum(int(os.path.getsize(s.path)) for s in self._segments)
+        return total
 
     def record_bytes(self) -> int:
         """Slow-tier record-section bytes (same pricing as the other tiers)."""
         return self.n * self.sector_bytes
+
+    @property
+    def n_shards(self) -> int:
+        return len(self._segments) if self.header.shards else 1
 
     # -- host-side passthroughs (cache wiring, tests, ground truth) --------
     @property
@@ -123,9 +492,21 @@ class DiskRecordStore:
         return self._neighbors
 
     @property
-    def vectors(self) -> jax.Array:
-        if self._vectors is None:
-            self._vectors = jnp.asarray(
-                np.ascontiguousarray(self._records["vec"]), jnp.float32
-            )
-        return self._vectors
+    def vectors(self) -> np.ndarray:
+        """Full-precision vectors as a LAZY host view of the record file.
+
+        No device transfer and (for the single-segment case) no copy —
+        the paper-scale corpus must stay on disk until an explicit
+        ground-truth/debug path asks (``device_vectors``); at 1B x
+        128-dim the old eager materialization was the disk tier's undoing.
+        """
+        if self._vectors_view is None:
+            if len(self._segments) == 1:
+                self._vectors_view = self._segments[0].records()["vec"]
+            else:  # lazy across segments too — gathers only touched rows
+                self._vectors_view = LazySegmentVectors(self._segments, self.dim)
+        return self._vectors_view
+
+    def device_vectors(self) -> jax.Array:
+        """EXPLICIT full-corpus device materialization (ground truth/debug)."""
+        return jnp.asarray(np.ascontiguousarray(self.vectors), jnp.float32)

@@ -24,10 +24,20 @@ aligned sector per node, and every sidecar loads as a zero-copy
 ``np.memmap`` view.  Readers validate magic, version, and that every
 section lies inside the file (truncation), and raise ``IndexFormatError``
 otherwise.
+
+Format v2 adds **sharded record segments**: ``write_index(shards=k)``
+splits the record sectors row-wise into ``k`` page-aligned segment files
+(``<index>.seg<i>``, one per ``model``-axis shard, each with its own
+one-page "GSEG" header) and records a ``shards`` manifest in the main
+header instead of a monolithic ``records`` section.  A distributed
+serving host opens only its own shard's segment; the sidecar sections
+(adjacency, PQ, filters — the replicated fast tier) stay in the main
+file.  v1 files (monolithic records, no manifest) read unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
+import glob
 import json
 import os
 from typing import Any
@@ -37,9 +47,11 @@ import numpy as np
 from repro.store.cache import record_nbytes
 
 FORMAT_MAGIC = b"GANN"
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2  # v2: optional sharded record segments (v1 reads fine)
+SEGMENT_MAGIC = b"GSEG"
 PAGE_BYTES = 4096
 HEADER_PAGES = 4  # 16 KB of header keeps the JSON table comfortable
+SEGMENT_HEADER_PAGES = 1  # segment headers carry a small JSON blob only
 _PRELUDE = np.dtype([("magic", "S4"), ("version", "<u4"), ("json_len", "<u8")])
 
 # section names with a fixed meaning (filters are "filter_<kind>")
@@ -94,6 +106,22 @@ class IndexHeader:
     config: dict
     sections: dict  # name -> {offset, nbytes, dtype, shape}
     file_bytes: int
+    # sharded-record manifest (v2): {n_shards, rows_per_shard, segments:
+    # [{name, row_start, n_rows, nbytes}]} — None for monolithic records
+    shards: dict | None = None
+
+    @property
+    def n_shards(self) -> int:
+        """Record-segment count (1 when the records are monolithic)."""
+        return int(self.shards["n_shards"]) if self.shards else 1
+
+    def segment_path(self, shard: int) -> str:
+        """Absolute path of one shard's record segment file."""
+        if not self.shards:
+            raise IndexFormatError(f"{self.path}: not a sharded index")
+        seg = self.shards["segments"][shard]
+        return os.path.join(os.path.dirname(os.path.abspath(self.path)),
+                            seg["name"])
 
     def describe(self) -> str:
         """Human-readable layout summary (``convert_index.py inspect``)."""
@@ -111,11 +139,69 @@ class IndexHeader:
                 f"  {name:<16s} {s['offset']:>12d} {s['nbytes']:>12d} "
                 f"{s['dtype']:>6s} {tuple(s['shape'])}"
             )
+        if self.shards:
+            lines.append(
+                f"  record segments: {self.shards['n_shards']} shards x "
+                f"{self.shards['rows_per_shard']} rows"
+            )
+            for i, seg in enumerate(self.shards["segments"]):
+                lines.append(
+                    f"  seg{i:<12d} rows [{seg['row_start']}, "
+                    f"{seg['row_start'] + seg['n_rows']}) "
+                    f"{seg['nbytes']:>12d} B  {seg['name']}"
+                )
         return "\n".join(lines)
 
 
 def _page_up(nbytes: int) -> int:
     return ((nbytes + PAGE_BYTES - 1) // PAGE_BYTES) * PAGE_BYTES
+
+
+def _prelude_bytes(magic: bytes, blob: bytes, header_pages: int) -> bytes:
+    """Prelude + JSON blob padded out to ``header_pages`` whole pages."""
+    capacity = header_pages * PAGE_BYTES - _PRELUDE.itemsize
+    if len(blob) > capacity:
+        raise IndexFormatError(
+            f"header table {len(blob)} B exceeds {capacity} B; "
+            f"raise HEADER_PAGES"
+        )
+    prelude = np.zeros((), dtype=_PRELUDE)
+    prelude["magic"] = magic
+    prelude["version"] = FORMAT_VERSION
+    prelude["json_len"] = len(blob)
+    return prelude.tobytes() + blob + b"\0" * (capacity - len(blob))
+
+
+def _atomic_write(path: str, writer) -> None:
+    """write-then-rename: a crash mid-write never leaves a corrupt file
+    at the final path, and saving over a file that backs a live
+    DiskRecordStore is safe — the old memmap keeps the old inode."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            writer(f)
+            f.flush()
+            os.fsync(f.fileno())  # data durable before the rename commits
+        os.replace(tmp, path)
+        dir_fd = os.open(os.path.dirname(os.path.abspath(path)), os.O_RDONLY)
+        try:
+            os.fsync(dir_fd)  # ... and the rename itself durable
+        finally:
+            os.close(dir_fd)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def _write_segment(path: str, recs: np.ndarray, meta: dict) -> None:
+    """One shard's record segment: a one-page GSEG header + raw sectors."""
+    blob = json.dumps(meta, sort_keys=True).encode("utf-8")
+
+    def writer(f):
+        f.write(_prelude_bytes(SEGMENT_MAGIC, blob, SEGMENT_HEADER_PAGES))
+        recs.tofile(f)
+
+    _atomic_write(path, writer)
 
 
 def write_index(
@@ -128,11 +214,24 @@ def write_index(
     medoid: int,
     config: dict | None = None,
     filters: dict[str, np.ndarray] | None = None,
+    shards: int = 1,
 ) -> IndexHeader:
     """Write a complete index file; returns the header it wrote.
 
     ``filters`` maps filter kind (``label`` / ``range`` / ``tags``) to the
     per-node metadata array; dtypes are preserved in the section table.
+
+    ``shards > 1`` splits the record sectors row-wise into one page-aligned
+    segment file per ``model``-axis shard (``<path>.seg<i>-<gen>`` next to
+    the index) and records a ``shards`` manifest in the header instead of
+    a monolithic ``records`` section — a serving host then opens only its
+    own shard's rows.  Segment names carry a per-save generation token and
+    are written (atomically) BEFORE the main file commits: a re-save over
+    a live index never touches the segments the old manifest references,
+    so a crash or concurrent reader anywhere in the sequence sees either
+    the complete old index or the complete new one.  Stale generations are
+    swept after the commit (safe for live readers — their open fds/memmaps
+    pin the old inodes).
     """
     vectors = np.ascontiguousarray(vectors, "<f4")
     neighbors = np.ascontiguousarray(neighbors, "<i4")
@@ -140,12 +239,43 @@ def write_index(
     r = neighbors.shape[1]
     if neighbors.shape[0] != n:
         raise ValueError(f"vectors n={n} but neighbors n={neighbors.shape[0]}")
-    arrays: dict[str, np.ndarray] = {
-        SEC_RECORDS: pack_records(vectors, neighbors),
-        SEC_NEIGHBORS: neighbors,
-        SEC_PQ_BOOKS: np.ascontiguousarray(pq_books, "<f4"),
-        SEC_PQ_CODES: np.ascontiguousarray(pq_codes, "<i4"),
-    }
+    shards = int(shards)
+    if not 1 <= shards <= max(n, 1):
+        raise ValueError(f"shards={shards} must be in [1, n={n}]")
+    sector = record_sector_bytes(d, r)
+    arrays: dict[str, np.ndarray] = {}
+    shard_manifest = None
+    if shards == 1:
+        arrays[SEC_RECORDS] = pack_records(vectors, neighbors)
+    else:
+        rows = -(-n // shards)  # ceil — the last shard may run short
+        base = os.path.basename(path)
+        gen = os.urandom(4).hex()  # per-save generation token (see above)
+        segments = []
+        for i in range(shards):
+            s, e = i * rows, min((i + 1) * rows, n)
+            recs = pack_records(vectors[s:e], neighbors[s:e])
+            seg_name = f"{base}.seg{i}-{gen}"
+            seg_meta = {
+                "shard": i, "n_shards": shards, "row_start": int(s),
+                "n_rows": int(e - s), "n": int(n), "dim": int(d),
+                "degree": int(r), "sector_bytes": sector,
+            }
+            _write_segment(
+                os.path.join(os.path.dirname(os.path.abspath(path)), seg_name),
+                recs, seg_meta,
+            )
+            segments.append({
+                "name": seg_name, "row_start": int(s),
+                "n_rows": int(e - s), "nbytes": int(recs.nbytes),
+            })
+        shard_manifest = {
+            "n_shards": shards, "rows_per_shard": int(rows),
+            "segments": segments,
+        }
+    arrays[SEC_NEIGHBORS] = neighbors
+    arrays[SEC_PQ_BOOKS] = np.ascontiguousarray(pq_books, "<f4")
+    arrays[SEC_PQ_CODES] = np.ascontiguousarray(pq_codes, "<i4")
     for kind, arr in (filters or {}).items():
         arrays[FILTER_PREFIX + kind] = np.ascontiguousarray(arr)
 
@@ -164,52 +294,152 @@ def write_index(
         "n": int(n),
         "dim": int(d),
         "degree": int(r),
-        "sector_bytes": record_sector_bytes(d, r),
+        "sector_bytes": sector,
         "medoid": int(medoid),
         "config": dict(config or {}),
         "sections": sections,
     }
+    if shard_manifest is not None:
+        meta["shards"] = shard_manifest
     blob = json.dumps(meta, sort_keys=True).encode("utf-8")
-    capacity = HEADER_PAGES * PAGE_BYTES - _PRELUDE.itemsize
-    if len(blob) > capacity:
-        raise IndexFormatError(
-            f"header table {len(blob)} B exceeds {capacity} B; "
-            f"raise HEADER_PAGES"
-        )
-    prelude = np.zeros((), dtype=_PRELUDE)
-    prelude["magic"] = FORMAT_MAGIC
-    prelude["version"] = FORMAT_VERSION
-    prelude["json_len"] = len(blob)
+    header_bytes = _prelude_bytes(FORMAT_MAGIC, blob, HEADER_PAGES)
 
-    # write-then-rename: a crash mid-write never leaves a corrupt index
-    # at the final path, and saving over a file that backs a live
-    # DiskRecordStore is safe — the old memmap keeps the old inode
-    tmp = f"{path}.tmp.{os.getpid()}"
-    try:
-        with open(tmp, "wb") as f:
-            f.write(prelude.tobytes())
-            f.write(blob)
-            f.write(b"\0" * (HEADER_PAGES * PAGE_BYTES - _PRELUDE.itemsize - len(blob)))
-            for name, arr in arrays.items():
-                if f.tell() != sections[name]["offset"]:
-                    raise IndexFormatError(
-                        f"internal: section {name} landing at {f.tell()} "
-                        f"but table says {sections[name]['offset']}"
-                    )
-                arr.tofile(f)  # streams — no section-sized bytes copy
-                f.write(b"\0" * (_page_up(arr.nbytes) - arr.nbytes))
-            f.flush()
-            os.fsync(f.fileno())  # data durable before the rename commits
-        os.replace(tmp, path)
-        dir_fd = os.open(os.path.dirname(os.path.abspath(path)), os.O_RDONLY)
-        try:
-            os.fsync(dir_fd)  # ... and the rename itself durable
-        finally:
-            os.close(dir_fd)
-    finally:
-        if os.path.exists(tmp):
-            os.remove(tmp)
+    def writer(f):
+        f.write(header_bytes)
+        for name, arr in arrays.items():
+            if f.tell() != sections[name]["offset"]:
+                raise IndexFormatError(
+                    f"internal: section {name} landing at {f.tell()} "
+                    f"but table says {sections[name]['offset']}"
+                )
+            arr.tofile(f)  # streams — no section-sized bytes copy
+            f.write(b"\0" * (_page_up(arr.nbytes) - arr.nbytes))
+
+    _atomic_write(path, writer)
+    _sweep_stale_segments(path, shard_manifest)
     return read_header(path)
+
+
+def _sweep_stale_segments(path: str, manifest: dict | None) -> None:
+    """Best-effort removal of segment files from superseded generations.
+
+    Runs only after the main file committed; live readers of the old
+    index keep serving — their open fds/memmaps pin the old inodes."""
+    live = {s["name"] for s in (manifest or {}).get("segments", ())}
+    for seg in glob.glob(f"{path}.seg*"):
+        if os.path.basename(seg) not in live:
+            try:
+                os.remove(seg)
+            except OSError:
+                pass
+
+
+def _validated_shards(path: str, shards: dict, n: int, sector_bytes: int) -> dict:
+    """Normalize + validate a shard manifest: segments must partition
+    [0, n) contiguously, sizes must match the sector geometry, and names
+    must be plain file names (resolved next to the index, never outside)."""
+    n_shards = int(shards["n_shards"])
+    rows = int(shards["rows_per_shard"])
+    segs = list(shards["segments"])
+    if n_shards < 1 or len(segs) != n_shards:
+        raise IndexFormatError(
+            f"{path}: manifest declares n_shards={n_shards} but lists "
+            f"{len(segs)} segments"
+        )
+    if rows != -(-n // n_shards):
+        raise IndexFormatError(
+            f"{path}: manifest rows_per_shard={rows} inconsistent with "
+            f"n={n} over {n_shards} shards"
+        )
+    out = []
+    expect_start = 0
+    for i, s in enumerate(segs):
+        name = str(s["name"])
+        row_start, n_rows, nbytes = int(s["row_start"]), int(s["n_rows"]), int(s["nbytes"])
+        if os.path.basename(name) != name or name in (".", ".."):
+            raise IndexFormatError(
+                f"{path}: segment {i} name {name!r} is not a plain file name"
+            )
+        if row_start != expect_start or n_rows <= 0:
+            raise IndexFormatError(
+                f"{path}: segment {i} covers rows [{row_start}, "
+                f"{row_start + n_rows}) — segments must partition [0, {n}) "
+                "contiguously"
+            )
+        if n_rows != min(rows, n - row_start):
+            raise IndexFormatError(
+                f"{path}: segment {i} holds {n_rows} rows, expected "
+                f"{min(rows, n - row_start)}"
+            )
+        if nbytes != n_rows * sector_bytes:
+            raise IndexFormatError(
+                f"{path}: segment {i} declares {nbytes} B for {n_rows} "
+                f"rows x {sector_bytes} B sectors"
+            )
+        expect_start += n_rows
+        out.append({"name": name, "row_start": row_start,
+                    "n_rows": n_rows, "nbytes": nbytes})
+    if expect_start != n:
+        raise IndexFormatError(
+            f"{path}: segments cover {expect_start} rows but the corpus "
+            f"has {n}"
+        )
+    return {"n_shards": n_shards, "rows_per_shard": rows, "segments": out}
+
+
+def read_segment_header(seg_path: str, *, expect: dict | None = None) -> dict:
+    """Parse + validate one segment's GSEG header page.
+
+    ``expect`` (from the parent manifest) pins shard identity and geometry
+    — a stale or swapped segment file must fail loudly, not serve the
+    wrong rows."""
+    try:
+        file_bytes = os.path.getsize(seg_path)
+    except OSError as e:
+        raise IndexFormatError(f"cannot stat segment file {seg_path}: {e}") from e
+    head = SEGMENT_HEADER_PAGES * PAGE_BYTES
+    if file_bytes < head:
+        raise IndexFormatError(
+            f"{seg_path}: {file_bytes} B is smaller than the {head} B "
+            "segment header"
+        )
+    with open(seg_path, "rb") as f:
+        raw = f.read(head)
+    prelude = np.frombuffer(raw, dtype=_PRELUDE, count=1)[0]
+    if bytes(prelude["magic"]) != SEGMENT_MAGIC:
+        raise IndexFormatError(
+            f"{seg_path}: bad magic {bytes(prelude['magic'])!r} — not a "
+            "GateANN record segment"
+        )
+    if not 1 <= int(prelude["version"]) <= FORMAT_VERSION:
+        raise IndexFormatError(
+            f"{seg_path}: segment version {int(prelude['version'])} not "
+            f"supported (this build reads <= {FORMAT_VERSION})"
+        )
+    json_len = int(prelude["json_len"])
+    if json_len > len(raw) - _PRELUDE.itemsize:
+        raise IndexFormatError(f"{seg_path}: segment header overrun")
+    try:
+        meta = json.loads(raw[_PRELUDE.itemsize : _PRELUDE.itemsize + json_len])
+        fields = {k: int(meta[k]) for k in
+                  ("shard", "n_shards", "row_start", "n_rows", "n", "dim",
+                   "degree", "sector_bytes")}
+    except (KeyError, TypeError, ValueError) as e:
+        raise IndexFormatError(
+            f"{seg_path}: corrupt segment header: {e!r}"
+        ) from e
+    if file_bytes < head + fields["n_rows"] * fields["sector_bytes"]:
+        raise IndexFormatError(
+            f"{seg_path}: {file_bytes} B cannot hold {fields['n_rows']} "
+            f"rows x {fields['sector_bytes']} B — truncated segment"
+        )
+    for key, want in (expect or {}).items():
+        if fields.get(key) != want:
+            raise IndexFormatError(
+                f"{seg_path}: segment header {key}={fields.get(key)} but "
+                f"the index manifest expects {want} — wrong/stale segment"
+            )
+    return fields
 
 
 def read_header(path: str) -> IndexHeader:
@@ -284,6 +514,14 @@ def read_header(path: str) -> IndexHeader:
                     f"{s['dtype']} but nbytes={nbytes} (expected {expect} "
                     f"for shape {want}) — corrupt section table"
                 )
+        shards_meta = meta.get("shards")
+        if shards_meta is not None:
+            shards_meta = _validated_shards(path, shards_meta, n, sector_bytes)
+            if SEC_RECORDS in sections:
+                raise IndexFormatError(
+                    f"{path}: both a monolithic records section and a shard "
+                    "manifest — corrupt header table"
+                )
         header = IndexHeader(
             path=path,
             version=version,
@@ -295,6 +533,7 @@ def read_header(path: str) -> IndexHeader:
             config=dict(meta.get("config", {})),
             sections=sections,
             file_bytes=file_bytes,
+            shards=shards_meta,
         )
     except (KeyError, TypeError, ValueError) as e:
         if isinstance(e, IndexFormatError):
@@ -348,10 +587,48 @@ class IndexFile:
         return name in self.header.sections
 
     def records(self) -> np.memmap:
+        if self.header.shards:
+            raise IndexFormatError(
+                f"{self.header.path}: sharded index has no monolithic "
+                "records section — use segment_records(shard)"
+            )
         return self.section(SEC_RECORDS)
+
+    def segment_records(self, shard: int) -> np.memmap:
+        """One shard's record sectors, memmapped off its segment file."""
+        h = self.header
+        if not h.shards:
+            if shard != 0:
+                raise IndexFormatError(
+                    f"{h.path}: monolithic index has only shard 0"
+                )
+            return self.records()
+        seg = h.shards["segments"][shard]
+        seg_path = h.segment_path(shard)
+        read_segment_header(seg_path, expect={
+            "shard": shard, "n_shards": h.shards["n_shards"],
+            "row_start": seg["row_start"], "n_rows": seg["n_rows"],
+            "n": h.n, "dim": h.dim, "degree": h.degree,
+            "sector_bytes": h.sector_bytes,
+        })
+        try:
+            return np.memmap(
+                seg_path, dtype=record_dtype(h.dim, h.degree), mode="r",
+                offset=SEGMENT_HEADER_PAGES * PAGE_BYTES,
+                shape=(seg["n_rows"],),
+            )
+        except (ValueError, OSError) as e:
+            raise IndexFormatError(
+                f"{seg_path}: cannot map record segment: {e}"
+            ) from e
 
     def vectors(self) -> np.ndarray:
         """Full-precision vectors parsed out of the record sectors."""
+        if self.header.shards:
+            return np.concatenate([
+                np.ascontiguousarray(self.segment_records(i)["vec"])
+                for i in range(self.header.n_shards)
+            ])
         return np.ascontiguousarray(self.records()["vec"])
 
     def neighbors(self) -> np.ndarray:

@@ -35,6 +35,23 @@ from jax.tree_util import Partial
 RecordFetchFn = Callable[[jax.Array], Tuple[jax.Array, jax.Array]]
 
 
+def is_lazy_host(a) -> bool:
+    """True for lazy host-resident corpus views (the disk tier's
+    ``vectors``) that must never be shipped to the device wholesale —
+    cache wiring gathers the hot rows host-side instead.  Covers
+    memmap-backed arrays and any object flagging ``__lazy_host__``
+    (e.g. the multi-segment ``LazySegmentVectors``)."""
+    if getattr(a, "__lazy_host__", False):
+        return True
+    while isinstance(a, np.ndarray):
+        if isinstance(a, np.memmap):
+            return True
+        if a.base is None:
+            return False
+        a = a.base
+    return False
+
+
 def _inmem_fetch(vectors, neighbors, ids):
     safe = jnp.maximum(ids, 0)
     vecs = jnp.where(ids[..., None] >= 0, vectors[safe], 0.0)

@@ -1,0 +1,195 @@
+"""The coalesced disk reader: parity, counters, concurrency.
+
+Contract under test (store/disk.py):
+
+  * All three io_modes — ``preadv`` (one vectored syscall per round,
+    gap-bridged), ``pread`` (one syscall per merged range), ``gather``
+    (the legacy per-record memmap fancy-gather, kept as the oracle) —
+    return byte-identical records for any beam, duplicates and -1 pads
+    included, so search output is bit-identical across them.  (The
+    default disk engine is already pinned against the in-memory engine
+    across all five modes in test_persist; here the gather oracle pins
+    the other read paths at the fetch level, where parity is
+    mode-independent, plus full-search spot checks.)
+  * Logical counters (``records_read``/``pages_read``/``bytes_read``)
+    count what the loop requested; physical counters
+    (``unique_sectors_read``/``ranges_read``/``syscalls``/
+    ``gap_sectors_read``) count what the reader did.
+    ``unique_sectors_read <= records_read`` with equality iff the round
+    had no duplicates; preadv spends ``syscalls == read_rounds`` (per
+    segment), pread ``syscalls == ranges_read``, gather 0.
+  * Counters are guarded by a lock — concurrent fetches through one
+    shared store must not lose updates, and reset is atomic.
+"""
+import shutil
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GateANNEngine, SearchConfig
+from repro.store import DiskRecordStore, is_lazy_host, merge_ranges
+
+RECORD = 4096  # tiny-corpus records round up to one 4 KB sector
+IO_MODES = ("preadv", "pread", "gather")
+
+
+@pytest.fixture(scope="module")
+def index_path(tiny_engine, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("coalesce") / "tiny.gann")
+    tiny_engine.save(path)
+    return path
+
+
+@pytest.fixture(scope="module")
+def stores(index_path):
+    return {m: DiskRecordStore.open(index_path, io_mode=m) for m in IO_MODES}
+
+
+def _beam(n, rng, b=7, w=9):
+    """A duplicate-heavy beam: repeats within rows, across rows, -1 pads,
+    an all-invalid row, and both boundary ids."""
+    ids = rng.integers(-1, n, size=(b, w)).astype(np.int32)
+    ids[:, 1] = ids[:, 0]  # intra-row duplicate
+    ids[1] = ids[0]  # whole-row duplicate (cross-query, same round)
+    ids[2] = -1  # a query with nothing dispatched
+    ids[3, :3] = (0, n - 1, 0)  # boundary sectors, duplicated again
+    return ids
+
+
+def test_merge_ranges_unit():
+    got = merge_ranges(np.asarray([0, 1, 2, 5, 7, 8, 9]))
+    np.testing.assert_array_equal(got, [[0, 3], [5, 1], [7, 3]])
+    assert merge_ranges(np.asarray([], np.int64)).shape == (0, 2)
+    np.testing.assert_array_equal(merge_ranges(np.asarray([4])), [[4, 1]])
+
+
+@pytest.mark.parametrize("io_mode", IO_MODES)
+def test_duplicate_heavy_fetch_parity_and_counters(stores, tiny_engine, io_mode):
+    store = stores[io_mode]
+    ref_fetch = tiny_engine.record_store.fetch_fn()
+    rng = np.random.default_rng(7)
+    for trial in range(4):
+        ids = _beam(store.n, rng)
+        before = store.io_counters()
+        vecs, nbrs = store._host_fetch(ids)
+        after = store.io_counters()
+        want_v, want_n = ref_fetch(jnp.asarray(ids))
+        np.testing.assert_array_equal(vecs, np.asarray(want_v), err_msg=io_mode)
+        np.testing.assert_array_equal(nbrs, np.asarray(want_n), err_msg=io_mode)
+        d = {k: after[k] - before[k] for k in after}
+        m = int((ids >= 0).sum())
+        u = int(np.unique(ids[ids >= 0]).size)
+        assert d["records_read"] == m
+        assert d["pages_read"] == m * store.pages_per_record
+        assert d["bytes_read"] == m * store.sector_bytes
+        assert d["unique_sectors_read"] == u < m  # the beam is dup-heavy
+        assert d["fetch_rounds"] == 1 and d["read_rounds"] == 1
+        if io_mode == "preadv":
+            assert d["syscalls"] == 1  # ONE vectored read for the round
+        elif io_mode == "pread":
+            assert d["syscalls"] == d["ranges_read"]
+        else:
+            assert d["syscalls"] == 0 and d["gap_sectors_read"] == 0
+
+
+def test_unique_equals_requested_without_duplicates(stores):
+    store = stores["preadv"]
+    ids = np.asarray([[3, 9, 27, 81, -1]], np.int32)  # no dups
+    before = store.io_counters()
+    store._host_fetch(ids)
+    d = {k: v - before[k] for k, v in store.io_counters().items()}
+    assert d["unique_sectors_read"] == d["records_read"] == 4
+
+
+def test_all_invalid_beam_reads_nothing(stores):
+    for io_mode, store in stores.items():
+        before = store.io_counters()
+        vecs, nbrs = store._host_fetch(np.full((3, 4), -1, np.int32))
+        d = {k: v - before[k] for k, v in store.io_counters().items()}
+        assert (vecs == 0).all() and (nbrs == -1).all()
+        assert d["records_read"] == d["syscalls"] == d["unique_sectors_read"] == 0
+        assert d["fetch_rounds"] == 1 and d["read_rounds"] == 0, io_mode
+
+
+@pytest.mark.parametrize("io_mode", ("pread", "gather"))
+def test_search_bit_identical_across_io_modes(index_path, tiny_corpus, io_mode):
+    """Full loop: the non-default read paths return the same search output
+    as the default (preadv) disk engine, uncached and cached."""
+    import dataclasses
+
+    _, _, queries = tiny_corpus
+    base = GateANNEngine.load(index_path, store_tier="disk")
+    alt = dataclasses.replace(
+        base, record_store=DiskRecordStore.open(index_path, io_mode=io_mode)
+    )
+    cfg = SearchConfig(mode="gate", search_l=48, beam_width=4)
+    tgt = np.zeros(queries.shape[0], np.int32)
+    out_b = base.search(queries, filter_kind="label", filter_params=tgt,
+                        search_config=cfg)
+    out_a = alt.search(queries, filter_kind="label", filter_params=tgt,
+                       search_config=cfg)
+    np.testing.assert_array_equal(np.asarray(out_a.ids), np.asarray(out_b.ids))
+    np.testing.assert_array_equal(np.asarray(out_a.dists), np.asarray(out_b.dists))
+    for f in out_b.stats._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(out_a.stats, f)),
+                                      np.asarray(getattr(out_b.stats, f)))
+    # and with a cache tier in front: the file only sees the misses
+    cached = alt.with_cache(48 * RECORD)
+    out_c = cached.search(queries, filter_kind="label", filter_params=tgt,
+                          search_config=cfg)
+    np.testing.assert_array_equal(np.asarray(out_c.ids), np.asarray(out_b.ids))
+    np.testing.assert_array_equal(
+        np.asarray(out_c.stats.n_ios) + np.asarray(out_c.stats.n_cache_hits),
+        np.asarray(out_b.stats.n_ios))
+
+
+def test_counters_locked_under_concurrency(index_path):
+    """Concurrent fetches through one shared store lose no counter
+    updates (two engines sharing a store do exactly this)."""
+    store = DiskRecordStore.open(index_path)
+    rng = np.random.default_rng(11)
+    beams = [rng.integers(-1, store.n, size=(4, 6)).astype(np.int32)
+             for _ in range(8)]
+    n_threads, iters = 8, 12
+    errs = []
+
+    def hammer(tid):
+        try:
+            for i in range(iters):
+                store._host_fetch(beams[(tid + i) % len(beams)])
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    per_pass = sum(int((b >= 0).sum()) for b in beams) // len(beams)
+    want = sum(int((beams[(t + i) % len(beams)] >= 0).sum())
+               for t in range(n_threads) for i in range(iters))
+    c = store.io_counters()
+    assert c["records_read"] == want, (c["records_read"], want, per_pass)
+    assert c["fetch_rounds"] == n_threads * iters
+    assert c["bytes_read"] == want * store.sector_bytes
+    store.reset_io_counters()
+    assert all(v == 0 for v in store.io_counters().values())
+
+
+def test_lazy_vectors_view(stores, tiny_engine):
+    """The vectors passthrough is a host memmap view — never a device
+    array, and equal to the corpus byte-for-byte."""
+    store = stores["preadv"]
+    v = store.vectors
+    assert isinstance(v, np.ndarray) and not isinstance(v, jax.Array)
+    assert is_lazy_host(v)
+    np.testing.assert_array_equal(np.asarray(v),
+                                  np.asarray(tiny_engine.vectors, np.float32))
+    # the explicit debug path is the only device transfer
+    dv = store.device_vectors()
+    assert isinstance(dv, jax.Array)
+    np.testing.assert_array_equal(np.asarray(dv), np.asarray(v))

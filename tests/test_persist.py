@@ -6,11 +6,18 @@ The contract under test:
     dists, every stats counter) is bit-identical to the freshly built
     in-memory engine, in all five modes, for both the memory and the
     disk record tier — load never rebuilds the graph or retrains PQ.
+    ``save(shards=k)`` (per-shard record segments + manifest) preserves
+    the same contract, and v1 files (monolithic records, no manifest)
+    still read.
   * The disk tier *measures* its reads: ``DiskRecordStore.pages_read``
     deltas reconcile exactly with summed ``SearchStats.n_ios`` (x pages
     per record), gate reads strictly fewer pages than post on a
-    selective filter, and the cache tier composes on top unchanged.
-  * The format rejects bad magic, newer versions, and truncated files.
+    selective filter, the coalesced reader never reads more unique
+    sectors than requested, and the cache tier composes on top
+    unchanged.  A disk-tier load keeps ``engine.vectors`` a lazy host
+    view — no device materialization of the corpus.
+  * The format rejects bad magic, newer versions, truncated files, and
+    lying/stale shard manifests or segments.
 """
 import os
 import shutil
@@ -24,6 +31,7 @@ from repro.store import (
     PAGE_BYTES,
     DiskRecordStore,
     IndexFormatError,
+    is_lazy_host,
     read_header,
     read_index,
 )
@@ -199,6 +207,205 @@ def test_memory_report_disk_lines(disk_engine, index_path):
     assert rep["disk_bytes_read"] == rep["disk_pages_read"] * PAGE_BYTES
 
 
+# -- sharded record segments ------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sharded_path(tiny_engine, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("sharded") / "tiny_sharded.gann")
+    tiny_engine.save(path, shards=3)
+    return path
+
+
+def test_sharded_save_layout(sharded_path, tiny_engine):
+    h = read_header(sharded_path)
+    n = int(tiny_engine.vectors.shape[0])
+    assert h.shards is not None and h.n_shards == 3
+    assert h.shards["rows_per_shard"] == -(-n // 3)
+    assert "records" not in h.sections  # records live in the segments
+    covered = 0
+    for i, seg in enumerate(h.shards["segments"]):
+        assert os.path.exists(h.segment_path(i))
+        assert seg["row_start"] == covered
+        covered += seg["n_rows"]
+    assert covered == n
+    assert f"3 shards" in h.describe()
+    # the monolithic accessor must fail loudly, not serve garbage
+    with pytest.raises(IndexFormatError, match="sharded"):
+        read_index(sharded_path).records()
+
+
+@pytest.mark.parametrize("tier", ["memory", "disk"])
+def test_sharded_roundtrip_bit_identical(sharded_path, tiny_engine,
+                                         tiny_corpus, tier):
+    _, _, queries = tiny_corpus
+    eng = GateANNEngine.load(
+        sharded_path, **({"store_tier": "disk"} if tier == "disk" else {})
+    )
+    for mode in ("gate", "post"):
+        base = _search(tiny_engine, queries, mode)
+        out = _search(eng, queries, mode)
+        np.testing.assert_array_equal(np.asarray(out.ids), np.asarray(base.ids),
+                                      err_msg=f"{tier} {mode}")
+        np.testing.assert_array_equal(np.asarray(out.dists),
+                                      np.asarray(base.dists))
+
+
+def test_sharded_disk_counters(sharded_path, tiny_corpus):
+    """Coalescing works per segment: unique <= requested still holds and
+    preadv spends at most one vectored call per touched segment per round."""
+    _, _, queries = tiny_corpus
+    eng = GateANNEngine.load(sharded_path, store_tier="disk")
+    store = eng.record_store
+    assert store.n_shards == 3
+    out = _search(eng, queries, "gate")
+    np.asarray(out.ids)  # materialize => all callbacks ran
+    c = store.io_counters()
+    assert c["records_read"] == int(np.sum(np.asarray(out.stats.n_ios)))
+    assert 0 < c["unique_sectors_read"] <= c["records_read"]
+    if store.io_mode == "preadv":
+        assert c["read_rounds"] <= c["syscalls"] <= c["read_rounds"] * 3
+    # footprint spans the main file plus every segment
+    assert store.index_bytes() > os.path.getsize(sharded_path)
+
+
+def test_shard_loader_parity(sharded_path, index_path, tiny_engine):
+    """core.distributed_search loaders == ShardedRecordStore.shard_arrays
+    over the live arrays — segment files feed the mesh byte-identically."""
+    from repro.core.distributed_search import (
+        load_shard_records,
+        load_sharded_record_arrays,
+    )
+    from repro.store import ShardedRecordStore
+
+    vecs = np.asarray(tiny_engine.vectors, np.float32)
+    nbrs = np.asarray(tiny_engine.record_store.neighbors, np.int32)
+    want_v, want_n, want_rows = ShardedRecordStore.shard_arrays(vecs, nbrs, 3)
+    got_v, got_n, rows = load_sharded_record_arrays(sharded_path)
+    assert rows == want_rows
+    np.testing.assert_array_equal(got_v, want_v.astype(np.float32))
+    np.testing.assert_array_equal(got_n, want_n.astype(np.int32))
+    # one shard alone, off the sharded index and off the monolithic one
+    for path, kw in ((sharded_path, {}), (index_path, {"n_shards": 3})):
+        v1, n1, r1 = load_shard_records(path, 1, **kw)
+        assert r1 == want_rows
+        np.testing.assert_array_equal(v1, want_v[want_rows : 2 * want_rows])
+        np.testing.assert_array_equal(n1, want_n[want_rows : 2 * want_rows])
+    with pytest.raises(ValueError, match="out of range"):
+        load_shard_records(sharded_path, 5)
+    with pytest.raises(ValueError, match="n_shards"):
+        load_shard_records(index_path, 0)
+
+
+def test_sharded_segment_corruption_rejected(sharded_path, tmp_path):
+    seg_names = [s["name"] for s in read_header(sharded_path).shards["segments"]]
+    names = [os.path.basename(sharded_path)] + seg_names
+    src_dir = os.path.dirname(sharded_path)
+
+    def fresh(into):
+        d = tmp_path / into
+        d.mkdir()
+        for nm in names:
+            shutil.copyfile(os.path.join(src_dir, nm), str(d / nm))
+        return str(d), str(d / names[0])
+
+    # a missing segment file must fail the disk load loudly
+    dd, p = fresh("missing")
+    os.remove(os.path.join(dd, seg_names[1]))
+    with pytest.raises(IndexFormatError, match="seg1"):
+        GateANNEngine.load(p, store_tier="disk")
+    # a truncated segment is caught before it serves short sectors
+    dd, p = fresh("trunc")
+    seg2 = os.path.join(dd, seg_names[2])
+    os.truncate(seg2, os.path.getsize(seg2) // 2)
+    with pytest.raises(IndexFormatError, match="truncated segment"):
+        GateANNEngine.load(p, store_tier="disk")
+    # a swapped/stale segment (header disagrees with the manifest slot)
+    dd, p = fresh("swapped")
+    shutil.copyfile(os.path.join(dd, seg_names[0]), os.path.join(dd, seg_names[1]))
+    with pytest.raises(IndexFormatError, match="wrong/stale segment"):
+        GateANNEngine.load(p, store_tier="disk")
+
+
+def test_sharded_save_over_live_engine(sharded_path, tiny_corpus, tmp_path):
+    """Re-saving a sharded index over itself must never touch the
+    committed generation's segment files: the live engine keeps serving
+    off its old inodes, a fresh load serves the new generation, and the
+    superseded segments are swept after the commit."""
+    _, _, queries = tiny_corpus
+    d = tmp_path / "live_sharded"
+    d.mkdir()
+    names = [os.path.basename(sharded_path)] + [
+        s["name"] for s in read_header(sharded_path).shards["segments"]
+    ]
+    for nm in names:
+        shutil.copyfile(os.path.join(os.path.dirname(sharded_path), nm),
+                        str(d / nm))
+    path = str(d / names[0])
+    live = GateANNEngine.load(path, store_tier="disk")
+    base = _search(live, queries[:4], "gate")
+    old_segs = set(names[1:])
+    live.save(path, shards=2)  # different shard count, same index path
+    # the live engine's generation was never overwritten
+    out = _search(live, queries[:4], "gate")
+    np.testing.assert_array_equal(np.asarray(out.ids), np.asarray(base.ids))
+    # a fresh load serves the new 2-shard generation, bit-identically
+    fresh = GateANNEngine.load(path, store_tier="disk")
+    assert fresh.record_store.n_shards == 2
+    out2 = _search(fresh, queries[:4], "gate")
+    np.testing.assert_array_equal(np.asarray(out2.ids), np.asarray(base.ids))
+    # stale segments were swept once the new manifest committed
+    new_segs = {s["name"] for s in read_header(path).shards["segments"]}
+    on_disk = {f for f in os.listdir(str(d)) if ".seg" in f}
+    assert on_disk == new_segs
+    assert not (old_segs & on_disk)
+
+
+def test_lazy_vectors_on_disk_load(disk_engine, mem_engine):
+    """A disk-tier load must NOT materialize the corpus on device: the
+    engine's vectors stay a lazy host view, cache wiring gathers only hot
+    rows, and only the explicit debug path transfers."""
+    import jax
+
+    v = disk_engine.vectors
+    assert isinstance(v, np.ndarray) and not isinstance(v, jax.Array)
+    assert is_lazy_host(v)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(mem_engine.vectors))
+    cached = disk_engine.with_cache(32 * RECORD)
+    assert is_lazy_host(cached.vectors)  # still lazy behind the cache
+    assert isinstance(cached.record_store.cache_vectors, jax.Array)
+    assert int(cached.record_store.cache_vectors.shape[0]) <= 32
+    adaptive = disk_engine.with_cache(32 * RECORD, policy="adaptive")
+    assert is_lazy_host(adaptive.record_store.vectors)
+    dv = disk_engine.record_store.device_vectors()
+    assert isinstance(dv, jax.Array)
+    np.testing.assert_array_equal(np.asarray(dv), np.asarray(v))
+
+
+def test_lazy_vectors_on_sharded_disk_load(sharded_path, mem_engine):
+    """The lazy-vectors guarantee must survive sharding: the multi-segment
+    view stays host-side, row gathers touch only the asked rows, and the
+    cache tier still ships only the hot set to device."""
+    import jax
+
+    eng = GateANNEngine.load(sharded_path, store_tier="disk")
+    v = eng.vectors
+    assert not isinstance(v, (jax.Array, np.memmap))
+    assert is_lazy_host(v)
+    ref = np.asarray(mem_engine.vectors)
+    assert v.shape == ref.shape and len(v) == ref.shape[0]
+    # row gathers cross segment boundaries correctly (rows_per_shard
+    # boundaries for n=2000 over 3 shards fall at 667 and 1334)
+    picks = np.asarray([0, 1, 666, 667, 1333, 1334, 1999, 5])
+    np.testing.assert_array_equal(v[picks], ref[picks])
+    np.testing.assert_array_equal(v[3], ref[3])
+    np.testing.assert_array_equal(v[10:20], ref[10:20])
+    np.testing.assert_array_equal(np.asarray(v), ref)
+    cached = eng.with_cache(32 * RECORD)
+    assert is_lazy_host(cached.vectors)
+    assert isinstance(cached.record_store.cache_vectors, jax.Array)
+    assert int(cached.record_store.cache_vectors.shape[0]) <= 32
+
+
 # -- the format itself ------------------------------------------------------
 
 def test_header_layout(index_path, tiny_engine):
@@ -248,6 +455,25 @@ def test_bad_magic_rejected(index_path, tmp_path):
         read_header(bad)
     with pytest.raises(IndexFormatError):
         GateANNEngine.load(bad)
+
+
+def test_v1_file_still_reads(index_path, tmp_path, tiny_corpus, tiny_engine):
+    """Back-compat: a v1 file (monolithic records, no shard manifest) must
+    load and search bit-identically under the v2 reader.  An unsharded v2
+    layout is byte-compatible with v1, so pinning the version field back
+    to 1 reconstructs a genuine v1 file."""
+    _, _, queries = tiny_corpus
+    v1 = str(tmp_path / "v1.gann")
+    shutil.copyfile(index_path, v1)
+    with open(v1, "r+b") as f:
+        f.seek(4)
+        f.write(np.uint32(1).tobytes())
+    h = read_header(v1)
+    assert h.version == 1 and h.shards is None
+    base = _search(tiny_engine, queries, "gate")
+    for kw in ({}, {"store_tier": "disk"}):
+        out = _search(GateANNEngine.load(v1, **kw), queries, "gate")
+        np.testing.assert_array_equal(np.asarray(out.ids), np.asarray(base.ids))
 
 
 def test_newer_version_rejected(index_path, tmp_path):
@@ -327,6 +553,31 @@ def _write_raw_header(path, meta, pad_bytes=0):
                   "neighbors": {"offset": 16384, "nbytes": 4096,
                                 "dtype": "<u1", "shape": [4096]}}},
     # ^ overlapping sections
+    {"n": 4, "dim": 2, "degree": 2, "sector_bytes": 4096, "medoid": 0,
+     "sections": {},
+     "shards": {"n_shards": 2, "rows_per_shard": 2, "segments": [
+         {"name": "../evil.seg0", "row_start": 0, "n_rows": 2, "nbytes": 8192},
+         {"name": "x.seg1", "row_start": 2, "n_rows": 2, "nbytes": 8192}]}},
+    # ^ segment name escaping the index directory
+    {"n": 4, "dim": 2, "degree": 2, "sector_bytes": 4096, "medoid": 0,
+     "sections": {},
+     "shards": {"n_shards": 2, "rows_per_shard": 2, "segments": [
+         {"name": "x.seg0", "row_start": 0, "n_rows": 3, "nbytes": 12288},
+         {"name": "x.seg1", "row_start": 3, "n_rows": 1, "nbytes": 4096}]}},
+    # ^ segment rows disagree with rows_per_shard
+    {"n": 4, "dim": 2, "degree": 2, "sector_bytes": 4096, "medoid": 0,
+     "sections": {},
+     "shards": {"n_shards": 2, "rows_per_shard": 2, "segments": [
+         {"name": "x.seg0", "row_start": 0, "n_rows": 2, "nbytes": 999},
+         {"name": "x.seg1", "row_start": 2, "n_rows": 2, "nbytes": 8192}]}},
+    # ^ segment nbytes inconsistent with rows x sector
+    {"n": 4, "dim": 2, "degree": 2, "sector_bytes": 4096, "medoid": 0,
+     "sections": {"records": {"offset": 16384, "nbytes": 16384,
+                              "dtype": "record", "shape": [4]}},
+     "shards": {"n_shards": 2, "rows_per_shard": 2, "segments": [
+         {"name": "x.seg0", "row_start": 0, "n_rows": 2, "nbytes": 8192},
+         {"name": "x.seg1", "row_start": 2, "n_rows": 2, "nbytes": 8192}]}},
+    # ^ both a monolithic records section AND a shard manifest
 ])
 def test_corrupt_parseable_header_rejected(tmp_path, meta):
     """JSON that parses but lies must still come out as IndexFormatError."""

@@ -153,6 +153,32 @@ def test_rag_mixed_predicate_batch(tiny_engine, tiny_corpus):
     assert server.served_queries == 6 + 6  # both retrieve calls accounted
 
 
+def test_rag_empty_batch(tiny_engine):
+    """An empty request batch must serve empty ids/stats, not crash —
+    production streams legitimately drain to nothing between ticks."""
+    from repro.core.search import SearchStats
+    from repro.serve.rag import RAGServer
+
+    n = int(tiny_engine.vectors.shape[0])
+    server = RAGServer(
+        engine=tiny_engine, cfg=None, params=None, layout=None,
+        passage_tokens=np.zeros((n, 2), np.int32),
+        search_config=SearchConfig(mode="gate", search_l=48, beam_width=4),
+    )
+    ids, stats = server.retrieve([])
+    assert ids.shape == (0, server.search_config.result_k)
+    assert ids.dtype == np.int32
+    for f in SearchStats._fields:
+        assert np.asarray(getattr(stats, f)).shape == (0,), f
+    assert server.build_prompts([], ids).shape == (0, 0)
+    tokens, gstats = server.generate([], max_new_tokens=4)
+    assert tokens.shape == (0, 4)
+    assert np.asarray(gstats.n_ios).shape == (0,)
+    # nothing was accounted and the report still renders
+    assert server.served_queries == 0 and server.served_ios == 0
+    assert server.io_report()["queries"] == 0
+
+
 def test_multilabel_subset_search(tiny_corpus):
     from repro.core import EngineConfig, GateANNEngine
     from repro.core.filter_store import pack_tags
