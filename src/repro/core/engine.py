@@ -45,6 +45,11 @@ class EngineConfig:
     pq_chunks: int = 16  # paper default 32 on 128-dim; scaled with D
     r_max: int = 16  # in-memory neighbors per node (runtime knob)
     store_tier: str = "memory"  # memory | host | disk (disk needs a path)
+    # disk tier: bound on preadv gap bridging, in sectors — a merged read
+    # never bridges a hole wider than this (it splits into another
+    # vectored call instead).  Negative = unbounded (favor syscall count),
+    # 0 = never bridge (favor zero read amplification).
+    max_gap_sectors: int = -1
     cache_budget_bytes: int = 0  # hot-record cache size (0 disables the tier)
     cache_policy: str = "visit_freq"  # visit_freq | bfs | adaptive
     refresh_every: int = 4  # adaptive: batches between hot-set refreshes
@@ -211,7 +216,9 @@ class GateANNEngine:
                 neighbors=graph.neighbors, codec=codec, codes=codes,
                 medoid=int(graph.medoid), filters=filters,
             )
-            record_store = DiskRecordStore.open(index_path)
+            record_store = DiskRecordStore.open(
+                index_path, max_gap_sectors=config.max_gap_sectors
+            )
         elif config.store_tier == "host":
             record_store = HostOffloadRecordStore.create(vecs, graph.neighbors)
         else:
@@ -264,6 +271,8 @@ class GateANNEngine:
         cls,
         path: str,
         config_overrides: dict | None = None,
+        *,
+        warm_disk: bool = False,
         **overrides,
     ) -> "GateANNEngine":
         """Restore an engine from a saved index file — no graph build, no
@@ -274,6 +283,12 @@ class GateANNEngine:
         ``store_tier="disk"`` serves records off the file with measured
         I/O, ``r_max`` re-slices the neighbor store, ``cache_*`` attaches
         a cache tier.
+
+        ``warm_disk=True`` starts a background sequential re-read of the
+        record segment files right after the disk store opens, so the OS
+        page cache is re-populated while the caller is still compiling
+        its first search (no-op on non-disk tiers; see
+        ``DiskRecordStore.warm``).
         """
         idx = idx_format.read_index(path)
         h = idx.header
@@ -298,7 +313,11 @@ class GateANNEngine:
         )
         codes = jnp.asarray(idx.pq_codes(), jnp.int32)
         if config.store_tier == "disk":
-            record_store = DiskRecordStore.open(path)
+            record_store = DiskRecordStore.open(
+                path, max_gap_sectors=config.max_gap_sectors
+            )
+            if warm_disk:
+                record_store.warm(background=True)
             # the store's LAZY host memmap view — no device transfer, no
             # copy.  The engine's ``vectors`` field is ground-truth/debug
             # state the disk search path never reads; cache selection
@@ -415,6 +434,19 @@ class GateANNEngine:
             visit_counts = jnp.zeros((int(self.codes.shape[0]),), jnp.float32)
         if isinstance(store, CachedRecordStore):
             cached_mask = store.cached_mask_fn()
+        # pipelined disk search: resolve the async submit/drain pair when
+        # the depth asks for overlap AND the (possibly cache-wrapped)
+        # store bottoms out at a tier that can serve it (the disk tier).
+        # Stores without the pair silently run the synchronous loop —
+        # results are bit-identical either way.
+        submit = drain = None
+        if cfg.pipeline_depth > 1:
+            sf = getattr(store, "submit_fn", None)
+            df = getattr(store, "drain_fn", None)
+            if sf is not None and df is not None:
+                submit, drain = sf(), df()
+                if submit is None or drain is None:
+                    submit = drain = None
         out = searchm.filtered_search(
             fetch=store.fetch_fn(),
             neighbor_store=self.neighbor_store,
@@ -426,6 +458,8 @@ class GateANNEngine:
             config=cfg,
             cached_mask=cached_mask,
             visit_counts=visit_counts,
+            submit=submit,
+            drain=drain,
         )
         if adaptive:
             # fold this batch's counters; the refresh itself runs between
@@ -500,6 +534,10 @@ class GateANNEngine:
             rep["disk_shards"] = store.n_shards
             rep["disk_syscalls"] = store.syscalls
             rep["disk_unique_sectors_read"] = store.unique_sectors_read
+            rep["disk_inflight_depth_max"] = store.inflight_depth_max
+            rep["disk_overlapped_rounds"] = store.overlapped_rounds
+            rep["disk_warmed_bytes"] = store.warmed_bytes
+            rep["disk_max_gap_sectors"] = store.max_gap_sectors
         elif isinstance(store, HostOffloadRecordStore):
             rep["record_tier"] = "host"
         return rep
@@ -533,7 +571,12 @@ class GateANNEngine:
     def modeled_latency_us(
         self, stats: searchm.SearchStats, *,
         cost_model: IOCostModel = DEFAULT_COST_MODEL, pipeline_depth: int | None = None,
+        overlap_depth: int = 1,
     ) -> float:
+        """Modeled per-query latency.  ``pipeline_depth`` is W (in-flight
+        reads within a round); ``overlap_depth`` is the software-pipeline
+        depth across rounds (``SearchConfig.pipeline_depth``) — device
+        read time amortizes across overlapped rounds."""
         return cost_model.latency_us(
             float(jnp.mean(stats.n_ios)),
             float(jnp.mean(stats.n_tunnels)),
@@ -541,6 +584,7 @@ class GateANNEngine:
             pipeline_depth=pipeline_depth,
             n_cache_hits=float(jnp.mean(stats.n_cache_hits)),
             refresh_amortized_us=self._refresh_amortized_us(stats, cost_model),
+            overlap_depth=overlap_depth,
         )
 
 

@@ -59,7 +59,8 @@ class IOCostModel:
     def latency_us(self, n_ios: float, n_tunnels: float, n_exact: float | None = None,
                    pipeline_depth: int | None = None,
                    n_cache_hits: float = 0.0,
-                   refresh_amortized_us: float = 0.0) -> float:
+                   refresh_amortized_us: float = 0.0,
+                   overlap_depth: int = 1) -> float:
         """Modeled single-thread per-query latency.
 
         I/O latency is overlapped across W in-flight reads (PipeANN-style):
@@ -67,10 +68,18 @@ class IOCostModel:
         per-node work is serial on one thread.  Cache hits are priced at
         the fast-tier rate (``cache_hit_us``, like a tunnel hop): they pay
         no device read and no submit/poll, only the gather + list upkeep.
+
+        ``overlap_depth`` models the *cross-round* software pipeline
+        (``SearchConfig.pipeline_depth``): traversal only waits on a
+        round's read when the pipe is full, so the serial device time
+        amortizes to ceil(rounds / overlap_depth) round-latencies —
+        ``overlap_depth=1`` is the synchronous loop, and CPU-side work is
+        unchanged (the same records are parsed and scored either way).
         """
         w = pipeline_depth or self.pipeline_depth
         n_exact = n_ios + n_cache_hits if n_exact is None else n_exact
-        device = np.ceil(n_ios / max(w, 1)) * self.ssd_read_us
+        rounds = np.ceil(n_ios / max(w, 1))
+        device = np.ceil(rounds / max(overlap_depth, 1)) * self.ssd_read_us
         fetched = n_ios + n_cache_hits
         cpu = (
             n_ios * self.submit_poll_us

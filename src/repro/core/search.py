@@ -27,6 +27,21 @@ filter-passing fetched nodes ranked by exact distance (§3.4).  DiskANN's
 synchronous beam and PipeANN's asynchronous pipeline both map to the
 W-wide dispatch: on TPU a round's W fetches execute as one batched
 gather/collective — the hardware-native form of "W in-flight reads".
+
+**Pipelined disk search** (``SearchConfig.pipeline_depth > 1`` with a
+store exposing the async ``submit``/``drain`` pair, i.e. the disk tier):
+traversal needs only neighbor lists and PQ distances, never the
+full-precision record, so the per-round slow-tier read feeds nothing but
+the exact-distance result pool.  Stage A expands/tunnels the frontier
+from the neighbor lists ``submit`` returns immediately (the adjacency
+sidecar) and dispatches round r+1's beam while round r's ``preadv`` is
+still in flight; stage B retires completed fetches — up to
+``pipeline_depth`` rounds behind — into the result heap, in FIFO round
+order.  The result heap is write-only state (beam selection never reads
+it), retirement preserves insertion order, and the drained vectors are
+byte-identical to the synchronous read, so output is **bit-identical**
+to the synchronous loop at every depth; ``pipeline_depth=1`` (the
+default) *is* the synchronous loop.  Only wall-clock changes.
 """
 from __future__ import annotations
 
@@ -55,9 +70,15 @@ class SearchConfig:
     beam_width: int = 8  # W — dispatch width / pipeline depth
     max_hops: int = 512  # safety bound on rounds
     use_kernel: bool = False  # route PQ scoring through the Pallas kernel
+    # software-pipeline depth: max rounds whose slow-tier reads stay in
+    # flight before the oldest is retired into the result heap.  1 = the
+    # synchronous loop; >1 needs a store with submit/drain (disk tier) and
+    # is bit-identical at any depth — only wall-clock changes.
+    pipeline_depth: int = 1
 
     def __post_init__(self):
         assert self.mode in MODES, self.mode
+        assert self.pipeline_depth >= 1, self.pipeline_depth
 
 
 class SearchStats(NamedTuple):
@@ -118,6 +139,8 @@ def filtered_search(
     config: SearchConfig,
     cached_mask: CachedMaskFn | None = None,  # (B, W) ids -> cache-hit mask
     visit_counts: jax.Array | None = None,  # (N,) f32 running fetch counters
+    submit=None,  # async pair: (B, W) ids -> (token, nbrs (B, W, R))
+    drain=None,  # (token, ids, flag) -> vecs (B, W, D)
 ) -> SearchOutput:
     b, d = queries.shape
     n = codes.shape[0]
@@ -172,14 +195,12 @@ def filtered_search(
     # ``None`` keeps the extra state out of the trace entirely.
     track_visits = visit_counts is not None
     vc0 = visit_counts if track_visits else jnp.zeros((0,), jnp.float32)
-    state0 = (frontier, results, visited, stats0, vc0)
 
-    def cond(state):
-        frontier, _, _, stats, _ = state
-        return jnp.any(fr.has_unexpanded(frontier)) & jnp.all(stats.n_hops < config.max_hops)
-
-    def body(state):
-        frontier, results, visited, stats, vc = state
+    def stage_a(frontier, visited, stats, vc):
+        """One round of beam selection + masking + bookkeeping — everything
+        except touching the record itself.  Shared verbatim by the
+        synchronous and pipelined loops, so their traversal (and stats)
+        cannot diverge."""
         sel_ids, slots, valid = fr.best_unexpanded(frontier, W)
         frontier = fr.mark_expanded(frontier, slots, valid)
 
@@ -226,16 +247,19 @@ def filtered_search(
                 jnp.where(fetch_mask, 1.0, 0.0).ravel()
             )
 
-        # ---- fetch path: record read + exact distance + full-R expansion
         fetch_ids = jnp.where(fetch_mask, sel_ids, fr.INVALID)
-        vecs, disk_nbrs = fetch(fetch_ids)  # (B, W, D), (B, W, R)
-        exact_d = _exact_dist(queries, vecs, config.use_kernel)
-        exact_d = jnp.where(result_mask, exact_d, fr.INF)
-        results = fr.results_insert(
-            results, jnp.where(result_mask, sel_ids, fr.INVALID), exact_d
+        stats = SearchStats(
+            n_ios=stats.n_ios + jnp.sum(slow_mask, axis=1).astype(jnp.int32),
+            n_tunnels=stats.n_tunnels + jnp.sum(tunnel_mask, axis=1).astype(jnp.int32),
+            n_exact=stats.n_exact + jnp.sum(exact_mask, axis=1).astype(jnp.int32),
+            n_hops=stats.n_hops + 1,
+            n_cache_hits=stats.n_cache_hits + jnp.sum(hit_mask, axis=1).astype(jnp.int32),
         )
+        return frontier, stats, vc, sel_ids, fetch_ids, tunnel_mask, result_mask
 
-        # ---- tunnel path: in-memory adjacency (first R_max neighbors)
+    def expand(frontier, visited, sel_ids, tunnel_mask, disk_nbrs):
+        """Frontier growth from this round's neighbor lists (fetch path:
+        full-R disk adjacency; tunnel path: the in-memory r_max slice)."""
         if mode == "gate":
             tun_ids = jnp.where(tunnel_mask, sel_ids, fr.INVALID)
             tun_nbrs = neighbor_store.lookup(tun_ids)  # (B, W, R_max)
@@ -249,18 +273,105 @@ def filtered_search(
         new = jnp.where(fresh, new, fr.INVALID)
         visited = set_visited(visited, new)
         new_d = _adc_ids(lut, codes, new, config.use_kernel)  # PQ priority signal
-        frontier = fr.insert(frontier, new, new_d)
+        return fr.insert(frontier, new, new_d), visited
 
-        stats = SearchStats(
-            n_ios=stats.n_ios + jnp.sum(slow_mask, axis=1).astype(jnp.int32),
-            n_tunnels=stats.n_tunnels + jnp.sum(tunnel_mask, axis=1).astype(jnp.int32),
-            n_exact=stats.n_exact + jnp.sum(exact_mask, axis=1).astype(jnp.int32),
-            n_hops=stats.n_hops + 1,
-            n_cache_hits=stats.n_cache_hits + jnp.sum(hit_mask, axis=1).astype(jnp.int32),
+    def retire(results, sel_ids, result_mask, vecs, live):
+        """Stage B: score one round's fetched records and push them into
+        the result heap.  ``live=False`` turns it into a heap no-op (all
+        ids INVALID / dists INF) for pipeline warmup/flush padding."""
+        exact_d = _exact_dist(queries, vecs, config.use_kernel)
+        ok = result_mask & live
+        exact_d = jnp.where(ok, exact_d, fr.INF)
+        return fr.results_insert(
+            results, jnp.where(ok, sel_ids, fr.INVALID), exact_d
         )
-        return frontier, results, visited, stats, vc
 
-    frontier, results, visited, stats, vc = jax.lax.while_loop(cond, body, state0)
+    def cond(state):
+        frontier, _, _, stats = state[0], state[1], state[2], state[3]
+        return jnp.any(fr.has_unexpanded(frontier)) & jnp.all(stats.n_hops < config.max_hops)
+
+    pipelined = config.pipeline_depth > 1 and submit is not None and drain is not None
+
+    if not pipelined:
+        # ---- synchronous loop: fetch blocks, this round retires itself
+        state0 = (frontier, results, visited, stats0, vc0)
+
+        def body(state):
+            frontier, results, visited, stats, vc = state
+            frontier, stats, vc, sel_ids, fetch_ids, tunnel_mask, result_mask = (
+                stage_a(frontier, visited, stats, vc)
+            )
+            vecs, disk_nbrs = fetch(fetch_ids)  # (B, W, D), (B, W, R)
+            results = retire(results, sel_ids, result_mask, vecs,
+                             jnp.bool_(True))
+            frontier, visited = expand(
+                frontier, visited, sel_ids, tunnel_mask, disk_nbrs
+            )
+            return frontier, results, visited, stats, vc
+
+        frontier, results, visited, stats, vc = jax.lax.while_loop(
+            cond, body, state0
+        )
+        return SearchOutput(
+            ids=results.ids,
+            dists=results.dists,
+            stats=stats,
+            visit_counts=vc if track_visits else None,
+        )
+
+    # ---- two-stage software pipeline: up to `depth` rounds of slow-tier
+    # reads stay in flight; stage A keeps traversing off the submit-time
+    # neighbor lists, stage B retires the oldest round into the result
+    # heap.  FIFO retirement == the synchronous insertion order, and the
+    # heap is write-only state, so output is bit-identical at any depth.
+    depth = config.pipeline_depth
+    pend_ids0 = jnp.full((depth, b, W), fr.INVALID)  # sel_ids per round
+    pend_fids0 = jnp.full((depth, b, W), fr.INVALID)  # fetch_ids per round
+    pend_rm0 = jnp.zeros((depth, b, W), dtype=bool)  # result_mask per round
+    pend_tok0 = jnp.full((depth,), -1, jnp.int32)
+    state0 = (frontier, results, visited, stats0, vc0,
+              pend_ids0, pend_fids0, pend_rm0, pend_tok0)
+
+    def pbody(state):
+        (frontier, results, visited, stats, vc,
+         p_ids, p_fids, p_rm, p_tok) = state
+        r = stats.n_hops[0]  # this round's index (all rows hop together)
+        frontier, stats, vc, sel_ids, fetch_ids, tunnel_mask, result_mask = (
+            stage_a(frontier, visited, stats, vc)
+        )
+        # stage A: dispatch this round's read; neighbors come back now
+        token, disk_nbrs = submit(fetch_ids)
+        frontier, visited = expand(
+            frontier, visited, sel_ids, tunnel_mask, disk_nbrs
+        )
+        wp = jnp.mod(r, depth)
+        p_ids = p_ids.at[wp].set(sel_ids)
+        p_fids = p_fids.at[wp].set(fetch_ids)
+        p_rm = p_rm.at[wp].set(result_mask)
+        p_tok = p_tok.at[wp].set(token)
+        # stage B: once the pipe is full, retire the oldest round (the
+        # drain is issued every round; `live` gates the warmup no-ops so
+        # the host interleaving stays fixed and deterministic)
+        live = r >= depth - 1
+        dp = jnp.mod(r - (depth - 1), depth)
+        vecs = drain(p_tok[dp], p_fids[dp], live)
+        results = retire(results, p_ids[dp], p_rm[dp], vecs, live)
+        return (frontier, results, visited, stats, vc,
+                p_ids, p_fids, p_rm, p_tok)
+
+    (frontier, results, visited, stats, vc,
+     p_ids, p_fids, p_rm, p_tok) = jax.lax.while_loop(cond, pbody, state0)
+
+    # flush: retire the (up to depth-1) rounds still in flight, oldest
+    # first — same FIFO order, same heap insertions as the sync loop
+    n_hops = stats.n_hops[0]
+    for j in range(depth - 1):
+        rr = n_hops - (depth - 1) + j  # round to retire
+        live = rr >= 0
+        dp = jnp.mod(rr, depth)
+        vecs = drain(p_tok[dp], p_fids[dp], live)
+        results = retire(results, p_ids[dp], p_rm[dp], vecs, live)
+
     return SearchOutput(
         ids=results.ids,
         dists=results.dists,

@@ -52,11 +52,24 @@ class RAGServer:
     layout: Layout
     passage_tokens: np.ndarray  # (N_corpus, passage_len) token ids per vector
     search_config: SearchConfig = dataclasses.field(default_factory=SearchConfig)
+    # batch-size bucketing: pad each per-kind sub-batch up to the smallest
+    # canonical size, so a stream of arbitrary mixes compiles at most
+    # len(bucket_sizes) traces per kind instead of one per distinct group
+    # size.  Padding rows replicate a real request (so every filter kind
+    # keeps well-formed params) but are EXCLUDED from the served-I/O
+    # accounting — their traversal cost is surfaced separately as
+    # ``padded_rows`` / ``padding_ios`` so the store's measured counters
+    # still reconcile: store delta == served_ios + padding_ios.
+    # () disables bucketing (groups run at their natural size).
+    bucket_sizes: tuple = ()
     # cumulative per-tier I/O over the server's lifetime
     served_queries: int = 0
     served_ios: int = 0
     served_tunnels: int = 0
     served_cache_hits: int = 0
+    # bucketing accounting (padding rows never count as served I/O)
+    padded_rows: int = 0
+    padding_ios: int = 0
     # hit rate of the most recent batch — shows cache adaptation over time
     last_batch_hit_rate: float = 0.0
 
@@ -80,6 +93,10 @@ class RAGServer:
             "cache_hit_rate": self.served_cache_hits / max(fetches, 1),
             "last_batch_hit_rate": self.last_batch_hit_rate,
         }
+        if self.bucket_sizes:
+            rep["bucket_sizes"] = tuple(self.bucket_sizes)
+            rep["padded_rows"] = self.padded_rows
+            rep["padding_ios"] = self.padding_ios
         store = getattr(self.engine, "record_store", None)
         if isinstance(store, AdaptiveRecordCache):
             rep["cache_policy"] = store.policy
@@ -87,6 +104,14 @@ class RAGServer:
             rep["cache_partitions"] = len(store.partitions)
             rep["cache_slots"] = store.n_slots
         return rep
+
+    def _bucket_pad(self, group_size: int) -> int:
+        """Rows to pad a group of ``group_size`` up to its bucket (0 when
+        bucketing is off or the group exceeds every canonical size)."""
+        if not self.bucket_sizes:
+            return 0
+        fits = [s for s in sorted(self.bucket_sizes) if s >= group_size]
+        return (fits[0] - group_size) if fits else 0
 
     def _empty_stats(self) -> SearchStats:
         z = np.zeros((0,), np.int32)
@@ -104,13 +129,20 @@ class RAGServer:
         sub-batch, and results/stats are scattered back into request
         order — callers see one (ids, stats) pair regardless of mix.
 
-        Sub-batches are searched at their natural size: a new group size
-        compiles a new trace, so a stream of arbitrary mixes pays some
-        warm-up compilation.  Padding groups to a common size would bound
-        the traces but make the padded rows do real traversal work —
-        polluting the *measured* disk-tier read counters — so batch-size
-        bucketing belongs in the caller (see ROADMAP) where the padding
-        rows can be accounted for.
+        With ``bucket_sizes`` set, each group is padded up to the smallest
+        canonical size before searching (padding rows cycle through the
+        group's real requests, so the extra traversal mirrors the group's
+        own distribution rather than amplifying one row), bounding jit
+        retraces to ``len(bucket_sizes)`` per kind on an arbitrary mix
+        stream.  The padding rows' results are discarded and their
+        traversal I/O is kept OUT of the served accounting (tracked as
+        ``padded_rows`` / ``padding_ios`` instead — the slow-tier store's
+        measured counters include them, so reconciliation is served +
+        padding).  Note the adaptive cache's visit counters DO see the
+        padding rows (the engine observes the whole batch): cyclic
+        padding keeps that a mild re-weighting of the group's own access
+        pattern instead of a bias toward any single request.  A group
+        larger than every bucket runs at its natural size.
         """
         k = self.search_config.result_k
         if not requests:
@@ -122,19 +154,29 @@ class RAGServer:
         stat_fields = {f: np.zeros((len(requests),), np.int32)
                        for f in SearchStats._fields}
         for kind, idxs in groups.items():
+            g = len(idxs)
+            pad = self._bucket_pad(g)
+            cyc = np.arange(pad) % g  # cyclic padding rows (see docstring)
             q = np.stack([requests[i].query_vec for i in idxs])
+            if pad:
+                q = np.concatenate([q, q[cyc]])
             params = None
             if kind is not None:
                 params = jnp.stack(
                     [jnp.asarray(requests[i].filter_params) for i in idxs]
                 )
+                if pad:
+                    params = jnp.concatenate([params, params[cyc]])
             out = self.engine.search(
                 q, filter_kind=kind, filter_params=params,
                 search_config=self.search_config,
             )
-            all_ids[idxs] = np.asarray(out.ids)[:, :k]
+            all_ids[idxs] = np.asarray(out.ids)[:g, :k]
             for f in SearchStats._fields:
-                stat_fields[f][idxs] = np.asarray(getattr(out.stats, f))
+                stat_fields[f][idxs] = np.asarray(getattr(out.stats, f))[:g]
+            if pad:
+                self.padded_rows += pad
+                self.padding_ios += int(np.sum(np.asarray(out.stats.n_ios)[g:]))
         stats = SearchStats(**stat_fields)
         self._account(stats)
         # adaptive cache maintenance runs between batches, off the

@@ -274,5 +274,13 @@ class AdaptiveRecordCache:
     def cached_mask_fn(self):
         return self.global_store.cached_mask_fn()
 
+    def submit_fn(self):
+        """Async pair of the global snapshot (per-bucket searches go
+        through ``store_for(bucket).submit_fn()`` instead)."""
+        return self.global_store.submit_fn()
+
+    def drain_fn(self):
+        return self.global_store.drain_fn()
+
     def record_bytes(self) -> int:
         return self.backing.record_bytes()

@@ -156,6 +156,29 @@ def _cached_fetch(backing_fetch, slot_of, cache_vecs, cache_nbrs, ids):
     return vecs, nbrs
 
 
+def _cached_submit(backing_submit, slot_of, cache_nbrs, ids):
+    """Async stage A through the cache: only the miss set is submitted to
+    the slow tier; hit rows' neighbor lists are a device gather, so the
+    returned adjacency matches the synchronous ``_cached_fetch`` exactly."""
+    slot = jnp.where(ids >= 0, slot_of[jnp.maximum(ids, 0)], jnp.int32(-1))
+    hit = slot >= 0
+    token, nbrs = backing_submit(jnp.where(hit, jnp.int32(-1), ids))
+    safe = jnp.maximum(slot, 0)
+    return token, jnp.where(hit[..., None], cache_nbrs[safe], nbrs)
+
+
+def _cached_drain(backing_drain, slot_of, cache_vecs, token, ids, live):
+    """Async stage B through the cache: the slow tier drains the miss
+    rows; hit rows' vectors come off the device-resident block (recomputed
+    from ``ids`` — the hit split is a pure function of the slot map, so it
+    agrees with what ``_cached_submit`` masked out rounds earlier)."""
+    slot = jnp.where(ids >= 0, slot_of[jnp.maximum(ids, 0)], jnp.int32(-1))
+    hit = slot >= 0
+    vecs = backing_drain(token, jnp.where(hit, jnp.int32(-1), ids), live)
+    safe = jnp.maximum(slot, 0)
+    return jnp.where(hit[..., None], cache_vecs[safe], vecs)
+
+
 def _cached_mask(slot_of, ids):
     return (ids >= 0) & (slot_of[jnp.maximum(ids, 0)] >= 0)
 
@@ -241,6 +264,20 @@ class CachedRecordStore:
 
     def cached_mask_fn(self) -> CachedMaskFn:
         return Partial(_cached_mask, self.slot_of)
+
+    def submit_fn(self):
+        """Async submission through the cache, or None if the backing
+        store has no async pair (in-memory/host/sharded tiers)."""
+        bs = getattr(self.backing, "submit_fn", None)
+        if bs is None:
+            return None
+        return Partial(_cached_submit, bs(), self.slot_of, self.cache_neighbors)
+
+    def drain_fn(self):
+        bd = getattr(self.backing, "drain_fn", None)
+        if bd is None:
+            return None
+        return Partial(_cached_drain, bd(), self.slot_of, self.cache_vectors)
 
     # -- reporting ---------------------------------------------------------
     @property

@@ -46,21 +46,50 @@ re-wrap does — must not lose updates):
     preadv path ``syscalls == read_rounds`` (one vectored read per round
     per touched segment).
 
+Bridged gaps are bounded by ``max_gap_sectors``: when the hole between
+two wanted ranges exceeds the bound, the round splits into another
+vectored call instead of reading through it — the syscall-count vs
+read-amplification trade as an explicit knob (``None``/negative =
+unbounded, today's single-call behavior; ``0`` = never bridge, one call
+per merged range).
+
+**Asynchronous pipeline interface** (the PipeANN overlap, done host-side):
+``submit(ids) -> (token, nbrs)`` enqueues the round's coalesced sector
+read on a background reader pool and returns immediately with the
+neighbor lists served from the index file's full-adjacency *sidecar* —
+traversal needs only neighbor lists and PQ distances, never the
+full-precision record, so the search loop can dispatch round r+1's beam
+while round r's ``preadv`` is still in flight.  ``drain(token) ->
+records`` blocks until that round's read completes and returns the
+record vectors for the exact-distance result pool.  Reads stay
+bit-identical to the synchronous ``fetch_fn`` path (same coalesced
+reader, same counters); two extra counters measure the overlap actually
+achieved: ``inflight_depth_max`` (peak submitted-but-undrained tokens)
+and ``overlapped_rounds`` (submissions issued while an earlier read was
+still undrained).
+
 A sharded index (``engine.save(shards=k)``) opens one reader per record
 segment; only the segments a round's beam touches are read (and on a
 mesh, ``core.distributed_search.load_shard_records`` opens just the
 local shard's file).
 
+``warm(background=True)`` sequentially re-reads the segment files on a
+daemon thread to re-populate the OS page cache after a load (counted in
+``warmed_bytes``); ``close()`` only signals it to stop — it never blocks
+on the warmer.
+
 Counter discipline: jax dispatch is asynchronous, so read the counters
 only after materializing the search outputs (``np.asarray(out.ids)`` or
 ``jax.block_until_ready``) — every fetch feeds the loop-carried state, so
-output materialization implies all callbacks ran.
+output materialization implies all callbacks ran (a drain blocks on its
+round's read, so retired rounds have fully-counted I/O).
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 import threading
+from concurrent.futures import ThreadPoolExecutor
 from typing import Tuple
 
 import jax
@@ -71,6 +100,7 @@ from jax.tree_util import Partial
 
 from repro.store.format import (
     PAGE_BYTES,
+    SEC_NEIGHBORS,
     SEGMENT_HEADER_PAGES,
     IndexFile,
     record_dtype,
@@ -255,7 +285,14 @@ class LazySegmentVectors:
 class DiskRecordStore:
     """Slow-tier record store backed by an on-disk index file."""
 
-    def __init__(self, path: str, *, io_mode: str = "auto"):
+    def __init__(
+        self,
+        path: str,
+        *,
+        io_mode: str = "auto",
+        max_gap_sectors: int | None = None,
+        reader_threads: int = 4,
+    ):
         header = read_header(path)
         self.path = path
         self.header = header
@@ -273,6 +310,11 @@ class DiskRecordStore:
         if io_mode == "pread" and not _HAVE_PREAD:
             io_mode = "gather"
         self.io_mode = io_mode
+        # preadv gap-bridging bound, in sectors (None/negative = unbounded)
+        if max_gap_sectors is not None and max_gap_sectors < 0:
+            max_gap_sectors = None
+        self.max_gap_sectors = max_gap_sectors
+        self.reader_threads = max(int(reader_threads), 1)
         # measured, monotonic I/O counters (advanced by the host callback,
         # guarded by _lock — stores are shared across with_cache re-wraps
         # and may serve several engines/threads at once)
@@ -301,16 +343,38 @@ class DiskRecordStore:
         )
         self._scratch = bytearray(0)  # discard buffer for bridged gaps
         self._neighbors = None  # lazy full-adjacency parse (host convenience)
+        self._nbrs_host = None  # lazy host memmap of the adjacency sidecar
         self._vectors_view = None  # lazy host view — never a device array
+        # async submission/completion state: a background reader pool plus
+        # the completion queue (token -> in-flight Future), all under _lock
+        self._pool: ThreadPoolExecutor | None = None
+        self._pending: dict[int, object] = {}
+        self._next_token = 0
+        self._inflight = 0  # submitted-but-undrained tokens (live, not reset)
+        # background page-cache warmer (non-blocking close: stop is an event)
+        self._warm_stop = threading.Event()
+        self._warm_thread: threading.Thread | None = None
         # one Partial per store: stable pytree identity, so repeated
         # searches against the same store never retrace the jitted loop
         self._fetch = Partial(self._traced_fetch)
+        self._submit = Partial(self._traced_submit)
+        self._drain = Partial(self._traced_drain)
 
     @classmethod
     def open(cls, path: str, **kwargs) -> "DiskRecordStore":
         return cls(path, **kwargs)
 
     def close(self) -> None:
+        self._warm_stop.set()  # signal only — never blocks on the warmer
+        pool = self._pool
+        if pool is not None:
+            # let queued reads finish against still-open fds, then drop
+            # whatever results nobody will drain
+            pool.shutdown(wait=True)
+            self._pool = None
+        with self._lock:
+            self._pending.clear()
+            self._inflight = 0
         for seg in self._segments:
             seg.close()
 
@@ -375,12 +439,25 @@ class DiskRecordStore:
                 continue
             # preadv: one vectored call per round and segment — wanted
             # ranges scatter straight into the output, bridged gaps land
-            # in the discard buffer
+            # in the discard buffer.  A gap wider than max_gap_sectors is
+            # never bridged: the round splits into another vectored call
+            # there instead, trading a syscall for the over-read.
+            max_gap = self.max_gap_sectors
             views = []
             prev_end = None
+            group_start = 0
             for start, count in ranges:
-                if prev_end is not None and start > prev_end:
-                    gap = int(start - prev_end)
+                gap = 0 if prev_end is None else int(start - prev_end)
+                if views and max_gap is not None and gap > max_gap:
+                    io["syscalls"] += _preadv_full(
+                        fd, views, seg.data_offset + group_start * sector
+                    )
+                    views = []
+                    prev_end = None
+                    gap = 0
+                if prev_end is None:
+                    group_start = int(start)
+                elif gap:
                     io["gap_sectors"] += gap
                     views.extend(self._gap_views(gap * sector))
                 nb = int(count) * sector
@@ -388,7 +465,7 @@ class DiskRecordStore:
                 pos += int(count)
                 prev_end = int(start + count)
             io["syscalls"] += _preadv_full(
-                fd, views, seg.data_offset + int(ranges[0, 0]) * sector
+                fd, views, seg.data_offset + group_start * sector
             )
         return buf.view(self._segments[0].rec_dtype), io
 
@@ -435,6 +512,167 @@ class DiskRecordStore:
     def fetch_fn(self):
         return self._fetch
 
+    # -- the asynchronous submission/completion pair -----------------------
+    def _adjacency_host(self) -> np.ndarray:
+        """Host view of the full-adjacency sidecar section (N, R) int32.
+
+        This is what makes the pipeline bit-identical: the sidecar holds
+        the exact array the record sectors' ``nbrs`` fields were packed
+        from, so serving neighbor lists here instead of from the in-flight
+        record read changes nothing but the wait."""
+        if self._nbrs_host is None:
+            with self._lock:
+                if self._nbrs_host is None:
+                    self._nbrs_host = IndexFile(self.header).section(SEC_NEIGHBORS)
+        return self._nbrs_host
+
+    def _host_submit(self, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Enqueue the round's coalesced sector read; return (token, nbrs).
+
+        The neighbor lists come from the adjacency sidecar immediately —
+        the caller can expand the frontier and dispatch the next beam
+        while this round's record read is still in flight on the pool."""
+        ids = np.asarray(ids)
+        valid = ids >= 0
+        flat = np.clip(ids, 0, self.n - 1).reshape(-1)
+        nbrs = np.full(ids.shape + (self.degree,), -1, np.int32)
+        vmask = valid.reshape(-1)
+        if vmask.any():
+            adj = self._adjacency_host()
+            nbrs.reshape(-1, self.degree)[vmask] = adj[flat[vmask]]
+        job_ids = np.array(ids, copy=True)  # the callback buffer is reused
+        with self._lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.reader_threads,
+                    thread_name_prefix="gateann-reader",
+                )
+            token = self._next_token
+            self._next_token = (self._next_token + 1) % (1 << 30)
+            self._pending[token] = self._pool.submit(self._host_fetch, job_ids)
+            self._inflight += 1
+            self.inflight_depth_max = max(self.inflight_depth_max, self._inflight)
+            if self._inflight >= 2:
+                self.overlapped_rounds += 1
+        return np.int32(token), nbrs
+
+    def _host_drain(self, token: np.ndarray, ids: np.ndarray, flag: np.ndarray):
+        """Retire one submitted round: block until its read completed and
+        return the record vectors.  ``flag=False`` is the pipeline-warmup
+        no-op (the loop issues a fixed drain per round; early rounds have
+        nothing to retire) — it returns zeros without touching the queue."""
+        vecs = np.zeros(np.asarray(ids).shape + (self.dim,), np.float32)
+        if not bool(flag):
+            return vecs
+        with self._lock:
+            fut = self._pending.pop(int(token), None)
+            if fut is not None:
+                self._inflight -= 1
+        if fut is None:
+            raise KeyError(
+                f"drain of unknown token {int(token)} — not submitted, "
+                "already drained, or the store was closed"
+            )
+        got_vecs, _got_nbrs = fut.result()
+        return got_vecs
+
+    def _traced_submit(self, ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        out_shapes = (
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct(ids.shape + (self.degree,), jnp.int32),
+        )
+        # ordered like the synchronous fetch: submissions and drains must
+        # interleave in program order so FIFO retirement (and counter
+        # reconciliation) is deterministic
+        return io_callback(self._host_submit, out_shapes, ids, ordered=True)
+
+    def _traced_drain(
+        self, token: jax.Array, ids: jax.Array, flag: jax.Array
+    ) -> jax.Array:
+        out_shape = jax.ShapeDtypeStruct(ids.shape + (self.dim,), jnp.float32)
+        return io_callback(self._host_drain, out_shape, token, ids, flag,
+                           ordered=True)
+
+    def submit_fn(self):
+        return self._submit
+
+    def drain_fn(self):
+        return self._drain
+
+    # -- background page-cache re-warm -------------------------------------
+    def warm(self, *, background: bool = True, chunk_bytes: int = 4 << 20):
+        """Sequentially re-read the segment files to re-populate the OS
+        page cache (the post-``load`` warm-up of a freshly booted server).
+
+        ``background=True`` runs on a daemon thread and returns it;
+        ``close()`` signals the thread to stop but never joins it (the
+        warmer reads through its own fds, so the store's fds close
+        immediately).  Bytes actually read land in ``warmed_bytes``.
+
+        Re-entrant calls serialize: a still-running warmer is stopped
+        and joined first, so two overlapping warms never double-count
+        ``warmed_bytes`` (and ``warm_wait`` always tracks the live one)."""
+        prev = self._warm_thread
+        if prev is not None and prev.is_alive():
+            self._warm_stop.set()
+            prev.join()
+        self._warm_stop.clear()
+        if not background:
+            self._warm_run(chunk_bytes)
+            return None
+        t = threading.Thread(
+            target=self._warm_run, args=(chunk_bytes,),
+            name="gateann-warm", daemon=True,
+        )
+        self._warm_thread = t
+        t.start()
+        return t
+
+    def _warm_run(self, chunk_bytes: int) -> None:
+        for seg in self._segments:
+            if self._warm_stop.is_set():
+                return
+            try:
+                fd = os.open(seg.path, os.O_RDONLY)
+            except OSError:
+                continue  # re-saved/swept segment — nothing to warm
+            try:
+                size = os.fstat(fd).st_size
+                off = 0
+                while off < size and not self._warm_stop.is_set():
+                    data = os.pread(fd, min(chunk_bytes, size - off), off)
+                    if not data:
+                        break
+                    off += len(data)
+                    with self._lock:
+                        self.warmed_bytes += len(data)
+            finally:
+                os.close(fd)
+
+    def warm_wait(self, timeout: float | None = None) -> bool:
+        """Join the background warmer (tests/benchmarks); True if done."""
+        t = self._warm_thread
+        if t is None:
+            return True
+        t.join(timeout)
+        return not t.is_alive()
+
+    def drop_page_cache(self) -> None:
+        """Advise the kernel to evict this index's pages (cold-cache
+        benchmarking — ``posix_fadvise(DONTNEED)``; no-op if unsupported)."""
+        if not hasattr(os, "posix_fadvise"):
+            return
+        paths = {self.path} | {seg.path for seg in self._segments}
+        for p in paths:
+            try:
+                fd = os.open(p, os.O_RDONLY)
+            except OSError:
+                continue
+            try:
+                os.posix_fadvise(fd, 0, 0, os.POSIX_FADV_DONTNEED)
+            finally:
+                os.close(fd)
+
     # -- measured-I/O reporting --------------------------------------------
     def _reset_counters_locked(self) -> None:
         # logical: what the search loop requested (reconciles with n_ios)
@@ -448,6 +686,12 @@ class DiskRecordStore:
         self.gap_sectors_read = 0
         self.fetch_rounds = 0
         self.read_rounds = 0
+        # pipeline overlap (advanced by submit; _inflight itself is live
+        # state, not a counter, and survives resets)
+        self.inflight_depth_max = 0
+        self.overlapped_rounds = 0
+        # background warmer
+        self.warmed_bytes = 0
 
     def io_counters(self) -> dict:
         with self._lock:
@@ -461,6 +705,9 @@ class DiskRecordStore:
                 "gap_sectors_read": self.gap_sectors_read,
                 "fetch_rounds": self.fetch_rounds,
                 "read_rounds": self.read_rounds,
+                "inflight_depth_max": self.inflight_depth_max,
+                "overlapped_rounds": self.overlapped_rounds,
+                "warmed_bytes": self.warmed_bytes,
             }
 
     def reset_io_counters(self) -> None:

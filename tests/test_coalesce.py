@@ -180,6 +180,94 @@ def test_counters_locked_under_concurrency(index_path):
     assert all(v == 0 for v in store.io_counters().values())
 
 
+def test_max_gap_sectors_bounds_bridging(index_path, stores):
+    """The gap-bridging bound trades syscalls for read amplification:
+    unbounded = one vectored call, all gaps bridged; 0 = one call per
+    merged range, zero over-read; a finite bound bridges only gaps <= it.
+    All three return byte-identical records."""
+    ref_v, ref_n = stores["gather"]._host_fetch(
+        np.asarray([[0, 2, 10, -1]], np.int32))
+    # ranges (0,1) (2,1) (10,1): gaps of 1 and 7 sectors
+    cases = {
+        None: dict(syscalls=1, gap=8),   # bridge everything, one preadv
+        7: dict(syscalls=1, gap=8),      # bound == widest gap: still one
+        2: dict(syscalls=2, gap=1),      # bridge the 1-gap, split at the 7
+        0: dict(syscalls=3, gap=0),      # never bridge: one call per range
+    }
+    for bound, want in cases.items():
+        store = DiskRecordStore.open(index_path, io_mode="preadv",
+                                     max_gap_sectors=bound)
+        vecs, nbrs = store._host_fetch(np.asarray([[0, 2, 10, -1]], np.int32))
+        c = store.io_counters()
+        np.testing.assert_array_equal(vecs, ref_v, err_msg=str(bound))
+        np.testing.assert_array_equal(nbrs, ref_n, err_msg=str(bound))
+        assert c["syscalls"] == want["syscalls"], (bound, c)
+        assert c["gap_sectors_read"] == want["gap"], (bound, c)
+        assert c["ranges_read"] == 3, (bound, c)
+        store.close()
+    # negative = unbounded (the EngineConfig encoding of None)
+    assert DiskRecordStore.open(index_path, max_gap_sectors=-1).max_gap_sectors is None
+
+
+def test_max_gap_search_parity(index_path, tiny_corpus):
+    """Full loop at the zero-bridge extreme: identical search output, and
+    every bridged gap stays within the bound (here: no gaps at all)."""
+    import dataclasses
+
+    _, _, queries = tiny_corpus
+    base = GateANNEngine.load(index_path, store_tier="disk")
+    tight = dataclasses.replace(
+        base,
+        record_store=DiskRecordStore.open(index_path, max_gap_sectors=0),
+    )
+    cfg = SearchConfig(mode="gate", search_l=48, beam_width=4)
+    tgt = np.zeros(queries.shape[0], np.int32)
+    out_b = base.search(queries, filter_kind="label", filter_params=tgt,
+                        search_config=cfg)
+    out_t = tight.search(queries, filter_kind="label", filter_params=tgt,
+                         search_config=cfg)
+    np.testing.assert_array_equal(np.asarray(out_t.ids), np.asarray(out_b.ids))
+    c = tight.record_store.io_counters()
+    assert c["gap_sectors_read"] == 0
+    assert c["syscalls"] == c["ranges_read"]  # one call per merged range
+    tight.record_store.close()
+
+
+def test_warm_repopulates_page_cache_counter(index_path):
+    """warm() sequentially re-reads every segment file: warmed_bytes ends
+    at the full on-disk footprint (foreground), the background variant
+    reaches the same count, and close() mid-warm neither blocks nor
+    crashes (the warmer reads through its own fds)."""
+    store = DiskRecordStore.open(index_path)
+    total = store.index_bytes()
+    store.warm(background=False)
+    assert store.warmed_bytes == total
+    store.reset_io_counters()
+    store.warm(background=True, chunk_bytes=1 << 16)
+    assert store.warm_wait(timeout=30.0)
+    assert store.warmed_bytes == total
+    # re-entrant warm: an overlapping call stops+joins the live warmer
+    # first, so warmed_bytes never double-counts past one full pass + a
+    # fresh one (the first pass is cut short, never duplicated)
+    store.reset_io_counters()
+    store.warm(background=True, chunk_bytes=1 << 12)
+    store.warm(background=True, chunk_bytes=1 << 16)
+    assert store.warm_wait(timeout=30.0)
+    assert total <= store.warmed_bytes < 2 * total
+    # non-blocking close path: closing mid-warm just signals the thread
+    store.reset_io_counters()
+    store.warm(background=True, chunk_bytes=1 << 12)
+    store.close()
+    assert store.warm_wait(timeout=30.0)  # stops promptly, no EBADF
+    assert store.warmed_bytes <= total
+    # engine.load(warm_disk=True) wires it up after a disk-tier load
+    eng = GateANNEngine.load(index_path, store_tier="disk", warm_disk=True)
+    assert eng.record_store.warm_wait(timeout=30.0)
+    assert eng.record_store.warmed_bytes == eng.record_store.index_bytes()
+    assert eng.memory_report()["disk_warmed_bytes"] == eng.record_store.warmed_bytes
+    eng.record_store.close()
+
+
 def test_lazy_vectors_view(stores, tiny_engine):
     """The vectors passthrough is a host memmap view — never a device
     array, and equal to the corpus byte-for-byte."""

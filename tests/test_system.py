@@ -179,6 +179,71 @@ def test_rag_empty_batch(tiny_engine):
     assert server.io_report()["queries"] == 0
 
 
+def test_rag_batch_bucketing(tiny_engine, tiny_corpus):
+    """bucket_sizes pads mixed-kind sub-batches to canonical sizes: the
+    jitted loop only ever sees bucket-sized batches (bounded retraces),
+    results match the unbucketed server exactly, and the padding rows are
+    excluded from the served-I/O accounting (surfaced as padded_rows /
+    padding_ios instead)."""
+    from repro.serve.rag import RAGRequest, RAGServer
+
+    _, _, queries = tiny_corpus
+    n = int(tiny_engine.vectors.shape[0])
+
+    def make_server(bucket_sizes):
+        return RAGServer(
+            engine=tiny_engine, cfg=None, params=None, layout=None,
+            passage_tokens=np.zeros((n, 2), np.int32),
+            search_config=SearchConfig(mode="gate", search_l=48, beam_width=4),
+            bucket_sizes=bucket_sizes,
+        )
+
+    reqs = []
+    for i in range(7):  # 3 unfiltered + 4 label rows -> buckets 4 and 4
+        if i % 2 == 0 and i < 6:
+            reqs.append(RAGRequest(query_vec=queries[i],
+                                   prompt_tokens=np.zeros(2, np.int32)))
+        else:
+            reqs.append(RAGRequest(
+                query_vec=queries[i], prompt_tokens=np.zeros(2, np.int32),
+                filter_kind="label", filter_params=np.int32(0),
+            ))
+    plain = make_server(())
+    bucketed = make_server((4, 8))
+    seen_sizes = []
+    real_search = tiny_engine.search
+
+    def spy(q, **kw):
+        seen_sizes.append(int(np.asarray(q).shape[0]))
+        return real_search(q, **kw)
+
+    import dataclasses
+
+    bucketed.engine = dataclasses.replace(tiny_engine)
+    bucketed.engine.search = spy  # instance attr shadows the method
+    ids_p, stats_p = plain.retrieve(reqs)
+    ids_b, stats_b = bucketed.retrieve(reqs)
+    # identical results and identical *served* accounting row-for-row
+    np.testing.assert_array_equal(ids_b, ids_p)
+    np.testing.assert_array_equal(np.asarray(stats_b.n_ios),
+                                  np.asarray(stats_p.n_ios))
+    assert plain.served_ios == bucketed.served_ios
+    assert plain.served_queries == bucketed.served_queries == 7
+    # every sub-batch ran at a canonical size; padding was accounted apart
+    assert set(seen_sizes) <= {4, 8}, seen_sizes
+    assert bucketed.padded_rows == (4 - 3) + (4 - 4)
+    assert bucketed.padding_ios >= 0
+    rep = bucketed.io_report()
+    assert rep["padded_rows"] == bucketed.padded_rows
+    assert rep["padding_ios"] == bucketed.padding_ios
+    assert "padded_rows" not in plain.io_report()
+    # a group larger than every bucket runs at its natural size
+    big = make_server((2,))
+    big_ids, _ = big.retrieve(reqs)
+    np.testing.assert_array_equal(big_ids, ids_p)
+    assert big.padded_rows == 0
+
+
 def test_multilabel_subset_search(tiny_corpus):
     from repro.core import EngineConfig, GateANNEngine
     from repro.core.filter_store import pack_tags
