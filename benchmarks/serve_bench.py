@@ -1,0 +1,290 @@
+"""SLO load generator: closed/open-loop multi-tenant serving benchmark.
+
+The first end-to-end *serving* number in the repo: real concurrent
+clients, Zipfian tenant skew, the disk-tier engine behind the async
+``ServeFrontend``, and tail latency you can put an SLO on.  The two
+loops follow the mlperf-inference convention:
+
+  * **closed loop** — ``--clients`` threads each keep exactly one
+    request in flight (submit, wait, repeat).  Measures the server's
+    sustainable throughput and the latency under that self-limiting
+    load.  Latency = submit -> result, measured by the client.
+  * **open loop** — a Poisson arrival process at ``--qps`` submits
+    regardless of completions (the "LON" in mlperf terms).  Measures
+    tail behaviour under a fixed offered load, where queueing shows up
+    in the tail.  Latency = *scheduled arrival* -> result, so scheduler
+    lag and admission wait count against the server, not the client.
+
+Tenants are label namespaces (tenant ``i`` -> ``label == i``) drawn
+from a Zipf(``--alpha``) popularity distribution — the skew is what
+makes per-tenant admission limits and the adaptive cache's per-filter
+partitions earn their keep.  Requests run through the pipelined disk
+path (``--pipeline-depth``, default 2), so this is also the concurrency
+hammer for the submit/drain machinery.
+
+Emits the benchmark-contract CSV ``name,us_per_call,derived`` and (by
+default) the ``BENCH_serve.json`` artifact.  Contract rows nightly
+asserts on:
+
+  serve_<loop>_p50_ms / p99_ms / p999_ms   latency percentiles (ms)
+  serve_<loop>_qps                         achieved completions / s
+  serve_open_offered_qps                   the open loop's target rate
+  serve_t<i>_ios_q                         per-tenant slow-tier reads /
+                                           query (the I/O attribution)
+  serve_recall_parity   1.0 iff every served result == the direct
+                        ``engine.search`` ids for that (tenant, query)
+  serve_reconciled      1.0 iff measured reads == served + padding
+                        (``reconcile_drift == 0``) after both loops
+  serve_abandoned       abandoned pipelined tokens (0.0 on happy path)
+  serve_rejected        admission rejections across both loops
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--quick]
+        [--json PATH] [--qps F] [--clients N] [--requests N]
+        [--tenants N] [--alpha F] [--pipeline-depth K]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import GateANNEngine, SearchConfig
+from repro.serve import AdmissionError, RAGServer, ServeFrontend, TenantSpec
+
+RECORD = 4096  # one record sector
+
+
+def index_path() -> str:
+    os.makedirs(common.CACHE_DIR, exist_ok=True)
+    return os.path.join(
+        common.CACHE_DIR, f"index_{common.N}_{common.DIM}.gann"
+    )
+
+
+def zipf_probs(n: int, alpha: float) -> np.ndarray:
+    p = (np.arange(1, n + 1, dtype=np.float64)) ** -alpha
+    return p / p.sum()
+
+
+def make_frontend(ctx, *, n_tenants, pipeline_depth, max_inflight=64):
+    """Disk-tier engine + adaptive cache behind the async front end."""
+    path = index_path()
+    if not os.path.exists(path):
+        ctx["engine"].save(path)
+    engine = GateANNEngine.load(
+        path, store_tier="disk", cache_budget_bytes=512 * RECORD,
+        cache_policy="adaptive", refresh_every=4,
+    )
+    rag = RAGServer(
+        engine=engine, cfg=None, params=None, layout=None,
+        passage_tokens=np.zeros((common.N, 4), np.int32),
+        search_config=SearchConfig(mode="gate", search_l=50, beam_width=8,
+                                   pipeline_depth=pipeline_depth),
+        bucket_sizes=(8, 16, 32),
+    )
+    tenants = [
+        TenantSpec(f"t{i}", "label", np.int32(i), max_inflight=max_inflight)
+        for i in range(n_tenants)
+    ]
+    srv = ServeFrontend(rag, tenants, max_batch=32, batch_window_s=0.002)
+    return engine, rag, srv
+
+
+def run_closed(srv, queries, schedule, *, n_clients):
+    """Each client keeps one request in flight; FIFO over the schedule."""
+    lats, served, rejected = [], [], [0]
+    lock = threading.Lock()
+    cursor = [0]
+
+    def client():
+        while True:
+            with lock:
+                i = cursor[0]
+                if i >= len(schedule):
+                    return
+                cursor[0] += 1
+            tenant, qi = schedule[i]
+            t0 = time.monotonic()
+            try:
+                h = srv.submit(tenant, queries[qi], timeout=30.0)
+                ids = h.result(timeout=120.0)
+            except AdmissionError:
+                with lock:
+                    rejected[0] += 1
+                continue
+            lat = time.monotonic() - t0
+            with lock:
+                lats.append(lat)
+                served.append((tenant, qi, ids))
+
+    t_start = time.monotonic()
+    threads = [threading.Thread(target=client) for _ in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.monotonic() - t_start
+    return np.asarray(lats), served, len(lats) / max(wall, 1e-9), rejected[0]
+
+
+def run_open(srv, queries, schedule, *, qps, seed):
+    """Poisson arrivals at ``qps``; latency counts from scheduled arrival."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / qps, size=len(schedule))
+    arrivals = np.cumsum(gaps)
+    handles, served, rejected = [], [], 0
+    t_start = time.monotonic()
+    for (tenant, qi), t_arr in zip(schedule, arrivals):
+        now = time.monotonic() - t_start
+        if t_arr > now:
+            time.sleep(t_arr - now)
+        t_sched = t_start + t_arr
+        try:
+            h = srv.submit(tenant, queries[qi], timeout=5.0)
+        except AdmissionError:
+            rejected += 1
+            continue
+        lag = time.monotonic() - t_sched  # scheduler + admission wait
+        handles.append((tenant, qi, h, lag))
+    lats = []
+    for tenant, qi, h, lag in handles:
+        ids = h.result(timeout=120.0)
+        served.append((tenant, qi, ids))
+        lats.append(lag + h.trace.total)
+    wall = time.monotonic() - t_start
+    return np.asarray(lats), served, len(lats) / max(wall, 1e-9), rejected
+
+
+def check_parity(engine, rag, queries, served) -> float:
+    """Served ids vs direct ``engine.search`` for every (tenant, query)."""
+    by_tenant: dict = {}
+    for tenant, qi, ids in served:
+        by_tenant.setdefault(tenant, {}).setdefault(qi, []).append(ids)
+    ok = total = 0
+    for tenant, qmap in sorted(by_tenant.items()):
+        qis = sorted(qmap)
+        label = np.full(len(qis), int(tenant[1:]), np.int32)
+        out = engine.search(
+            queries[qis], filter_kind="label", filter_params=label,
+            search_config=rag.search_config,
+        )
+        direct = np.asarray(out.ids)[:, : rag.search_config.result_k]
+        for row, qi in enumerate(qis):
+            for ids in qmap[qi]:
+                total += 1
+                ok += int(np.array_equal(ids, direct[row]))
+    return ok / max(total, 1)
+
+
+def pctl_rows(tag: str, lats_s: np.ndarray, qps: float):
+    p50, p99, p999 = np.percentile(lats_s * 1e3, [50, 99, 99.9])
+    return [
+        dict(name=f"serve_{tag}_p50_ms", lat1_us=p50 * 1e3, derived=p50),
+        dict(name=f"serve_{tag}_p99_ms", lat1_us=p99 * 1e3, derived=p99),
+        dict(name=f"serve_{tag}_p999_ms", lat1_us=p999 * 1e3, derived=p999),
+        dict(name=f"serve_{tag}_qps", lat1_us=0.0, derived=qps),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small request counts (CI smoke)")
+    ap.add_argument("--json", metavar="PATH", default="BENCH_serve.json")
+    ap.add_argument("--qps", type=float, default=40.0,
+                    help="open-loop offered load (Poisson arrivals)")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=600,
+                    help="requests per loop (closed and open)")
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--alpha", type=float, default=1.1,
+                    help="Zipf skew across tenants")
+    ap.add_argument("--pipeline-depth", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    n_requests = 120 if args.quick else args.requests
+
+    ctx = common.standard_setup()
+    queries = ctx["queries"]
+    engine, rag, srv = make_frontend(
+        ctx, n_tenants=args.tenants, pipeline_depth=args.pipeline_depth
+    )
+    rng = np.random.default_rng(args.seed)
+    probs = zipf_probs(args.tenants, args.alpha)
+
+    def make_schedule(n):
+        ts = rng.choice(args.tenants, size=n, p=probs)
+        qs = rng.integers(0, queries.shape[0], size=n)
+        return [(f"t{t}", int(q)) for t, q in zip(ts, qs)]
+
+    rows = []
+    try:
+        # warm the jit traces (one burst per bucket size) so compile time
+        # lands here, not in the measured tails
+        for burst in (8, 16, 32):
+            hs = [srv.submit(f"t{i % args.tenants}", queries[i % queries.shape[0]],
+                             timeout=30.0) for i in range(burst)]
+            for h in hs:
+                h.result(timeout=300.0)
+        print("# warmup done", file=sys.stderr)
+
+        lats_c, served_c, qps_c, rej_c = run_closed(
+            srv, queries, make_schedule(n_requests), n_clients=args.clients
+        )
+        print(f"# closed: {len(lats_c)} reqs, {qps_c:.1f} qps", file=sys.stderr)
+        rows += pctl_rows("closed", lats_c, qps_c)
+
+        lats_o, served_o, qps_o, rej_o = run_open(
+            srv, queries, make_schedule(n_requests), qps=args.qps,
+            seed=args.seed + 1,
+        )
+        print(f"# open: {len(lats_o)} reqs, offered {args.qps:.1f} "
+              f"achieved {qps_o:.1f} qps", file=sys.stderr)
+        rows += pctl_rows("open", lats_o, qps_o)
+        rows.append(dict(name="serve_open_offered_qps", lat1_us=0.0,
+                         derived=args.qps))
+
+        parity = check_parity(engine, rag, queries, served_c + served_o)
+        rep = srv.io_report()
+    finally:
+        srv.close()
+
+    for name in sorted(rep["per_tenant"]):
+        ts = rep["per_tenant"][name]
+        rows.append(dict(name=f"serve_{name}_ios_q", lat1_us=0.0,
+                         derived=ts["ios"] / max(ts["queries"], 1)))
+        rows.append(dict(name=f"serve_{name}_share", lat1_us=0.0,
+                         derived=ts["queries"] / max(rep["completed"], 1)))
+    for span, mean_s in rep["spans_mean_s"].items():
+        rows.append(dict(name=f"serve_span_{span}_ms", lat1_us=mean_s * 1e6,
+                         derived=mean_s * 1e3))
+    rows.append(dict(name="serve_recall_parity", lat1_us=0.0, derived=parity))
+    rows.append(dict(name="serve_reconciled", lat1_us=0.0,
+                     derived=float(rep.get("reconcile_drift", 0) == 0)))
+    rows.append(dict(name="serve_abandoned", lat1_us=0.0,
+                     derived=float(rep.get("abandoned_tokens", 0))))
+    rows.append(dict(name="serve_rejected", lat1_us=0.0,
+                     derived=float(rej_c + rej_o)))
+    rows.append(dict(name="serve_mean_batch", lat1_us=0.0,
+                     derived=rep["mean_batch_size"]))
+    rows.append(dict(name="serve_cache_hit_rate", lat1_us=0.0,
+                     derived=rep["cache_hit_rate"]))
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['lat1_us']:.1f},{r['derived']:.4f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "serve_bench", "rows": rows}, f, indent=1)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    print("# serve bench done", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -447,20 +447,29 @@ class GateANNEngine:
                 submit, drain = sf(), df()
                 if submit is None or drain is None:
                     submit = drain = None
-        out = searchm.filtered_search(
-            fetch=store.fetch_fn(),
-            neighbor_store=self.neighbor_store,
-            filter_check=check,
-            lut=lut,
-            codes=self.codes,
-            entry=self.medoid,
-            queries=q,
-            config=cfg,
-            cached_mask=cached_mask,
-            visit_counts=visit_counts,
-            submit=submit,
-            drain=drain,
-        )
+        try:
+            out = searchm.filtered_search(
+                fetch=store.fetch_fn(),
+                neighbor_store=self.neighbor_store,
+                filter_check=check,
+                lut=lut,
+                codes=self.codes,
+                entry=self.medoid,
+                queries=q,
+                config=cfg,
+                cached_mask=cached_mask,
+                visit_counts=visit_counts,
+                submit=submit,
+                drain=drain,
+            )
+        except BaseException:
+            # mid-search failure while a pipelined round is in flight: its
+            # submitted-but-undrained token would pin a reader slot and a
+            # completion-queue entry until close().  Drain-or-cancel here
+            # so a failed search never leaks executor capacity.
+            if submit is not None:
+                self.abandon_pending_io()
+            raise
         if adaptive:
             # fold this batch's counters; the refresh itself runs between
             # batches — either here at the next search's entry, or earlier
@@ -496,6 +505,27 @@ class GateANNEngine:
         if isinstance(self.record_store, AdaptiveRecordCache):
             return self.record_store.maybe_refresh()
         return False
+
+    # -- measured I/O plumbing ---------------------------------------------
+    def measured_store(self) -> DiskRecordStore | None:
+        """The slow tier under any cache wrappers, if it measures real
+        I/O — serving layers reconcile their modeled accounting against
+        its counters.  None when the slow tier only models I/O."""
+        store = self.record_store
+        while isinstance(store, (CachedRecordStore, AdaptiveRecordCache)):
+            store = store.backing
+        return store if isinstance(store, DiskRecordStore) else None
+
+    def io_counters(self) -> dict:
+        """Measured read counters of the slow tier ({} on modeled tiers)."""
+        store = self.measured_store()
+        return store.io_counters() if store is not None else {}
+
+    def abandon_pending_io(self) -> int:
+        """Drain-or-cancel submitted-but-undrained pipelined disk rounds
+        (``DiskRecordStore.abandon_pending``); 0 on non-disk tiers."""
+        store = self.measured_store()
+        return store.abandon_pending() if store is not None else 0
 
     # -- reporting ---------------------------------------------------------
     def memory_report(self) -> dict:

@@ -1,4 +1,25 @@
 from repro.serve.decode import make_serve_step, cache_pspecs
 from repro.serve.prefill import make_prefill_step
+from repro.serve.rag import RAGRequest, RAGServer
+from repro.serve.server import (
+    AdmissionError,
+    RequestTrace,
+    ServeFrontend,
+    ServeHandle,
+    ServerClosed,
+    TenantSpec,
+)
 
-__all__ = ["make_serve_step", "make_prefill_step", "cache_pspecs"]
+__all__ = [
+    "make_serve_step",
+    "make_prefill_step",
+    "cache_pspecs",
+    "RAGRequest",
+    "RAGServer",
+    "ServeFrontend",
+    "TenantSpec",
+    "ServeHandle",
+    "RequestTrace",
+    "AdmissionError",
+    "ServerClosed",
+]

@@ -67,9 +67,21 @@ class RAGServer:
     served_ios: int = 0
     served_tunnels: int = 0
     served_cache_hits: int = 0
-    # bucketing accounting (padding rows never count as served I/O)
+    # bucketing accounting (padding rows never count as served I/O).  A
+    # padded row replicates a real request, so under a cache tier its
+    # fetches can split between tiers just like the real row's: slow-tier
+    # dispatches land in ``padding_ios``, cache hits in
+    # ``padding_cache_hits`` — only the former consumes measured reads.
     padded_rows: int = 0
     padding_ios: int = 0
+    padding_cache_hits: int = 0
+    # measured reconciliation against the slow tier (disk store only):
+    # per-batch records_read deltas, and the cumulative drift between the
+    # measured delta and the modeled split (served_ios + padding_ios).
+    # The contract is drift == 0 — any non-zero value means the modeled
+    # attribution mis-credited I/O between served and padding rows.
+    measured_reads: int = 0
+    reconcile_drift: int = 0
     # hit rate of the most recent batch — shows cache adaptation over time
     last_batch_hit_rate: float = 0.0
 
@@ -97,6 +109,12 @@ class RAGServer:
             rep["bucket_sizes"] = tuple(self.bucket_sizes)
             rep["padded_rows"] = self.padded_rows
             rep["padding_ios"] = self.padding_ios
+            rep["padding_cache_hits"] = self.padding_cache_hits
+        measured = getattr(self.engine, "io_counters", lambda: {})()
+        if measured:
+            rep["measured_slow_reads"] = self.measured_reads
+            rep["reconcile_drift"] = self.reconcile_drift
+            rep["abandoned_tokens"] = measured.get("abandoned_tokens", 0)
         store = getattr(self.engine, "record_store", None)
         if isinstance(store, AdaptiveRecordCache):
             rep["cache_policy"] = store.policy
@@ -153,6 +171,12 @@ class RAGServer:
         all_ids = np.full((len(requests), k), -1, np.int32)
         stat_fields = {f: np.zeros((len(requests),), np.int32)
                        for f in SearchStats._fields}
+        # snapshot the slow tier's MEASURED reads so the modeled
+        # served/padding split below is checked against reality, not
+        # assumed — a cache tier above the disk store serves padded rows
+        # from either tier and only the modeled counters say which
+        measured0 = self.engine.io_counters().get("records_read")
+        batch_pad_ios = 0
         for kind, idxs in groups.items():
             g = len(idxs)
             pad = self._bucket_pad(g)
@@ -176,9 +200,23 @@ class RAGServer:
                 stat_fields[f][idxs] = np.asarray(getattr(out.stats, f))[:g]
             if pad:
                 self.padded_rows += pad
-                self.padding_ios += int(np.sum(np.asarray(out.stats.n_ios)[g:]))
+                pad_ios = int(np.sum(np.asarray(out.stats.n_ios)[g:]))
+                self.padding_ios += pad_ios
+                batch_pad_ios += pad_ios
+                self.padding_cache_hits += int(
+                    np.sum(np.asarray(out.stats.n_cache_hits)[g:])
+                )
         stats = SearchStats(**stat_fields)
         self._account(stats)
+        if measured0 is not None:
+            # the reconciliation contract, against measured counters:
+            # this batch's records_read delta must equal the modeled
+            # served + padding slow-tier dispatches exactly
+            delta = self.engine.io_counters()["records_read"] - measured0
+            self.measured_reads += delta
+            self.reconcile_drift += delta - (
+                int(np.sum(stat_fields["n_ios"])) + batch_pad_ios
+            )
         # adaptive cache maintenance runs between batches, off the
         # retrieval critical path (engine.search already observed counts)
         self.engine.maybe_refresh()

@@ -1,0 +1,351 @@
+"""Multi-tenant async serving front end over ``RAGServer``.
+
+``RAGServer`` is a library loop: the caller owns batching, there is one
+implicit tenant, and a slow search blocks everyone behind it.  This
+module adds the serving semantics the paper's throughput claims are
+quoted under — concurrent clients, admission control, and per-request
+latency you can put an SLO on:
+
+  * **tenant namespaces** — a :class:`TenantSpec` binds a tenant name to
+    a filter partition (``filter_kind`` + ``filter_params``).  A
+    tenant's searches are filtered searches over its namespace, so
+    isolation rides on the engine's existing filter machinery (and, with
+    ``cache_policy="adaptive"``, each tenant's namespace gets its own
+    cache partition via ``filter_bucket``).  No new index structures.
+  * **admission control** — each tenant has a bounded in-flight budget
+    (``max_inflight`` covers queued + in-service requests).  ``submit``
+    blocks up to ``admission_timeout_s`` for a slot and then raises
+    :class:`AdmissionError`: backpressure is explicit, never an
+    unbounded queue.
+  * **batch formation** — ONE dispatcher thread drains the submission
+    queue, waits up to ``batch_window_s`` for stragglers, and serves up
+    to ``max_batch`` requests per engine call.  Padding to canonical jit
+    shapes is delegated to ``RAGServer.bucket_sizes`` — the dispatcher
+    only decides batch *membership*; shape discipline stays in one
+    place.  The single dispatcher is load-bearing: the engine's adaptive
+    cache observe/refresh loop and the measured-counter reconciliation
+    in ``RAGServer.retrieve`` are between-batch mutations, safe only
+    because exactly one thread runs searches.
+  * **per-request tracing** — every request carries a
+    :class:`RequestTrace` with queue-wait / batch-form / search / drain
+    spans (monotonic-clock seconds).  ``io_report`` aggregates span
+    sums, per-tenant I/O attribution (exact: per-row ``n_ios`` sums, by
+    the measured reconciliation contract), and admission outcomes on top
+    of the underlying ``RAGServer`` report.
+
+Failure containment: if the engine raises mid-batch, the dispatcher
+abandons any pipelined disk rounds still in flight
+(``engine.abandon_pending_io()`` — no leaked reader slots), fails that
+batch's handles with the exception, and keeps serving later arrivals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.serve.rag import RAGRequest, RAGServer
+
+
+class AdmissionError(RuntimeError):
+    """Tenant over budget and no slot freed within the admission timeout."""
+
+
+class ServerClosed(RuntimeError):
+    """The request cannot be served because the server is shut down."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """A tenant namespace: a name, a filter partition, and an admission
+    budget.  ``filter_kind=None`` serves the whole corpus (no filter)."""
+
+    name: str
+    filter_kind: str | None = None
+    filter_params: object = None
+    max_inflight: int = 64  # queued + in-service requests, bounded
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    """Per-request span breakdown (seconds, monotonic clock).
+
+    ``queue_wait`` = submit -> picked into a batch; ``batch_form`` =
+    picked -> search dispatched (request assembly); ``search`` = engine
+    call; ``drain`` = results materialized -> handle resolved.
+    """
+
+    tenant: str
+    batch_size: int = 0
+    queue_wait: float = 0.0
+    batch_form: float = 0.0
+    search: float = 0.0
+    drain: float = 0.0
+    n_ios: int = 0
+    n_cache_hits: int = 0
+
+    @property
+    def total(self) -> float:
+        return self.queue_wait + self.batch_form + self.search + self.drain
+
+
+class ServeHandle:
+    """The client's side of one submitted request."""
+
+    def __init__(self, tenant: str):
+        self.trace = RequestTrace(tenant=tenant)
+        self._done = threading.Event()
+        self._ids: np.ndarray | None = None
+        self._error: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: float | None = None) -> np.ndarray:
+        """Block for the retrieved ids (raises what the server raised)."""
+        if not self._done.wait(timeout):
+            raise TimeoutError("request not served within timeout")
+        if self._error is not None:
+            raise self._error
+        return self._ids
+
+
+@dataclasses.dataclass
+class _Pending:
+    handle: ServeHandle
+    request: RAGRequest
+    tenant: TenantSpec
+    t_submit: float
+
+
+class ServeFrontend:
+    """Async request-admission layer in front of a ``RAGServer``.
+
+    Client threads call :meth:`submit` concurrently; one dispatcher
+    thread forms batches and runs the engine.  ``close()`` (or the
+    context manager) stops the dispatcher, fails undispatched requests
+    with :class:`ServerClosed`, and abandons in-flight disk rounds.
+    """
+
+    def __init__(
+        self,
+        rag: RAGServer,
+        tenants: list[TenantSpec] | tuple[TenantSpec, ...],
+        *,
+        max_batch: int = 32,
+        batch_window_s: float = 0.002,
+        admission_timeout_s: float = 1.0,
+    ):
+        if not tenants:
+            raise ValueError("a server needs at least one TenantSpec")
+        names = [t.name for t in tenants]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant names: {names}")
+        self.rag = rag
+        self.tenants = {t.name: t for t in tenants}
+        self.max_batch = int(max_batch)
+        self.batch_window_s = float(batch_window_s)
+        self.admission_timeout_s = float(admission_timeout_s)
+
+        self._lock = threading.Lock()
+        self._slot_freed = threading.Condition(self._lock)
+        self._work = threading.Condition(self._lock)
+        self._queue: deque[_Pending] = deque()
+        self._inflight = {t.name: 0 for t in tenants}
+        self._closed = False
+        # admission + outcome counters (under _lock)
+        self.admitted = 0
+        self.rejected = 0
+        self.completed = 0
+        self.failed = 0
+        self.batches = 0
+        # span sums (dispatcher-thread only)
+        self._span_sums = {"queue_wait": 0.0, "batch_form": 0.0,
+                           "search": 0.0, "drain": 0.0}
+        # per-tenant attribution (dispatcher-thread only)
+        self._tenant_stats = {
+            t.name: {"queries": 0, "ios": 0, "cache_hits": 0, "failed": 0}
+            for t in tenants
+        }
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="serve-dispatcher", daemon=True
+        )
+        self._dispatcher.start()
+
+    # -- client side -------------------------------------------------------
+    def submit(
+        self,
+        tenant: str,
+        query_vec: np.ndarray,
+        *,
+        prompt_tokens: np.ndarray | None = None,
+        timeout: float | None = None,
+    ) -> ServeHandle:
+        """Admit one request into ``tenant``'s namespace.
+
+        Blocks while the tenant is at ``max_inflight`` until a slot
+        frees, up to ``timeout`` (default ``admission_timeout_s``), then
+        raises :class:`AdmissionError`.  Thread-safe.
+        """
+        spec = self.tenants.get(tenant)
+        if spec is None:
+            raise KeyError(f"unknown tenant {tenant!r}; have {sorted(self.tenants)}")
+        if timeout is None:
+            timeout = self.admission_timeout_s
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            while not self._closed and self._inflight[tenant] >= spec.max_inflight:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or not self._slot_freed.wait(remaining):
+                    self.rejected += 1
+                    raise AdmissionError(
+                        f"tenant {tenant!r} at max_inflight="
+                        f"{spec.max_inflight} for {timeout:.3f}s"
+                    )
+            if self._closed:
+                raise ServerClosed("server is closed")
+            handle = ServeHandle(tenant)
+            req = RAGRequest(
+                query_vec=np.asarray(query_vec),
+                prompt_tokens=(
+                    np.zeros((0,), np.int32) if prompt_tokens is None
+                    else np.asarray(prompt_tokens, np.int32)
+                ),
+                filter_kind=spec.filter_kind,
+                filter_params=spec.filter_params,
+            )
+            self._inflight[tenant] += 1
+            self.admitted += 1
+            self._queue.append(_Pending(handle, req, spec, time.monotonic()))
+            self._work.notify()
+        return handle
+
+    def queue_depth(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    # -- dispatcher side ---------------------------------------------------
+    def _take_batch(self) -> list[_Pending] | None:
+        """Block for work; once some arrives, hold the batch open for
+        ``batch_window_s`` (or until full) and take FIFO order.  Returns
+        None when the server closes."""
+        with self._lock:
+            while not self._queue and not self._closed:
+                self._work.wait()
+            if not self._queue:  # closed and drained
+                return None
+            if self.batch_window_s > 0 and len(self._queue) < self.max_batch:
+                self._work.wait(self.batch_window_s)
+            batch = [self._queue.popleft()
+                     for _ in range(min(len(self._queue), self.max_batch))]
+            if not batch:
+                # close() drained the queue between wakeup and pop
+                return None if self._closed else []
+            return batch
+
+    def _resolve(self, p: _Pending, ids, err, t_searched: float) -> None:
+        p.handle._ids = ids
+        p.handle._error = err
+        p.handle.trace.drain = time.monotonic() - t_searched
+        p.handle._done.set()
+        with self._lock:
+            self._inflight[p.tenant.name] -= 1
+            if err is None:
+                self.completed += 1
+            else:
+                self.failed += 1
+                self._tenant_stats[p.tenant.name]["failed"] += 1
+            for k in ("queue_wait", "batch_form", "search", "drain"):
+                self._span_sums[k] += getattr(p.handle.trace, k)
+            self._slot_freed.notify_all()
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            batch = self._take_batch()
+            if batch is None:
+                return
+            if not batch:  # spurious wakeup, nothing to serve
+                continue
+            t_formed = time.monotonic()
+            for p in batch:
+                p.handle.trace.queue_wait = t_formed - p.t_submit
+                p.handle.trace.batch_size = len(batch)
+            requests = [p.request for p in batch]
+            t_dispatch = time.monotonic()
+            for p in batch:
+                p.handle.trace.batch_form = t_dispatch - t_formed
+            try:
+                ids, stats = self.rag.retrieve(requests)
+                err = None
+            except BaseException as e:  # noqa: BLE001 — failures are per-batch
+                # a mid-search failure may strand a pipelined disk round
+                # in flight; abandon it so the reader pool stays usable
+                # for the next batch (engine.search also abandons on its
+                # own failures — this covers retrieve-level ones too)
+                self.rag.engine.abandon_pending_io()
+                ids = stats = None
+                err = e
+            t_searched = time.monotonic()
+            n_ios = np.asarray(stats.n_ios) if err is None else None
+            n_hits = np.asarray(stats.n_cache_hits) if err is None else None
+            for i, p in enumerate(batch):
+                p.handle.trace.search = t_searched - t_dispatch
+                ts = self._tenant_stats[p.tenant.name]
+                ts["queries"] += 1
+                if err is None:
+                    p.handle.trace.n_ios = int(n_ios[i])
+                    p.handle.trace.n_cache_hits = int(n_hits[i])
+                    ts["ios"] += int(n_ios[i])
+                    ts["cache_hits"] += int(n_hits[i])
+                    self._resolve(p, ids[i], None, t_searched)
+                else:
+                    self._resolve(p, None, err, t_searched)
+            with self._lock:
+                self.batches += 1
+
+    # -- reporting / lifecycle ---------------------------------------------
+    def io_report(self) -> dict:
+        """The ``RAGServer`` report plus serving-layer aggregates:
+        admission outcomes, mean span breakdown, per-tenant attribution."""
+        rep = self.rag.io_report()
+        with self._lock:
+            done = max(self.completed + self.failed, 1)
+            rep.update(
+                tenants=sorted(self.tenants),
+                admitted=self.admitted,
+                rejected=self.rejected,
+                completed=self.completed,
+                failed=self.failed,
+                batches=self.batches,
+                queue_depth=len(self._queue),
+                mean_batch_size=(self.completed + self.failed) / max(self.batches, 1),
+                spans_mean_s={k: v / done for k, v in self._span_sums.items()},
+                per_tenant={k: dict(v) for k, v in self._tenant_stats.items()},
+            )
+        return rep
+
+    def close(self) -> None:
+        """Stop serving: fail queued requests, join the dispatcher,
+        abandon any in-flight disk rounds.  Idempotent."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            orphans = list(self._queue)
+            self._queue.clear()
+            self._work.notify_all()
+            self._slot_freed.notify_all()
+        for p in orphans:
+            self._resolve(p, None, ServerClosed("server closed"),
+                          time.monotonic())
+        self._dispatcher.join(timeout=30.0)
+        self.rag.engine.abandon_pending_io()
+
+    def __enter__(self) -> "ServeFrontend":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

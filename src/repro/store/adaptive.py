@@ -246,6 +246,62 @@ class AdaptiveRecordCache:
             return True
         return False
 
+    # -- state across save()/load() ----------------------------------------
+    # The EMA counters are device state keyed to THIS store's node ids: a
+    # freshly loaded engine must never inherit them implicitly (an index
+    # written by a different build, or a future format that reorders rows,
+    # would make stale counters silently mis-rank the hot set).  load()
+    # therefore always starts from reset_counters() semantics — the
+    # cold-start seed hot set, zero counts, no partitions — and a caller
+    # who wants to carry a learned workload across a restart does it
+    # explicitly: export_state() before save, restore_state() after load
+    # (validated against the new store's geometry, then refreshed so the
+    # published hot sets immediately reflect the carried counters).
+
+    def reset_counters(self) -> None:
+        """Forget the learned workload: zero the EMAs, drop partitions,
+        republish the cold-start seed hot set."""
+        self.counts = jnp.zeros_like(self.counts)
+        self.partitions = OrderedDict()
+        self.global_store = self._materialize(self.seed_hot_ids)
+        self.batches_since_refresh = 0
+
+    def export_state(self) -> dict:
+        """Portable counter state: global + per-partition EMAs (host
+        arrays), tagged with the corpus geometry for restore validation."""
+        return {
+            "n": int(self.counts.shape[0]),
+            "counts": np.asarray(self.counts, np.float32),
+            "partitions": [
+                (key, np.asarray(part.counts, np.float32))
+                for key, part in self.partitions.items()
+            ],
+        }
+
+    def restore_state(self, state: dict) -> None:
+        """Adopt exported counters onto this (possibly reloaded) store.
+
+        Node ids must mean the same rows they meant at export — the only
+        thing checkable from here is the corpus length, so a mismatch is
+        rejected loudly instead of mis-ranking silently.  The hot sets
+        are refreshed immediately, so the first post-restore search
+        already serves the carried workload's hot set.
+        """
+        n = int(self.counts.shape[0])
+        counts = np.asarray(state["counts"], np.float32)
+        if int(state.get("n", -1)) != n or counts.shape != (n,):
+            raise ValueError(
+                f"adaptive state holds counters for n={state.get('n')} "
+                f"records but this store has n={n} — counters are keyed "
+                "to node ids and cannot be remapped across stores"
+            )
+        self.counts = jnp.asarray(counts)
+        self.partitions = OrderedDict()
+        for key, counts in list(state.get("partitions", []))[-self.max_partitions:]:
+            part = _Partition(counts=jnp.asarray(counts, jnp.float32))
+            self.partitions[tuple(key) if isinstance(key, list) else key] = part
+        self.refresh()
+
     # -- reporting ---------------------------------------------------------
     def n_materialized(self) -> int:
         return 1 + sum(1 for p in self.partitions.values() if p.store is not None)
@@ -281,6 +337,15 @@ class AdaptiveRecordCache:
 
     def drain_fn(self):
         return self.global_store.drain_fn()
+
+    def io_counters(self) -> dict:
+        """Measured counters of the slow tier ({} for modeled backings)."""
+        f = getattr(self.backing, "io_counters", None)
+        return f() if f is not None else {}
+
+    def abandon_pending(self) -> int:
+        f = getattr(self.backing, "abandon_pending", None)
+        return f() if f is not None else 0
 
     def record_bytes(self) -> int:
         return self.backing.record_bytes()

@@ -301,6 +301,19 @@ class CachedRecordStore:
         ids = np.flatnonzero(slot_of >= 0)
         return ids[np.argsort(slot_of[ids])].astype(np.int32)
 
+    def io_counters(self) -> dict:
+        """Measured counters of the backing tier ({} when it only models
+        its I/O) — serving layers attribute per-tenant reads through this
+        without caring how many cache tiers sit above the slow store."""
+        f = getattr(self.backing, "io_counters", None)
+        return f() if f is not None else {}
+
+    def abandon_pending(self) -> int:
+        """Retire the backing tier's submitted-but-undrained rounds (0
+        when the backing has no async pair)."""
+        f = getattr(self.backing, "abandon_pending", None)
+        return f() if f is not None else 0
+
     # -- passthroughs so engine/test code can reach the backing arrays -----
     @property
     def vectors(self):

@@ -366,6 +366,9 @@ class DiskRecordStore:
 
     def close(self) -> None:
         self._warm_stop.set()  # signal only — never blocks on the warmer
+        # tokens nobody will ever drain are leaks — retire them first so
+        # close() is also the backstop that makes them visible
+        self.abandon_pending()
         pool = self._pool
         if pool is not None:
             # let queued reads finish against still-open fds, then drop
@@ -377,6 +380,35 @@ class DiskRecordStore:
             self._inflight = 0
         for seg in self._segments:
             seg.close()
+
+    def abandon_pending(self) -> int:
+        """Drain-or-cancel every submitted-but-undrained round.
+
+        The pipelined search loop issues one drain per submit, so on the
+        happy path the completion queue runs dry by itself.  If the caller
+        dies between stage A and stage B (a search error surfacing at
+        materialization, a serving batch failing mid-flight), the rounds
+        still in flight would otherwise pin executor slots and queue
+        entries until ``close()``.  This is the ``finally`` path: cancel
+        what hasn't started, block out what has (the reads run against
+        still-open fds and their I/O is already counted), and count every
+        retired token in ``abandoned_tokens`` — asserted zero by the
+        happy-path tests, so a leak is a test failure, not a slow death.
+        """
+        with self._lock:
+            orphans = list(self._pending.values())
+            self._pending.clear()
+            self._inflight = 0
+        for fut in orphans:
+            if not fut.cancel():
+                try:
+                    fut.result()  # already running: let the read finish
+                except Exception:
+                    pass  # the abandoning caller is already unwinding
+        if orphans:
+            with self._lock:
+                self.abandoned_tokens += len(orphans)
+        return len(orphans)
 
     def __del__(self):  # best-effort fd cleanup
         try:
@@ -690,6 +722,9 @@ class DiskRecordStore:
         # state, not a counter, and survives resets)
         self.inflight_depth_max = 0
         self.overlapped_rounds = 0
+        # submitted rounds retired by abandon_pending instead of a drain —
+        # zero on every happy path (the pipeline drains what it submits)
+        self.abandoned_tokens = 0
         # background warmer
         self.warmed_bytes = 0
 
@@ -707,6 +742,7 @@ class DiskRecordStore:
                 "read_rounds": self.read_rounds,
                 "inflight_depth_max": self.inflight_depth_max,
                 "overlapped_rounds": self.overlapped_rounds,
+                "abandoned_tokens": self.abandoned_tokens,
                 "warmed_bytes": self.warmed_bytes,
             }
 

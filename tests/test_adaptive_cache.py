@@ -193,6 +193,101 @@ def test_modeled_cost_prices_refresh(tiny_engine, tiny_corpus):
     assert lat_fast > lat_slow > lat_static
 
 
+def test_load_starts_counters_reset(tiny_engine, tiny_corpus, tmp_path):
+    """save()/load() must never carry EMA counters implicitly: the loaded
+    adaptive tier starts from the cold-start seed (zero counts, no
+    partitions) even when the saved engine had a learned workload."""
+    from repro.core.engine import GateANNEngine
+
+    _, _, queries = tiny_corpus
+    warm = tiny_engine.with_cache(128 * RECORD, policy="adaptive",
+                                  refresh_every=1)
+    _search(warm, queries)
+    assert float(np.asarray(warm.record_store.counts).sum()) > 0
+    path = str(tmp_path / "adaptive.gann")
+    warm.save(path)
+    eng = GateANNEngine.load(
+        path, cache_budget_bytes=128 * RECORD, cache_policy="adaptive",
+        refresh_every=1,
+    )
+    store = eng.record_store
+    assert float(np.asarray(store.counts).sum()) == 0.0
+    assert len(store.partitions) == 0
+    assert store.batches_since_refresh == 0
+    # cold hot set == the seed, and results match the saved engine exactly
+    np.testing.assert_array_equal(store.hot_ids(), store.seed_hot_ids)
+    out = _search(eng, queries)
+    base = _search(tiny_engine, queries)
+    np.testing.assert_array_equal(np.asarray(out.ids), np.asarray(base.ids))
+
+
+def test_export_restore_carries_workload_across_save_load(
+    tiny_engine, tiny_corpus, tmp_path
+):
+    """The explicit persist-and-remap path: export_state before save,
+    restore_state after load → the first post-restore search already
+    serves the learned hot set (no re-warm), with identical results."""
+    from repro.core.engine import GateANNEngine
+
+    _, _, queries = tiny_corpus
+    warm = tiny_engine.with_cache(128 * RECORD, policy="adaptive",
+                                  refresh_every=0)
+    for _ in range(3):
+        _search(warm, queries)
+    warm.record_store.refresh()
+    state = warm.record_store.export_state()
+    warm_hits = int(np.sum(np.asarray(_search(warm, queries).stats.n_cache_hits)))
+    path = str(tmp_path / "adaptive.gann")
+    warm.save(path)
+    eng = GateANNEngine.load(
+        path, cache_budget_bytes=128 * RECORD, cache_policy="adaptive",
+        refresh_every=0,
+    )
+    store = eng.record_store
+    eng.record_store.restore_state(state)
+    np.testing.assert_allclose(
+        np.asarray(store.counts), np.asarray(state["counts"]), rtol=1e-6
+    )
+    assert set(store.partitions) == {k for k, _ in state["partitions"]}
+    # restore_state refreshes immediately: partition snapshots are live
+    for part in store.partitions.values():
+        assert part.store is not None
+    out = _search(eng, queries)
+    hits = int(np.sum(np.asarray(out.stats.n_cache_hits)))
+    assert hits == warm_hits  # same hot set → same hit pattern, no re-warm
+    base = _search(tiny_engine, queries)
+    np.testing.assert_array_equal(np.asarray(out.ids), np.asarray(base.ids))
+
+
+def test_restore_state_rejects_mismatched_corpus(adaptive_engine, tiny_corpus):
+    _, _, queries = tiny_corpus
+    _search(adaptive_engine, queries[:4])
+    store = adaptive_engine.record_store
+    state = store.export_state()
+    bad = dict(state, n=state["n"] + 1)
+    with pytest.raises(ValueError, match="keyed to node ids"):
+        store.restore_state(bad)
+    bad2 = dict(state, counts=state["counts"][:-1])
+    with pytest.raises(ValueError, match="keyed to node ids"):
+        store.restore_state(bad2)
+
+
+def test_reset_counters_forgets_workload(adaptive_engine, tiny_corpus):
+    _, _, queries = tiny_corpus
+    for _ in range(3):
+        _search(adaptive_engine, queries)
+    store = adaptive_engine.record_store
+    assert float(np.asarray(store.counts).sum()) > 0
+    store.reset_counters()
+    assert float(np.asarray(store.counts).sum()) == 0.0
+    assert len(store.partitions) == 0
+    assert store.batches_since_refresh == 0
+    np.testing.assert_array_equal(store.hot_ids(), store.seed_hot_ids)
+    out = _search(adaptive_engine, queries)
+    base = _search(adaptive_engine.with_cache(0), queries)
+    np.testing.assert_array_equal(np.asarray(out.ids), np.asarray(base.ids))
+
+
 def test_rag_server_drives_the_control_loop(tiny_engine, tiny_corpus):
     """RAGServer.retrieve refreshes the adaptive cache between batches and
     io_report surfaces the adaptation state."""

@@ -98,6 +98,7 @@ def test_pipelined_parity_every_mode(disk_engine, tiny_corpus, sync_out, mode):
     ppr = store.pages_per_record
     assert d["pages_read"] == int(np.sum(np.asarray(out.stats.n_ios))) * ppr
     assert d["unique_sectors_read"] <= d["records_read"]
+    assert d["abandoned_tokens"] == 0  # happy path drains every round
 
 
 def test_depth_sweep_and_degenerate_depth_one(disk_engine, tiny_corpus, sync_out):
@@ -271,9 +272,66 @@ def test_completion_queue_lock_hammer(index_path):
     assert c["records_read"] == want_records
     assert c["fetch_rounds"] == n_threads * per_thread
     assert c["inflight_depth_max"] >= pipe  # the pipes genuinely filled
+    assert c["abandoned_tokens"] == 0  # every round was properly drained
     assert len(store._pending) == 0  # the completion queue drained dry
     store.close()
     oracle.close()
+
+
+def test_abandon_pending_drains_orphaned_rounds(index_path):
+    """The mid-search-failure path: submitted-but-undrained rounds must be
+    drain-or-cancelled (no leaked executor slots), counted in
+    ``abandoned_tokens``, and the store must stay fully usable after."""
+    store = DiskRecordStore.open(index_path)
+    rng = np.random.default_rng(7)
+    beams = [rng.integers(-1, store.n, size=(2, 3)).astype(np.int32)
+             for _ in range(3)]
+    tokens = [store._host_submit(b)[0] for b in beams]  # never drained
+    assert len(store._pending) == len(beams)
+    n = store.abandon_pending()
+    assert n == len(beams)
+    assert store.io_counters()["abandoned_tokens"] == len(beams)
+    assert len(store._pending) == 0 and store._inflight == 0
+    # an abandoned token is gone — a late drain fails loudly, not silently
+    with pytest.raises(KeyError, match="unknown token"):
+        store._host_drain(tokens[0], beams[0], True)
+    # the reader pool survived: a fresh submit/drain round works, and a
+    # whole pipelined search still runs clean on this same store
+    token, _ = store._host_submit(beams[0])
+    got = store._host_drain(token, beams[0], True)
+    want_v, _ = store._host_fetch(beams[0])
+    np.testing.assert_array_equal(got, want_v)
+    assert store.abandon_pending() == 0  # idempotent when nothing pending
+    store.close()
+
+
+def test_engine_abandons_on_midsearch_failure(index_path, tiny_corpus,
+                                              monkeypatch):
+    """A stage-A failure with a round in flight must not leak the token:
+    engine.search's failure path abandons it (abandoned_tokens counts it)
+    and the engine serves the next search normally."""
+    from repro.core import search as searchm
+
+    _, _, queries = tiny_corpus
+    engine = GateANNEngine.load(index_path, store_tier="disk")
+    store = engine.record_store
+    kind, params = _filter_for("gate", queries)
+    # leave a genuinely in-flight round, as a failing stage A would
+    store._host_submit(np.zeros((1, 2), np.int32))
+
+    def boom(*args, **kwargs):
+        raise RuntimeError("stage A failed mid-search")
+
+    monkeypatch.setattr(searchm, "filtered_search", boom)
+    with pytest.raises(RuntimeError, match="stage A failed"):
+        engine.search(queries, filter_kind=kind, filter_params=params,
+                      search_config=_cfg("gate", 2))
+    assert store.io_counters()["abandoned_tokens"] >= 1
+    assert len(store._pending) == 0  # nothing left pinning reader slots
+    monkeypatch.undo()
+    out = engine.search(queries, filter_kind=kind, filter_params=params,
+                        search_config=_cfg("gate", 2))
+    assert np.asarray(out.ids).shape[0] == queries.shape[0]
 
 
 @pytest.mark.slow
