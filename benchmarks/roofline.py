@@ -18,6 +18,15 @@ and a one-line action that would move it.
 Usage:
   PYTHONPATH=src python -m benchmarks.roofline [--dryrun-dir results/dryrun]
       [--format md|csv]
+  PYTHONPATH=src python -m benchmarks.roofline --kernels [--json kernels.json]
+
+``--kernels`` runs the stage-A kernel sweep instead: fused Pallas
+traversal round (kernels.fused_traversal) vs the unfused op chain
+(best_unexpanded + filter masks + ADC + frontier insert), checked
+bitwise against the jnp reference twin and placed against the roofline
+(ADC contraction FLOPs vs the VMEM-resident working set).  Emits
+``fused_parity`` / ``fused_speedup`` / ``fused_compiled`` contract rows
+for the nightly job.
 """
 from __future__ import annotations
 
@@ -26,6 +35,7 @@ import glob
 import json
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -234,12 +244,139 @@ def analyze_cell(rep: dict) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# --kernels: fused vs unfused stage-A traversal round
+# ---------------------------------------------------------------------------
+
+
+def _kernel_round_state(b, l, w, m, c, k, n, seed=0):
+    """Random mid-search round state (frontier + candidate batch)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    fid = rng.choice(n, size=(b, l), replace=False if l <= n else True).astype(np.int32)
+    fid[:, l // 2:] = -1  # half the frontier dead, like a mid-search round
+    fd = np.where(fid >= 0, rng.random((b, l)).astype(np.float32) * 8,
+                  np.float32(3.4e38))
+    fexp = (rng.random((b, l)) < 0.4) & (fid >= 0)
+    fpass = rng.random((b, l)) < 0.6
+    nid = rng.integers(-1, n, size=(b, m)).astype(np.int32)
+    ncodes = rng.integers(0, k, size=(b, m, c)).astype(np.int32)
+    npass = rng.random((b, m)) < 0.6
+    lut = (rng.normal(size=(b, c, k)).astype(np.float32)) ** 2
+    entry = fid[:, 0].copy()
+    return tuple(
+        jnp.asarray(x)
+        for x in (fid, fd, fexp, fpass, nid, ncodes, npass, lut, entry)
+    )
+
+
+def _unfused_stage(state, width):
+    """The op-chain stage A the kernel fuses: ADC reference + dedup/insert
+    (stable argsort) + best-unexpanded select + mode masks — i.e. the jnp
+    reference twin, which is exactly the unfused building blocks."""
+    from repro.kernels import ref as kref
+
+    return kref.fused_traversal_round_ref(*state, mode="gate", width=width)
+
+
+def kernels_sweep(args) -> int:
+    import jax
+    import numpy as np
+
+    from repro.kernels import fused_traversal as ft
+    from repro.kernels.backend import supports_compiled_pallas
+
+    b, l, w = args.batch, args.search_l, args.beam
+    r, r_max = args.degree, args.r_max
+    c, k = args.pq_chunks, args.pq_k
+    m = w * (r + r_max)
+    n = 100_000
+    state = _kernel_round_state(b, l, w, m, c, k, n)
+    compiled = supports_compiled_pallas()
+
+    fused = lambda: ft.fused_traversal_round(*state, mode="gate", width=w)
+    unfused = jax.jit(lambda s: _unfused_stage(s, w))
+
+    # parity: every output field of the fused kernel bitwise-equal to the
+    # jnp reference twin (= the unfused op chain)
+    got, want = fused(), unfused(state)
+    parity = all(
+        np.array_equal(np.asarray(getattr(got, f)), np.asarray(getattr(want, f)))
+        for f in got._fields
+    )
+
+    def bench(fn):
+        fn()[0].block_until_ready()  # compile
+        t0 = time.perf_counter()
+        for _ in range(args.repeats):
+            out = fn()
+        jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
+        return (time.perf_counter() - t0) / args.repeats
+
+    t_fused = bench(fused)
+    t_unfused = bench(lambda: unfused(state))
+    speedup = t_unfused / t_fused if t_fused > 0 else 0.0
+
+    # roofline placement: ADC one-hot contraction dominates FLOPs
+    # (B·C·M·K MACs); the working set is the VMEM-resident round state
+    flops = 2.0 * b * c * m * k
+    bytes_rt = 4.0 * b * (
+        l * 4 + m * (2 + c) + c * k  # frontier + candidates/codes + lut
+    )
+    t_c, t_m = flops / PEAK_FLOPS, bytes_rt / HBM_BW
+    rows = [
+        {"name": "fused_parity", "derived": 1.0 if parity else 0.0},
+        {"name": "fused_speedup", "derived": speedup},
+        {"name": "fused_compiled", "derived": 1.0 if compiled else 0.0},
+        {"name": "fused_us", "derived": t_fused * 1e6},
+        {"name": "unfused_us", "derived": t_unfused * 1e6},
+        {"name": "stage_flops", "derived": flops},
+        {"name": "stage_bytes", "derived": bytes_rt},
+        {"name": "stage_intensity", "derived": flops / bytes_rt},
+        {"name": "stage_roofline_bound_us",
+         "derived": max(t_c, t_m) * 1e6},
+    ]
+    print("| metric | value |")
+    print("|---|---|")
+    for row in rows:
+        print(f"| {row['name']} | {row['derived']:.6g} |")
+    print(
+        f"# shapes: B={b} L={l} W={w} M={m} C={c} K={k} "
+        f"backend={jax.default_backend()} "
+        f"mode={'compiled' if compiled else 'interpret'}"
+    )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, "shape": {
+                "b": b, "l": l, "w": w, "m": m, "c": c, "k": k,
+                "backend": jax.default_backend(),
+            }}, f, indent=1)
+    return 0 if parity else 1
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun-dir", default="results/dryrun")
     ap.add_argument("--format", default="md", choices=["md", "csv"])
     ap.add_argument("--mesh", default="16x16", help="16x16 | 2x16x16 | all")
+    ap.add_argument("--kernels", action="store_true",
+                    help="run the fused-vs-unfused stage-A kernel sweep")
+    ap.add_argument("--json", default="",
+                    help="(--kernels) write contract rows to this JSON file")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--search-l", type=int, default=64)
+    ap.add_argument("--beam", type=int, default=8)
+    ap.add_argument("--degree", type=int, default=32)
+    ap.add_argument("--r-max", type=int, default=16)
+    ap.add_argument("--pq-chunks", type=int, default=8)
+    ap.add_argument("--pq-k", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=20)
     args = ap.parse_args()
+
+    if args.kernels:
+        sys.exit(kernels_sweep(args))
 
     rows = []
     for path in sorted(glob.glob(os.path.join(args.dryrun_dir, "*.json"))):

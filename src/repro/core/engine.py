@@ -60,6 +60,11 @@ class EngineConfig:
     # filter buckets see traffic (memory_report's cache_device_bytes
     # shows the true footprint).
     cache_partitions: int = 4
+    # engine-wide default for SearchConfig.use_fused_kernel: run stage-A
+    # traversal as one fused Pallas pass per round.  Callers passing an
+    # explicit search_config keep full control; results are bit-identical
+    # either way (unsupported shapes/backends fall back silently).
+    use_fused_kernel: bool = False
     seed: int = 0
 
 
@@ -414,7 +419,9 @@ class GateANNEngine:
         filter_params=None,
         search_config: searchm.SearchConfig | None = None,
     ) -> searchm.SearchOutput:
-        cfg = search_config or searchm.SearchConfig()
+        cfg = search_config or searchm.SearchConfig(
+            use_fused_kernel=self.config.use_fused_kernel
+        )
         q = jnp.asarray(queries, dtype=jnp.float32)
         lut = pqm.build_lut(self.codec, q)
         check = self.make_filter(filter_kind, filter_params)

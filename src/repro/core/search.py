@@ -56,6 +56,7 @@ from repro.core import frontier as fr
 from repro.core import pq as pqm
 from repro.core.filter_store import CheckFn
 from repro.core.neighbor_store import NeighborStore
+from repro.kernels import fused_traversal as ftk
 from repro.store.cache import CachedMaskFn
 from repro.store.vector_store import RecordFetchFn
 
@@ -75,6 +76,12 @@ class SearchConfig:
     # synchronous loop; >1 needs a store with submit/drain (disk tier) and
     # is bit-identical at any depth — only wall-clock changes.
     pipeline_depth: int = 1
+    # run stage A (ADC + masks + beam select + frontier merge) as ONE
+    # fused Pallas pass per round (kernels.fused_traversal) instead of
+    # separate ops with HBM round-trips between them.  Bit-identical to
+    # the unfused loop at any mode/tier/depth; silently falls back when
+    # the shapes or backend don't support the kernel.
+    use_fused_kernel: bool = False
 
     def __post_init__(self):
         assert self.mode in MODES, self.mode
@@ -113,17 +120,40 @@ def _adc_ids(lut: jax.Array, codes: jax.Array, ids: jax.Array, use_kernel: bool)
             got,  # (B, M, C) indexes K axis
             axis=1,
         ).sum(axis=-1)
+    # fence the reduction (same reason as _exact_dist): these distances
+    # order the frontier, so an ULP of context-dependent fusion drift
+    # would change traversal between the unfused and fused-kernel loops
+    d = jax.lax.optimization_barrier(d)
     return jnp.where(ids >= 0, d, fr.INF)
 
 
 def _exact_dist(queries: jax.Array, vecs: jax.Array, use_kernel: bool) -> jax.Array:
-    """(B, D) queries vs (B, W, D) fetched rows -> (B, W) squared L2."""
+    """(B, D) queries vs (B, W, D) fetched rows -> (B, W) squared L2.
+
+    Fenced with optimization barriers: the sum reduction must produce the
+    same bits regardless of what XLA fuses around the call site, or the
+    sync / pipelined / fused-kernel loops (different graphs, same math)
+    could drift by an ULP in their exact result distances.
+    """
+    queries, vecs = jax.lax.optimization_barrier((queries, vecs))
     if use_kernel:
         from repro.kernels import ops as kops
 
-        return kops.l2_dist(queries, vecs)
+        return jax.lax.optimization_barrier(kops.l2_dist(queries, vecs))
     diff = vecs - queries[:, None, :]
-    return jnp.sum(diff * diff, axis=-1)
+    sq = diff * diff
+    # Fixed-association pairwise tree instead of jnp.sum: XLA's reduce
+    # accumulation order is implementation-defined and can differ between
+    # otherwise-identical modules (the barrier fences fusion, not reduce
+    # codegen), which showed up as 1-ULP drift between the unfused and
+    # fused-kernel search loops.  Explicit adds are IEEE-strict.
+    while sq.shape[-1] > 1:
+        half = sq.shape[-1] // 2 * 2
+        head = sq[..., 0:half:2] + sq[..., 1:half:2]
+        if half != sq.shape[-1]:
+            head = jnp.concatenate([head, sq[..., half:]], axis=-1)
+        sq = head
+    return jax.lax.optimization_barrier(sq[..., 0])
 
 
 @functools.partial(jax.jit, static_argnames=("config",))
@@ -206,34 +236,11 @@ def filtered_search(
 
         passes = filter_check(sel_ids) & valid  # in-memory predicate (filter store)
 
-        if mode == "unfiltered":
-            fetch_mask = valid
-            tunnel_mask = jnp.zeros_like(valid)
-            result_mask = valid
-            exact_mask = valid
-        elif mode == "post":
-            fetch_mask = valid  # predicate applied only after the read
-            tunnel_mask = jnp.zeros_like(valid)
-            result_mask = passes
-            exact_mask = valid  # exact distance computed for every fetch
-        elif mode == "early":
-            fetch_mask = valid  # still pays the full read ...
-            tunnel_mask = jnp.zeros_like(valid)
-            result_mask = passes
-            exact_mask = passes  # ... but skips exact distance on misses
-        elif mode == "pre_naive":
-            # non-matching nodes dropped outright — except the entry point,
-            # which any implementation must expand to start the search
-            is_entry = sel_ids == entry[:, None]
-            fetch_mask = passes | (is_entry & valid)
-            tunnel_mask = jnp.zeros_like(valid)
-            result_mask = passes
-            exact_mask = fetch_mask
-        else:  # gate
-            fetch_mask = passes
-            tunnel_mask = valid & (~passes)  # tunneled in memory
-            result_mask = passes
-            exact_mask = passes
+        # per-mode dispatch masks — shared with the fused kernel body and
+        # its reference twin, so the three paths cannot drift
+        fetch_mask, tunnel_mask, result_mask, exact_mask = ftk.mode_masks(
+            mode, sel_ids, valid, passes, entry[:, None]
+        )
 
         # ---- split fetches into cache hits and slow-tier reads
         if cached_mask is None:
@@ -291,6 +298,178 @@ def filtered_search(
         return jnp.any(fr.has_unexpanded(frontier)) & jnp.all(stats.n_hops < config.max_hops)
 
     pipelined = config.pipeline_depth > 1 and submit is not None and drain is not None
+
+    # ---- fused stage-A routing: one Pallas pass per round replaces the
+    # best_unexpanded / filter / mode-mask / insert op chain.  The round
+    # is rotated — each kernel call merges the previous round's candidates
+    # AND selects the next beam — so the loop carries the kernel's output
+    # (a FusedRound) instead of a bare frontier.  Results are bit-identical
+    # (the kernel replicates the stable-sort semantics of frontier.insert /
+    # best_unexpanded exactly); fall back silently when the adjacency
+    # width can't be probed or the shapes/backend are unsupported.
+    use_fused = config.use_fused_kernel
+    if use_fused:
+        try:
+            probe = (lambda i: submit(i)[1]) if pipelined else (lambda i: fetch(i)[1])
+            nbrs_s = jax.eval_shape(probe, jax.ShapeDtypeStruct((b, W), jnp.int32))
+            m_new = W * (int(nbrs_s.shape[-1]) + r_max)
+            use_fused = ftk.fused_supported(
+                l=L, width=W, m=m_new, c=codes.shape[1], k=lut.shape[2]
+            )
+        except Exception:
+            use_fused = False
+
+    if use_fused:
+        # Pallas kernel on TPU/GPU, its bit-identical jnp twin on CPU —
+        # see fused_round_for_backend for why interpret mode stays out of
+        # the serving loop
+        round_fn = ftk.fused_round_for_backend()
+
+        def fused_call(fids, fds, fexp, fpass, new_ids, new_codes, new_passes):
+            return round_fn(
+                fids, fds, fexp, fpass, new_ids, new_codes, new_passes,
+                lut, entry, mode=mode, width=W,
+            )
+
+        def fused_account(rnd, stats, vc):
+            """The non-kernel half of stage A: cache-tier split, visit
+            counters, stats — same arithmetic as the unfused stage_a."""
+            if cached_mask is None:
+                hit_mask = jnp.zeros_like(rnd.fetch_mask)
+            else:
+                hit_mask = cached_mask(rnd.sel_ids) & rnd.fetch_mask
+            slow_mask = rnd.fetch_mask & (~hit_mask)
+            if track_visits:
+                vc = vc.at[jnp.maximum(rnd.sel_ids, 0).ravel()].add(
+                    jnp.where(rnd.fetch_mask, 1.0, 0.0).ravel()
+                )
+            stats = SearchStats(
+                n_ios=stats.n_ios + jnp.sum(slow_mask, axis=1).astype(jnp.int32),
+                n_tunnels=stats.n_tunnels
+                + jnp.sum(rnd.tunnel_mask, axis=1).astype(jnp.int32),
+                n_exact=stats.n_exact
+                + jnp.sum(rnd.exact_mask, axis=1).astype(jnp.int32),
+                n_hops=stats.n_hops + 1,
+                n_cache_hits=stats.n_cache_hits
+                + jnp.sum(hit_mask, axis=1).astype(jnp.int32),
+            )
+            return stats, vc
+
+        def fused_new(sel_ids, tunnel_mask, visited, disk_nbrs):
+            """This round's candidate batch for the next kernel call —
+            identical to the head of the unfused ``expand``, plus the code
+            gather and filter verdicts the kernel consumes as payload."""
+            if mode == "gate":
+                tun_ids = jnp.where(tunnel_mask, sel_ids, fr.INVALID)
+                tun_nbrs = neighbor_store.lookup(tun_ids)  # (B, W, R_max)
+            else:
+                tun_nbrs = jnp.full((b, W, r_max), fr.INVALID)
+            new = jnp.concatenate(
+                [disk_nbrs.reshape(b, -1), tun_nbrs.reshape(b, -1)], axis=-1
+            )
+            fresh = (new >= 0) & (~is_visited(visited, jnp.maximum(new, 0)))
+            new = jnp.where(fresh, new, fr.INVALID)
+            visited = set_visited(visited, new)
+            new_codes = codes[jnp.maximum(new, 0)]
+            new_passes = filter_check(new)
+            return new, new_codes, new_passes, visited
+
+        def fused_cond(state):
+            rnd, stats = state[0], state[3]
+            return jnp.any(rnd.valid) & jnp.all(stats.n_hops < config.max_hops)
+
+        # pre-loop call (M=0): select round 0's beam from the entry-seeded
+        # frontier.  any(valid) ≡ has_unexpanded, so the loop condition is
+        # unchanged in substance.
+        rnd0 = fused_call(
+            frontier.ids, frontier.dists, frontier.expanded,
+            filter_check(frontier.ids),
+            jnp.zeros((b, 0), jnp.int32),
+            jnp.zeros((b, 0, codes.shape[1]), jnp.int32),
+            jnp.zeros((b, 0), bool),
+        )
+
+        if not pipelined:
+            def fused_body(state):
+                rnd, results, visited, stats, vc = state
+                stats, vc = fused_account(rnd, stats, vc)
+                vecs, disk_nbrs = fetch(rnd.fetch_ids)
+                results = retire(
+                    results, rnd.sel_ids, rnd.result_mask, vecs, jnp.bool_(True)
+                )
+                new, new_codes, new_passes, visited = fused_new(
+                    rnd.sel_ids, rnd.tunnel_mask, visited, disk_nbrs
+                )
+                rnd = fused_call(
+                    rnd.frontier_ids, rnd.frontier_dists, rnd.frontier_expanded,
+                    rnd.frontier_passes, new, new_codes, new_passes,
+                )
+                return rnd, results, visited, stats, vc
+
+            rnd, results, visited, stats, vc = jax.lax.while_loop(
+                fused_cond, fused_body, (rnd0, results, visited, stats0, vc0)
+            )
+            return SearchOutput(
+                ids=results.ids,
+                dists=results.dists,
+                stats=stats,
+                visit_counts=vc if track_visits else None,
+            )
+
+        # fused pipelined loop: same submit/drain rings and FIFO retirement
+        # as the unfused pipeline below — the kernel call sits between this
+        # round's submit and the oldest round's drain, preserving the host
+        # callback order exactly.
+        depth = config.pipeline_depth
+        p_ids0 = jnp.full((depth, b, W), fr.INVALID)
+        p_fids0 = jnp.full((depth, b, W), fr.INVALID)
+        p_rm0 = jnp.zeros((depth, b, W), dtype=bool)
+        p_tok0 = jnp.full((depth,), -1, jnp.int32)
+
+        def fused_pbody(state):
+            (rnd, results, visited, stats, vc,
+             p_ids, p_fids, p_rm, p_tok) = state
+            r = stats.n_hops[0]
+            stats, vc = fused_account(rnd, stats, vc)
+            token, disk_nbrs = submit(rnd.fetch_ids)
+            new, new_codes, new_passes, visited = fused_new(
+                rnd.sel_ids, rnd.tunnel_mask, visited, disk_nbrs
+            )
+            nrnd = fused_call(
+                rnd.frontier_ids, rnd.frontier_dists, rnd.frontier_expanded,
+                rnd.frontier_passes, new, new_codes, new_passes,
+            )
+            wp = jnp.mod(r, depth)
+            p_ids = p_ids.at[wp].set(rnd.sel_ids)
+            p_fids = p_fids.at[wp].set(rnd.fetch_ids)
+            p_rm = p_rm.at[wp].set(rnd.result_mask)
+            p_tok = p_tok.at[wp].set(token)
+            live = r >= depth - 1
+            dp = jnp.mod(r - (depth - 1), depth)
+            vecs = drain(p_tok[dp], p_fids[dp], live)
+            results = retire(results, p_ids[dp], p_rm[dp], vecs, live)
+            return (nrnd, results, visited, stats, vc,
+                    p_ids, p_fids, p_rm, p_tok)
+
+        (rnd, results, visited, stats, vc,
+         p_ids, p_fids, p_rm, p_tok) = jax.lax.while_loop(
+            fused_cond, fused_pbody,
+            (rnd0, results, visited, stats0, vc0,
+             p_ids0, p_fids0, p_rm0, p_tok0),
+        )
+        n_hops = stats.n_hops[0]
+        for j in range(depth - 1):
+            rr = n_hops - (depth - 1) + j
+            live = rr >= 0
+            dp = jnp.mod(rr, depth)
+            vecs = drain(p_tok[dp], p_fids[dp], live)
+            results = retire(results, p_ids[dp], p_rm[dp], vecs, live)
+        return SearchOutput(
+            ids=results.ids,
+            dists=results.dists,
+            stats=stats,
+            visit_counts=vc if track_visits else None,
+        )
 
     if not pipelined:
         # ---- synchronous loop: fetch blocks, this round retires itself

@@ -1,0 +1,33 @@
+"""Backend capability probe shared by every Pallas kernel wrapper.
+
+Compiled Pallas lowering exists for TPU (Mosaic) and GPU (Triton); on
+every other backend (CPU foremost) the kernels run in interpret mode —
+bit-accurate kernel-body semantics, evaluated as plain XLA ops.
+
+``interpret=None`` on a kernel entry point means "resolve from the
+backend": compiled whenever the backend supports it, interpret
+otherwise.  Passing an explicit bool is an opt-out in either direction
+(``interpret=True`` forces interpretation on TPU for debugging;
+``interpret=False`` on CPU will fail loudly rather than silently
+interpret).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+_COMPILED_BACKENDS = ("tpu", "gpu")
+
+
+@functools.cache
+def supports_compiled_pallas(backend: str | None = None) -> bool:
+    """Does this backend have a compiled (non-interpret) Pallas lowering?"""
+    return (backend or jax.default_backend()) in _COMPILED_BACKENDS
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Map the tri-state ``interpret`` kwarg to a concrete mode."""
+    if interpret is None:
+        return not supports_compiled_pallas()
+    return interpret

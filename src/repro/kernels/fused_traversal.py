@@ -1,0 +1,404 @@
+"""Pallas TPU kernel: one fused stage-A traversal round.
+
+With SSD reads overlapped (pipelined disk search) the in-memory traversal
+is the throughput wall: each round runs PQ-lookup, filter masking,
+candidate selection, and frontier top-k merge as *separate* ops with HBM
+round-trips between them (NDSEARCH's argument — traversal compute, not
+just I/O, bounds graph-ANNS throughput).  This kernel fuses one whole
+round into a single VMEM-resident pass per query:
+
+  1. **ADC PQ-lookup** over the round's gathered candidate codes — the
+     same one-hot × LUT contraction as ``pq_lookup`` (MXU-friendly, and
+     bitwise-identical to the unfused ``take_along_axis(...).sum(-1)``
+     reference on every backend we pin).
+  2. **Kill masking** — invalid ids and within-concat duplicates go to
+     (+INF, -1), replicating ``frontier.insert``'s ``_dedup_mask``
+     (earlier slot wins) exactly.
+  3. **Frontier merge** — a bitonic sorting network over the padded
+     [old frontier ‖ new candidates] keyed on ``(dist, seq)``; the
+     position tiebreak makes the (unstable) network reproduce a *stable*
+     ascending sort bit-for-bit, so the merged frontier equals
+     ``jnp.argsort``'s.  ``expanded`` / filter-pass flags ride along as
+     payload lanes through every compare-exchange.
+  4. **Beam selection** — rank-by-pairwise-comparison over the merged
+     frontier picks the ``width`` best unexpanded entries (ties by slot,
+     matching ``frontier.best_unexpanded``'s stable argsort) and marks
+     them expanded.
+  5. **Filter / tunnel masks** — the per-mode fetch/tunnel/result/exact
+     mask logic (``mode_masks`` below — the *same function* the unfused
+     loop calls) runs on the selected beam inside the kernel.
+
+Filter-store lookups stay outside (they are per-query closures over
+engine state); their boolean verdicts enter once per candidate and ride
+the sort as payload, so the kernel never re-evaluates a predicate.
+
+The round is *rotated* relative to the unfused loop: one call merges the
+previous round's candidates and selects the next beam, which is exactly
+``expand`` ∘ ``stage_a`` of ``core/search.py``.  ``filtered_search``
+carries the selection in loop state; results are bit-identical (pinned
+by the fused-vs-unfused parity lattice in ``tests/test_fused_traversal``).
+
+Everything is padded to powers of two with (+INF, -1, seq>=real) pad
+entries, which sort strictly after every real slot — M (candidate count)
+and L (frontier length) need not be powers of two.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.backend import resolve_interpret
+
+# numpy scalars, not jnp: the kernel body references them, and a traced
+# jnp scalar would be captured as a pallas_call constant (a trace error)
+INF = np.float32(3.4e38)
+INVALID = np.int32(-1)
+
+# ADC one-hot workspace tile: bounds VMEM at C * _ADC_TILE * K * 4 bytes
+# (4 MB at C=32, K=256) regardless of the candidate count M.
+_ADC_TILE = 128
+
+# conservative ceilings for the silent fallback: the padded sort width
+# (VPU lanes per compare-exchange) and the one-hot workspace bytes
+_MAX_SORT = 4096
+_MAX_ADC_BYTES = 8 * 1024 * 1024
+
+
+def mode_masks(mode: str, sel_ids, valid, passes, entry_ids):
+    """Per-mode dispatch masks for a selected beam — the single source of
+    truth shared by the unfused ``stage_a``, this kernel's body, and the
+    jnp reference twin (``ref.fused_traversal_round_ref``).
+
+    All arguments broadcast elementwise against ``sel_ids`` (boolean
+    ``valid``/``passes``; ``entry_ids`` is the per-query entry id).
+    Returns ``(fetch_mask, tunnel_mask, result_mask, exact_mask)``.
+    """
+    no = jnp.zeros_like(valid)
+    if mode == "unfiltered":
+        return valid, no, valid, valid
+    if mode == "post":
+        return valid, no, passes, valid
+    if mode == "early":
+        return valid, no, passes, passes
+    if mode == "pre_naive":
+        is_entry = sel_ids == entry_ids
+        fetch = passes | (is_entry & valid)
+        return fetch, no, passes, fetch
+    # gate
+    return passes, valid & (~passes), passes, passes
+
+
+class FusedRound(NamedTuple):
+    """One kernel call's outputs: the merged+marked frontier and the next
+    beam with its per-mode masks (shapes ``(B, L)`` / ``(B, W)``)."""
+
+    frontier_ids: jax.Array
+    frontier_dists: jax.Array
+    frontier_expanded: jax.Array  # bool
+    frontier_passes: jax.Array  # bool — filter verdict payload per slot
+    sel_ids: jax.Array
+    valid: jax.Array  # bool
+    fetch_ids: jax.Array  # sel_ids where fetch_mask, else -1
+    fetch_mask: jax.Array  # bool
+    tunnel_mask: jax.Array  # bool
+    result_mask: jax.Array  # bool
+    exact_mask: jax.Array  # bool
+
+
+def fused_supported(*, l: int, width: int, m: int, c: int, k: int,
+                    backend: str | None = None) -> bool:
+    """Can the fused kernel serve these shapes on this backend?
+
+    Callers fall back to the unfused loop (bit-identical results, just
+    more HBM round-trips) when this returns False — the flag is a perf
+    knob, never a correctness one.
+    """
+    backend = backend or jax.default_backend()
+    if backend not in ("cpu", "gpu", "tpu"):
+        return False
+    if width < 1 or l < 1 or m < 0:
+        return False
+    total = l + m
+    pad = 1 << (total - 1).bit_length()
+    if pad > _MAX_SORT:
+        return False
+    if c * _ADC_TILE * k * 4 > _MAX_ADC_BYTES:
+        return False
+    return True
+
+
+def _adc(lut, codes, ids):
+    """In-kernel ADC: dist[m] = Σ_c lut[c, codes[m, c]]; invalid -> +INF.
+
+    Tiled over M so the one-hot workspace stays bounded; each tile is the
+    same batched-over-C contraction as ``pq_lookup._adc_kernel`` (whose
+    ``jnp.sum`` over chunks is bitwise-equal to the unfused
+    ``take_along_axis(...).sum(-1)`` — pinned in tests).
+    """
+    c, k = lut.shape
+    m = codes.shape[0]
+    parts = []
+    for t0 in range(0, m, _ADC_TILE):
+        tile = codes[t0 : min(t0 + _ADC_TILE, m)]  # (Mt, C)
+        iota_k = jax.lax.broadcasted_iota(jnp.int32, (c, tile.shape[0], k), 2)
+        onehot = (tile.T[:, :, None] == iota_k).astype(lut.dtype)  # (C, Mt, K)
+        per_chunk = jax.lax.dot_general(
+            onehot, lut,
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),  # batch C, contract K
+            preferred_element_type=jnp.float32,
+        )  # (C, Mt)
+        parts.append(jnp.sum(per_chunk, axis=0))
+    d = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    return jnp.where(ids >= 0, d, INF)
+
+
+def _bitonic_merge(dists, ids, exp, pas, total: int):
+    """Stable ascending sort of (dists, payload) via a bitonic network.
+
+    ``total`` real entries are padded to a power of two with
+    (+INF, -1, expanded, fail) lanes whose seq numbers sit *after* every
+    real slot, so pads sort strictly last among INF ties.  The seq lane
+    makes the network's total order equal a stable sort by distance.
+    """
+    p = 1 << (total - 1).bit_length()
+    if p != total:
+        pad = p - total
+        dists = jnp.concatenate([dists, jnp.full((pad,), INF)])
+        ids = jnp.concatenate([ids, jnp.full((pad,), INVALID)])
+        exp = jnp.concatenate([exp, jnp.ones((pad,), exp.dtype)])
+        pas = jnp.concatenate([pas, jnp.zeros((pad,), pas.dtype)])
+    seq = jax.lax.iota(jnp.int32, p)
+    idx = jax.lax.iota(jnp.int32, p)
+    d, i, e, f, s = dists, ids, exp, pas, seq
+    logp = p.bit_length() - 1
+    for stage in range(logp):
+        block = 1 << (stage + 1)
+        for sub in reversed(range(stage + 1)):
+            j = 1 << sub
+            partner = idx ^ j
+            pd, pi, pe, pf, ps = d[partner], i[partner], e[partner], f[partner], s[partner]
+            # strict lexicographic (dist, seq) — seqs are unique, so this
+            # is a total order and == / >= cases never arise
+            lt = (d < pd) | ((d == pd) & (s < ps))
+            is_lower = (idx & j) == 0
+            ascending = (idx & block) == 0
+            keep = jnp.where(ascending,
+                             jnp.where(is_lower, lt, ~lt),
+                             jnp.where(is_lower, ~lt, lt))
+            d = jnp.where(keep, d, pd)
+            i = jnp.where(keep, i, pi)
+            e = jnp.where(keep, e, pe)
+            f = jnp.where(keep, f, pf)
+            s = jnp.where(keep, s, ps)
+    return d, i, e, f
+
+
+def _fused_kernel(
+    fid_ref, fd_ref, fexp_ref, fpass_ref,
+    nid_ref, ncodes_ref, npass_ref, lut_ref, entry_ref,
+    ofid_ref, ofd_ref, ofexp_ref, ofpass_ref,
+    osel_ref, ovalid_ref, ofids_ref, ofetch_ref, otun_ref, ores_ref, oexact_ref,
+    *, mode: str, l: int, m: int, width: int,
+):
+    """One query's round: merge M candidates into the L-frontier, select
+    the next W-beam, emit its per-mode masks.  Bool lanes travel as i32."""
+    fid = fid_ref[0]
+    fd = fd_ref[0]
+    fexp = fexp_ref[0]
+    fpass = fpass_ref[0]
+
+    if m:
+        nid = nid_ref[0]
+        nd = _adc(lut_ref[0], ncodes_ref[0], nid)
+        ids = jnp.concatenate([fid, nid])
+        dists = jnp.concatenate([fd, nd])
+        exp = jnp.concatenate([fexp, jnp.zeros((m,), fexp.dtype)])
+        pas = jnp.concatenate([fpass, npass_ref[0]])
+    else:  # round-0 call: nothing to merge, just select from the frontier
+        ids, dists, exp, pas = fid, fd, fexp, fpass
+
+    total = l + m
+    # kill mask, exactly as frontier.insert: a slot dies if it duplicates
+    # an EARLIER slot holding the same (non-negative) id, or its own id is
+    # invalid; dead slots become (+INF, -1)
+    pos = jax.lax.iota(jnp.int32, total)
+    earlier = pos[None, :] < pos[:, None]  # [a, b] — slot b precedes a
+    same = ids[None, :] == ids[:, None]
+    dup = jnp.any(same & earlier & (ids[None, :] >= 0), axis=-1)
+    dists = jnp.where(dup | (ids < 0), INF, dists)
+    ids = jnp.where(dists >= INF, INVALID, ids)
+
+    sd, sids, sexp, spas = _bitonic_merge(dists, ids, exp, pas, total)
+    mf_d, mf_ids, mf_exp, mf_pas = sd[:l], sids[:l], sexp[:l], spas[:l]
+
+    # beam selection == frontier.best_unexpanded: stable argsort of the
+    # masked key, realized as rank-by-pairwise-comparison (ties by slot)
+    selkey = jnp.where((mf_exp == 0) & (mf_ids >= 0), mf_d, INF)
+    lpos = jax.lax.iota(jnp.int32, l)
+    prec = (selkey[None, :] < selkey[:, None]) | (
+        (selkey[None, :] == selkey[:, None]) & (lpos[None, :] < lpos[:, None])
+    )
+    rank = jnp.sum(prec.astype(jnp.int32), axis=-1)  # (L,)
+    selected = (rank < width) & (selkey < INF)
+    mf_exp = mf_exp | selected.astype(mf_exp.dtype)
+
+    # scatter the selected slots into beam order (rank w -> lane w)
+    wpos = jax.lax.iota(jnp.int32, width)
+    oh = (rank[None, :] == wpos[:, None]) & selected[None, :]  # (W, L)
+    valid = jnp.any(oh, axis=-1)
+    sel_ids = jnp.sum(jnp.where(oh, mf_ids[None, :], 0), axis=-1)
+    sel_ids = jnp.where(valid, sel_ids, INVALID)
+    passes = jnp.any(oh & (mf_pas[None, :] != 0), axis=-1) & valid
+
+    fetch, tun, res, exact = mode_masks(mode, sel_ids, valid, passes,
+                                        entry_ref[0, 0])
+
+    ofid_ref[0] = mf_ids
+    ofd_ref[0] = mf_d
+    ofexp_ref[0] = mf_exp
+    ofpass_ref[0] = mf_pas
+    osel_ref[0] = sel_ids
+    ovalid_ref[0] = valid.astype(jnp.int32)
+    ofids_ref[0] = jnp.where(fetch, sel_ids, INVALID)
+    ofetch_ref[0] = fetch.astype(jnp.int32)
+    otun_ref[0] = tun.astype(jnp.int32)
+    ores_ref[0] = res.astype(jnp.int32)
+    oexact_ref[0] = exact.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "width", "interpret")
+)
+def fused_traversal_round(
+    frontier_ids: jax.Array,  # (B, L) int32
+    frontier_dists: jax.Array,  # (B, L) float32
+    frontier_expanded: jax.Array,  # (B, L) bool
+    frontier_passes: jax.Array,  # (B, L) bool — filter verdicts per slot
+    new_ids: jax.Array,  # (B, M) int32 — already visited-masked (-1 = dead)
+    new_codes: jax.Array,  # (B, M, C) int32 — gathered PQ codes
+    new_passes: jax.Array,  # (B, M) bool — filter verdicts for new ids
+    lut: jax.Array,  # (B, C, K) float32 per-query ADC tables
+    entry: jax.Array,  # (B,) int32 per-query entry point (pre_naive mode)
+    *,
+    mode: str,
+    width: int,
+    interpret: bool | None = None,
+) -> FusedRound:
+    """Batched fused round; see module docstring.  Grid is one program
+    per query; everything for a query lives in VMEM for the whole pass."""
+    interpret = resolve_interpret(interpret)
+    b, l = frontier_ids.shape
+    m = new_ids.shape[1]
+    c, k = lut.shape[1], lut.shape[2]
+    w = width
+
+    kern = functools.partial(_fused_kernel, mode=mode, l=l, m=m, width=w)
+    row = lambda i: (i, 0)
+    row3 = lambda i: (i, 0, 0)
+    out = pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, l), row),  # frontier ids
+            pl.BlockSpec((1, l), row),  # frontier dists
+            pl.BlockSpec((1, l), row),  # frontier expanded
+            pl.BlockSpec((1, l), row),  # frontier passes
+            pl.BlockSpec((1, max(m, 1)), row),  # new ids
+            pl.BlockSpec((1, max(m, 1), c), row3),  # new codes
+            pl.BlockSpec((1, max(m, 1)), row),  # new passes
+            pl.BlockSpec((1, c, k), row3),  # lut
+            pl.BlockSpec((1, 1), row),  # entry
+        ],
+        out_specs=[
+            pl.BlockSpec((1, l), row),
+            pl.BlockSpec((1, l), row),
+            pl.BlockSpec((1, l), row),
+            pl.BlockSpec((1, l), row),
+            pl.BlockSpec((1, w), row),
+            pl.BlockSpec((1, w), row),
+            pl.BlockSpec((1, w), row),
+            pl.BlockSpec((1, w), row),
+            pl.BlockSpec((1, w), row),
+            pl.BlockSpec((1, w), row),
+            pl.BlockSpec((1, w), row),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l), jnp.int32),  # frontier ids
+            jax.ShapeDtypeStruct((b, l), jnp.float32),  # frontier dists
+            jax.ShapeDtypeStruct((b, l), jnp.int32),  # frontier expanded
+            jax.ShapeDtypeStruct((b, l), jnp.int32),  # frontier passes
+            jax.ShapeDtypeStruct((b, w), jnp.int32),  # sel_ids
+            jax.ShapeDtypeStruct((b, w), jnp.int32),  # valid
+            jax.ShapeDtypeStruct((b, w), jnp.int32),  # fetch_ids
+            jax.ShapeDtypeStruct((b, w), jnp.int32),  # fetch_mask
+            jax.ShapeDtypeStruct((b, w), jnp.int32),  # tunnel_mask
+            jax.ShapeDtypeStruct((b, w), jnp.int32),  # result_mask
+            jax.ShapeDtypeStruct((b, w), jnp.int32),  # exact_mask
+        ],
+        interpret=interpret,
+    )(
+        frontier_ids.astype(jnp.int32),
+        frontier_dists.astype(jnp.float32),
+        frontier_expanded.astype(jnp.int32),
+        frontier_passes.astype(jnp.int32),
+        _at_least_one(new_ids.astype(jnp.int32), INVALID),
+        _at_least_one_3d(new_codes.astype(jnp.int32)),
+        _at_least_one(new_passes.astype(jnp.int32), jnp.int32(0)),
+        lut.astype(jnp.float32),
+        entry.astype(jnp.int32)[:, None],
+    )
+    (ofid, ofd, ofexp, ofpass, osel, ovalid, ofids,
+     ofetch, otun, ores, oexact) = out
+    return FusedRound(
+        frontier_ids=ofid,
+        frontier_dists=ofd,
+        frontier_expanded=ofexp != 0,
+        frontier_passes=ofpass != 0,
+        sel_ids=osel,
+        valid=ovalid != 0,
+        fetch_ids=ofids,
+        fetch_mask=ofetch != 0,
+        tunnel_mask=otun != 0,
+        result_mask=ores != 0,
+        exact_mask=oexact != 0,
+    )
+
+
+def fused_round_for_backend():
+    """The search loop's fused-round callable for this process's backend.
+
+    The Pallas kernel wherever a compiled lowering exists (TPU/GPU); its
+    bit-identical jnp twin (``ref.fused_traversal_round_ref``) elsewhere.
+    Interpret-mode Pallas inside ``jax.lax.while_loop`` makes CPU XLA
+    compile times pathological (minutes per mode, unbounded for some mask
+    configurations) — it is a kernel-debugging tool, not a serving path.
+    The twin is pinned bitwise to the kernel by the parity lattice in
+    ``tests/test_fused_traversal.py``, so routing through it preserves
+    the fused loop's bit-identity contract on every backend.
+    """
+    from repro.kernels.backend import supports_compiled_pallas
+
+    if supports_compiled_pallas():
+        return fused_traversal_round
+    from repro.kernels import ref
+
+    return ref.fused_traversal_round_ref
+
+
+def _at_least_one(x, fill):
+    """Pallas blocks need extent >= 1: widen an (B, 0) input to (B, 1)
+    dead lanes (the kernel's static ``m`` still reflects the real M)."""
+    if x.shape[1] == 0:
+        return jnp.full((x.shape[0], 1), fill, x.dtype)
+    return x
+
+
+def _at_least_one_3d(x):
+    if x.shape[1] == 0:
+        return jnp.zeros((x.shape[0], 1, x.shape[2]), x.dtype)
+    return x

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _l2_kernel(q_ref, x_ref, out_ref):
     """q_ref: (1, D) f32; x_ref: (1, W, D) f32; out_ref: (1, W) f32."""
@@ -33,8 +35,9 @@ def l2_dist(
     queries: jax.Array,  # (B, D) float32
     rows: jax.Array,  # (B, W, D) float32
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     b, d = queries.shape
     bb, w, dd = rows.shape
     assert bb == b and dd == d

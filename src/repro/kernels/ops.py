@@ -1,22 +1,24 @@
 """Jitted public wrappers over the Pallas kernels.
 
-``interpret`` mode is selected automatically: compiled on TPU, Python
-interpretation (bit-accurate kernel-body semantics) everywhere else.
+``interpret`` mode is selected automatically (``kernels.backend``):
+compiled Pallas wherever a compiled lowering exists (TPU via Mosaic, GPU
+via Triton), Python interpretation — bit-accurate kernel-body semantics —
+only where it doesn't (CPU).  Interpret mode is an explicit opt-out via
+the ``interpret=`` kwarg on the underlying modules, never a silent
+default on an accelerator.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-
+from repro.kernels import fused_traversal as _ft
 from repro.kernels import l2_dist as _l2
 from repro.kernels import pq_lookup as _pq
 from repro.kernels import topk_merge as _tk
+from repro.kernels.backend import supports_compiled_pallas
 
 
-@functools.cache
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    """Resolved interpret mode for this process's default backend."""
+    return not supports_compiled_pallas()
 
 
 def pq_lookup_gathered(lut, codes, *, block_m: int = 128):
@@ -37,3 +39,10 @@ def l2_dist(queries, rows):
 
 def topk_merge(dists, ids, k: int):
     return _tk.topk_merge(dists, ids, k, interpret=_interpret())
+
+
+def fused_traversal_round(*args, mode: str, width: int):
+    """One fused stage-A round (see ``kernels.fused_traversal``)."""
+    return _ft.fused_traversal_round(
+        *args, mode=mode, width=width, interpret=_interpret()
+    )

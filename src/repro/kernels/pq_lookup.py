@@ -16,6 +16,12 @@ Two entry points share the kernel body:
   * ``pq_scan``            — shared code matrix (N, C) scanned by every
     query (brute-force ADC / re-ranking sweeps).
 
+Rows padded up to the block size are forced to **+INF inside the
+kernel** (they used to reuse whatever codes the padding held and emit
+finite distances — harmless for these sliced entry points, but a trap
+for any fused consumer selecting over the raw block).  ``keep_padding``
+returns the full padded array so tests can pin the sentinel lanes.
+
 Block shapes: M is tiled (default 128 rows per program) so the one-hot
 workspace (C·Mt·K f32 = 32·128·256·4 B = 4 MB) fits comfortably in VMEM
 alongside the LUT tile (C·K·4 B = 32 KB); all tile trailing dims are
@@ -27,18 +33,18 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
 
-def _adc_kernel(lut_ref, codes_ref, out_ref):
-    """One (query b, row-tile m) program.
+# numpy scalar, not jnp: the kernel bodies reference it, and a traced jnp
+# scalar would be captured as a pallas_call constant (a trace error)
+_INF = np.float32(3.4e38)
 
-    lut_ref:   (1, C, K) f32 VMEM
-    codes_ref: (1, Mt, C) int32 VMEM
-    out_ref:   (1, Mt) f32 VMEM
-    """
-    lut = lut_ref[0]  # (C, K)
-    codes = codes_ref[0]  # (Mt, C)
+
+def _adc_body(lut, codes):
+    """(C, K) lut × (Mt, C) codes -> (Mt,) summed ADC distances."""
     c, k = lut.shape
     # one-hot contraction: (C, Mt, K) ⊗ (C, K) -> (C, Mt) -> sum over C
     iota_k = jax.lax.broadcasted_iota(jnp.int32, (c, codes.shape[0], k), 2)
@@ -49,18 +55,39 @@ def _adc_kernel(lut_ref, codes_ref, out_ref):
         dimension_numbers=(((2,), (1,)), ((0,), (0,))),  # batch C, contract K
         preferred_element_type=jnp.float32,
     )  # (C, Mt)
-    out_ref[0] = jnp.sum(per_chunk, axis=0)
+    return jnp.sum(per_chunk, axis=0)
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def _real_rows(block: int, rows: int):
+    """Mask of genuine (non-padding) rows within this program's tile."""
+    row0 = pl.program_id(1) * block
+    return row0 + jax.lax.iota(jnp.int32, block) < rows
+
+
+def _adc_kernel(lut_ref, codes_ref, out_ref, *, block_m: int, m: int):
+    """One (query b, row-tile m) program.
+
+    lut_ref:   (1, C, K) f32 VMEM
+    codes_ref: (1, Mt, C) int32 VMEM
+    out_ref:   (1, Mt) f32 VMEM — padded rows (>= m) emit +INF
+    """
+    d = _adc_body(lut_ref[0], codes_ref[0])
+    out_ref[0] = jnp.where(_real_rows(block_m, m), d, _INF)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "interpret", "keep_padding")
+)
 def pq_lookup_gathered(
     lut: jax.Array,  # (B, C, K) float32
     codes: jax.Array,  # (B, M, C) int32
     *,
     block_m: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
+    keep_padding: bool = False,
 ) -> jax.Array:
     """Per-query gathered ADC: out[b, m] = sum_c lut[b, c, codes[b, m, c]]."""
+    interpret = resolve_interpret(interpret)
     b, c, k = lut.shape
     bb, m, cc = codes.shape
     assert bb == b and cc == c, (lut.shape, codes.shape)
@@ -70,7 +97,7 @@ def pq_lookup_gathered(
         codes = jnp.pad(codes, ((0, 0), (0, pad_m), (0, 0)))
     mp = m + pad_m
     out = pl.pallas_call(
-        _adc_kernel,
+        functools.partial(_adc_kernel, block_m=block_m, m=m),
         grid=(b, mp // block_m),
         in_specs=[
             pl.BlockSpec((1, c, k), lambda i, j: (i, 0, 0)),
@@ -80,45 +107,41 @@ def pq_lookup_gathered(
         out_shape=jax.ShapeDtypeStruct((b, mp), jnp.float32),
         interpret=interpret,
     )(lut.astype(jnp.float32), codes.astype(jnp.int32))
-    return out[:, :m]
+    return out if keep_padding else out[:, :m]
 
 
-def _adc_scan_kernel(lut_ref, codes_ref, out_ref):
+def _adc_scan_kernel(lut_ref, codes_ref, out_ref, *, block_n: int, n: int):
     """One (query b, node-tile n) program over a shared code matrix.
 
     lut_ref:   (1, C, K) f32; codes_ref: (Nt, C) int32; out_ref: (1, Nt) f32
     """
-    lut = lut_ref[0]
-    codes = codes_ref[...]
-    c, k = lut.shape
-    iota_k = jax.lax.broadcasted_iota(jnp.int32, (c, codes.shape[0], k), 2)
-    onehot = (codes.T[:, :, None] == iota_k).astype(lut.dtype)
-    per_chunk = jax.lax.dot_general(
-        onehot, lut, dimension_numbers=(((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32,
-    )
-    out_ref[0] = jnp.sum(per_chunk, axis=0)
+    d = _adc_body(lut_ref[0], codes_ref[...])
+    out_ref[0] = jnp.where(_real_rows(block_n, n), d, _INF)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "interpret", "keep_padding")
+)
 def pq_scan(
     lut: jax.Array,  # (B, C, K) float32
     codes: jax.Array,  # (N, C) int32 — shared across queries
     *,
     block_n: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
+    keep_padding: bool = False,
 ) -> jax.Array:
     """Brute-force ADC sweep: out[b, n] = sum_c lut[b, c, codes[n, c]]."""
+    interpret = resolve_interpret(interpret)
     b, c, k = lut.shape
     n, cc = codes.shape
     assert cc == c
     block_n = min(block_n, n)
     pad_n = (-n) % block_n
     if pad_n:
-        codes = jnp.pad(codes, ((0, 0), (0, 0)) if False else ((0, pad_n), (0, 0)))
+        codes = jnp.pad(codes, ((0, pad_n), (0, 0)))
     np_ = n + pad_n
     out = pl.pallas_call(
-        _adc_scan_kernel,
+        functools.partial(_adc_scan_kernel, block_n=block_n, n=n),
         grid=(b, np_ // block_n),
         in_specs=[
             pl.BlockSpec((1, c, k), lambda i, j: (i, 0, 0)),
@@ -128,4 +151,4 @@ def pq_scan(
         out_shape=jax.ShapeDtypeStruct((b, np_), jnp.float32),
         interpret=interpret,
     )(lut.astype(jnp.float32), codes.astype(jnp.int32))
-    return out[:, :n]
+    return out if keep_padding else out[:, :n]

@@ -4,12 +4,21 @@ Frontier upkeep ("Other: list mgmt", 26–34% of per-query time in paper
 Table 5) is a sort-and-truncate over the merged candidate list.  A full
 ``argsort`` is wasteful when only the best L survive; this kernel runs a
 static **bitonic sorting network** over a VMEM tile of (dist, id) pairs
-and emits the first L — ids ride along through every compare-exchange, so
-the result is a consistent (dist, id) ordering.
+and emits the first L — ids ride along through every compare-exchange.
+
+Ordering is **deterministic on the lexicographic (dist, id) key**: ties
+in distance break by ascending id, in both this kernel and the
+``ref.topk_merge_ref`` oracle.  A bitonic network is not a stable sort,
+so breaking ties by network position (the old behavior) let kernel and
+reference disagree about which id survives at rank k whenever two
+candidates shared a distance; the id tiebreak makes the key total and
+the result unique.  Padding rows (to the power-of-two network width)
+carry an id *above* every real id, so they sort after genuine
++INF-distance entries and come back as (-1, +INF).
 
 The network is O(M log² M) compare-exchanges of full vectors, entirely on
 the VPU with no data-dependent control flow — exactly the shape TPUs
-like.  M is padded to a power of two with +INF keys.
+like.
 """
 from __future__ import annotations
 
@@ -19,7 +28,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 _INF = jnp.float32(3.4e38)
+# pad id: sorts after every real id at equal (+INF) distance; mapped back
+# to -1 on output.  Real ids are node indices, far below int32 max.
+_PAD_ID = jnp.int32(2**31 - 1)
 
 
 def _bitonic_kernel(d_ref, i_ref, od_ref, oi_ref, *, m: int, l: int):
@@ -34,11 +48,15 @@ def _bitonic_kernel(d_ref, i_ref, od_ref, oi_ref, *, m: int, l: int):
             partner = idx ^ j
             pd = d[partner]
             pi = ids[partner]
+            # strict lexicographic (dist, id) "self < partner"; ids are
+            # unique per batch row in the intended use, but even with
+            # duplicates the <= on equal keys keeps the exchange stable
+            lt = (d < pd) | ((d == pd) & (ids <= pi))
             is_lower = (idx & j) == 0
             ascending = (idx & block) == 0
             keep_self = jnp.where(
-                ascending, jnp.where(is_lower, d <= pd, d >= pd),
-                jnp.where(is_lower, d >= pd, d <= pd),
+                ascending, jnp.where(is_lower, lt, ~lt),
+                jnp.where(is_lower, ~lt, lt),
             )
             d = jnp.where(keep_self, d, pd)
             ids = jnp.where(keep_self, ids, pi)
@@ -52,14 +70,15 @@ def topk_merge(
     ids: jax.Array,  # (B, M) int32
     k: int,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
-    """Sorted top-k by ascending distance. Returns (dists (B,k), ids (B,k))."""
+    """Sorted top-k by ascending (distance, id). Returns (dists (B,k), ids (B,k))."""
+    interpret = resolve_interpret(interpret)
     b, m = dists.shape
     mp = 1 << (m - 1).bit_length()  # next power of two
     if mp != m:
         dists = jnp.pad(dists, ((0, 0), (0, mp - m)), constant_values=_INF)
-        ids = jnp.pad(ids, ((0, 0), (0, mp - m)), constant_values=-1)
+        ids = jnp.pad(ids, ((0, 0), (0, mp - m)), constant_values=_PAD_ID)
     k = min(k, mp)
     od, oi = pl.pallas_call(
         functools.partial(_bitonic_kernel, m=mp, l=k),
@@ -78,4 +97,4 @@ def topk_merge(
         ],
         interpret=interpret,
     )(dists.astype(jnp.float32), ids.astype(jnp.int32))
-    return od, oi
+    return od, jnp.where(oi == _PAD_ID, jnp.int32(-1), oi)

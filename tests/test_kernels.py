@@ -45,6 +45,51 @@ def test_l2_dist(b, w, d, dtype):
     np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
 
 
+def test_pq_lookup_padding_is_inert():
+    """Rows padded up to the block boundary emit +INF inside the kernel —
+    a fused consumer selecting over the raw block can never pick one.
+    M=300 with block_m=128 leaves 84 padded lanes."""
+    b, m, c, k = 2, 300, 4, 16
+    lut = jnp.asarray(RNG.normal(size=(b, c, k)), jnp.float32)
+    codes = jnp.asarray(RNG.integers(0, k, size=(b, m, c)), jnp.int32)
+    from repro.kernels import pq_lookup as pq
+
+    full = pq.pq_lookup_gathered(lut, codes, keep_padding=True)
+    assert full.shape == (b, 384)  # padded to the 128-row block
+    assert np.all(np.asarray(full[:, m:]) == np.float32(3.4e38))
+    np.testing.assert_allclose(full[:, :m], ref.pq_lookup_gathered_ref(lut, codes),
+                               rtol=1e-5, atol=1e-5)
+    scan = pq.pq_scan(lut, jnp.asarray(RNG.integers(0, k, size=(300, c)),
+                                       jnp.int32), block_n=128,
+                      keep_padding=True)
+    assert scan.shape == (b, 384)
+    assert np.all(np.asarray(scan[:, 300:]) == np.float32(3.4e38))
+
+
+def test_topk_merge_duplicate_distances_deterministic():
+    """Distance ties break by ascending id — kernel and oracle must agree
+    exactly (ids included), even on a batch that is mostly ties."""
+    b, m, k = 3, 64, 16
+    d = jnp.asarray(RNG.integers(0, 4, size=(b, m)), jnp.float32)  # heavy ties
+    i = jnp.asarray(RNG.permutation(10 * m)[: b * m].reshape(b, m), jnp.int32)
+    gd, gi = ops.topk_merge(d, i, k)
+    wd, wi = ref.topk_merge_ref(d, i, k)
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_interpret_mode_resolution():
+    """Kernel wrappers run compiled wherever a lowering exists; interpret
+    is the resolved fallback (CPU), never a silent default elsewhere."""
+    from repro.kernels.backend import resolve_interpret, supports_compiled_pallas
+
+    assert ops._interpret() == (not supports_compiled_pallas())
+    assert resolve_interpret(None) == ops._interpret()
+    assert supports_compiled_pallas("tpu") and supports_compiled_pallas("gpu")
+    assert not supports_compiled_pallas("cpu")
+    assert resolve_interpret(False) is False  # explicit opt-out wins
+
+
 @pytest.mark.parametrize("m,k", [(8, 4), (50, 10), (128, 128), (100, 200)])
 def test_topk_merge(m, k):
     b = 3
