@@ -28,7 +28,32 @@ from repro.data import (
     uniform_labels,
 )
 
-CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench_cache")
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+CACHE_DIR = os.path.join(REPO_ROOT, "results", "bench_cache")
+
+# version stamp for every benchmark JSON artifact (BENCH_*.json) — bump
+# on any field rename/removal so nightly consumers can fail loudly
+# instead of silently reading shifted columns
+BENCH_SCHEMA_VERSION = 1
+
+
+def root_artifact(name: str) -> str:
+    """Anchor an artifact filename at the repo root (stable across CWDs)."""
+    return name if os.path.isabs(name) else os.path.join(REPO_ROOT, name)
+
+
+def write_bench_json(path: str, benchmark: str, rows, extra: dict | None = None):
+    """Write the standard benchmark JSON artifact (schema-versioned)."""
+    import json
+
+    doc = {"schema_version": BENCH_SCHEMA_VERSION, "benchmark": benchmark,
+           "rows": rows}
+    if extra:
+        doc.update(extra)
+    path = root_artifact(path)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, default=float)
+    return path
 
 # default benchmark scale
 N, DIM, NQ, N_CLASSES = 20_000, 32, 48, 10
@@ -46,9 +71,9 @@ def cached_graph(n: int = N, dim: int = DIM, seed: int = 0, degree: int = DEGREE
         return corpus, VamanaGraph(
             neighbors=jnp.asarray(z["neighbors"]), medoid=jnp.int32(z["medoid"])
         )
-    t0 = time.time()
+    t0 = time.perf_counter()
     g = build_vamana(corpus, degree=degree, build_l=build_l, seed=seed)
-    print(f"# built graph n={n} in {time.time()-t0:.0f}s", file=sys.stderr)
+    print(f"# built graph n={n} in {time.perf_counter()-t0:.0f}s", file=sys.stderr)
     np.savez(path, neighbors=np.asarray(g.neighbors), medoid=int(g.medoid))
     return corpus, g
 

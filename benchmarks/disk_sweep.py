@@ -55,13 +55,23 @@ before every timed run — and emits wall-clock-per-query columns:
                               at least one read (overlapped_rounds > 0)
   pipe_speedup_d<p>           derived = wall(depth 1) / wall(depth p)
 
+With ``--obs-json PATH`` the process telemetry registry + tracer are
+enabled for the sweep and dumped to PATH, and two more contract rows
+appear (the nightly ``obs-contracts`` job asserts both == 1.0):
+
+  obs_store_reconciled    1.0 iff every mirrored ``disk.*`` registry
+                          counter == the store's measured counter,
+                          bit-exact (checked before any counter reset)
+  obs_search_reconciled   1.0 iff registry ``search.ios{tier=disk}`` ==
+                          registry ``disk.records_read`` — the
+                          cross-reset form of the logical contract
+
     PYTHONPATH=src python -m benchmarks.disk_sweep [--quick] [--json PATH]
-        [--pipeline-depth K]
+        [--pipeline-depth K] [--obs-json PATH]
 """
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -69,6 +79,7 @@ import time
 import numpy as np
 
 from benchmarks import common
+from repro import obs
 from repro.core import GateANNEngine, SearchConfig, recall_at_k
 
 BUDGET_RECORDS = (0, 256, 1024)
@@ -156,6 +167,19 @@ def sweep_disk(ctx, *, budgets=BUDGET_RECORDS, modes=MODES, search_l=100):
                      derived=float(unique_ok)))
     rows.append(dict(name="disk_syscall_contract", lat1_us=0.0,
                      derived=float(syscall_ok)))
+    reg = obs.default_registry()
+    if reg.enabled:
+        # telemetry-vs-measured contract, checked BEFORE any
+        # reset_io_counters (sweep_pipeline resets per repeat; registry
+        # counters are monotonic and would stop matching the store's):
+        # every mirrored counter must agree bit-exactly with the store
+        c = store.io_counters()
+        mirrored = ("records_read", "pages_read", "bytes_read",
+                    "unique_sectors_read", "ranges_read", "syscalls",
+                    "fetch_rounds", "read_rounds")
+        ok = all(reg.family_total(f"disk.{k}") == c[k] for k in mirrored)
+        rows.append(dict(name="obs_store_reconciled", lat1_us=0.0,
+                         derived=float(ok)))
     return rows
 
 
@@ -251,7 +275,13 @@ def main() -> None:
     ap.add_argument("--pipeline-depth", type=int, metavar="K", default=0,
                     help="also sweep SearchConfig.pipeline_depth up to K "
                          "on the cold-cache disk tier (0 = skip)")
+    ap.add_argument("--obs-json", metavar="PATH", default=None,
+                    help="enable telemetry for the sweep and dump the "
+                         "registry + span rings as a JSON snapshot")
     args = ap.parse_args()
+    if args.obs_json:
+        obs.enable()
+        obs.trace.enable()
     ctx = common.standard_setup()
     kw = {}
     if args.quick:
@@ -259,13 +289,27 @@ def main() -> None:
     rows = sweep_disk(ctx, **kw)
     if args.pipeline_depth > 0:
         rows += sweep_pipeline(ctx, max_depth=args.pipeline_depth)
+    reg = obs.default_registry()
+    if reg.enabled:
+        # cross-reset contract: the registry is monotonic, so the
+        # search-side and store-side *registry* totals must agree even
+        # though sweep_pipeline reset the store's own counters
+        rows.append(dict(
+            name="obs_search_reconciled", lat1_us=0.0,
+            derived=float(
+                reg.family_total("search.ios", tier="disk")
+                == reg.family_total("disk.records_read")
+            ),
+        ))
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['lat1_us']:.1f},{r['derived']:.4f}")
+    if args.obs_json:
+        obs.export.write_obs_json(common.root_artifact(args.obs_json))
+        print(f"# wrote {args.obs_json}", file=sys.stderr)
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump({"benchmark": "disk_sweep", "rows": rows}, f, indent=1)
-        print(f"# wrote {args.json}", file=sys.stderr)
+        path = common.write_bench_json(args.json, "disk_sweep", rows)
+        print(f"# wrote {path}", file=sys.stderr)
     print("# sweep done", file=sys.stderr)
 
 

@@ -53,7 +53,7 @@ def main():
     )
 
     shape = next(s for s in ALL_SHAPES if s.name == args.shape)
-    t0 = time.time()
+    t0 = time.perf_counter()
     _, compiled, report, hlo = lower_cell(args.arch, shape, donate=donate)
     t_c = report["flops_per_device"] / PEAK_FLOPS
     hlo_m = report["hbm_bytes_per_device"] / HBM_BW
@@ -83,7 +83,7 @@ def main():
         "collective_counts": report["collective_counts"],
         "useful_ratio": model_flops_per_device(report) / max(report["flops_per_device"], 1),
         "bound_s": max(t_c, t_m, t_x),
-        "wall_s": round(time.time() - t0, 1),
+        "wall_s": round(time.perf_counter() - t0, 1),
     }
     print(json.dumps(entry, indent=2))
     os.makedirs(os.path.dirname(args.log), exist_ok=True)

@@ -20,10 +20,10 @@ def main() -> None:
                     help="core figures only (motivation, main, io, ablation)")
     args = ap.parse_args()
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     print("# building shared setup (cached)", file=sys.stderr)
     ctx = common.standard_setup()
-    print(f"# setup ready ({time.time()-t0:.0f}s)", file=sys.stderr)
+    print(f"# setup ready ({time.perf_counter()-t0:.0f}s)", file=sys.stderr)
 
     quick_set = {"fig01_motivation", "fig05_main", "fig07_io", "fig18_ablation",
                  "table5_breakdown"}
@@ -33,7 +33,7 @@ def main() -> None:
             continue
         if args.quick and fn.__name__ not in quick_set:
             continue
-        t1 = time.time()
+        t1 = time.perf_counter()
         try:
             rows = fn(ctx)
         except Exception as e:  # noqa: BLE001 — report and continue
@@ -45,7 +45,7 @@ def main() -> None:
             continue
         for r in rows:
             print(f"{r['name']},{r.get('lat1_us', 0.0):.1f},{r['derived']:.4f}")
-        print(f"# {fn.__name__} done ({time.time()-t1:.0f}s)", file=sys.stderr)
+        print(f"# {fn.__name__} done ({time.perf_counter()-t1:.0f}s)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -39,13 +39,16 @@ asserts on:
   serve_rejected        admission rejections across both loops
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--quick]
-        [--json PATH] [--qps F] [--clients N] [--requests N]
-        [--tenants N] [--alpha F] [--pipeline-depth K]
+        [--json PATH] [--obs-json PATH] [--qps F] [--clients N]
+        [--requests N] [--tenants N] [--alpha F] [--pipeline-depth K]
+
+``BENCH_serve.json`` is always written (repo-root-anchored, with a
+``schema_version`` field); ``--obs-json`` additionally dumps the
+process and serve-frontend telemetry registries.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import threading
@@ -54,6 +57,7 @@ import time
 import numpy as np
 
 from benchmarks import common
+from repro import obs
 from repro.core import GateANNEngine, SearchConfig
 from repro.serve import AdmissionError, RAGServer, ServeFrontend, TenantSpec
 
@@ -110,7 +114,7 @@ def run_closed(srv, queries, schedule, *, n_clients):
                     return
                 cursor[0] += 1
             tenant, qi = schedule[i]
-            t0 = time.monotonic()
+            t0 = time.perf_counter()
             try:
                 h = srv.submit(tenant, queries[qi], timeout=30.0)
                 ids = h.result(timeout=120.0)
@@ -118,18 +122,18 @@ def run_closed(srv, queries, schedule, *, n_clients):
                 with lock:
                     rejected[0] += 1
                 continue
-            lat = time.monotonic() - t0
+            lat = time.perf_counter() - t0
             with lock:
                 lats.append(lat)
                 served.append((tenant, qi, ids))
 
-    t_start = time.monotonic()
+    t_start = time.perf_counter()
     threads = [threading.Thread(target=client) for _ in range(n_clients)]
     for t in threads:
         t.start()
     for t in threads:
         t.join()
-    wall = time.monotonic() - t_start
+    wall = time.perf_counter() - t_start
     return np.asarray(lats), served, len(lats) / max(wall, 1e-9), rejected[0]
 
 
@@ -139,9 +143,9 @@ def run_open(srv, queries, schedule, *, qps, seed):
     gaps = rng.exponential(1.0 / qps, size=len(schedule))
     arrivals = np.cumsum(gaps)
     handles, served, rejected = [], [], 0
-    t_start = time.monotonic()
+    t_start = time.perf_counter()
     for (tenant, qi), t_arr in zip(schedule, arrivals):
-        now = time.monotonic() - t_start
+        now = time.perf_counter() - t_start
         if t_arr > now:
             time.sleep(t_arr - now)
         t_sched = t_start + t_arr
@@ -150,14 +154,14 @@ def run_open(srv, queries, schedule, *, qps, seed):
         except AdmissionError:
             rejected += 1
             continue
-        lag = time.monotonic() - t_sched  # scheduler + admission wait
+        lag = time.perf_counter() - t_sched  # scheduler + admission wait
         handles.append((tenant, qi, h, lag))
     lats = []
     for tenant, qi, h, lag in handles:
         ids = h.result(timeout=120.0)
         served.append((tenant, qi, ids))
         lats.append(lag + h.trace.total)
-    wall = time.monotonic() - t_start
+    wall = time.perf_counter() - t_start
     return np.asarray(lats), served, len(lats) / max(wall, 1e-9), rejected
 
 
@@ -196,7 +200,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small request counts (CI smoke)")
-    ap.add_argument("--json", metavar="PATH", default="BENCH_serve.json")
+    ap.add_argument("--json", metavar="PATH", default="BENCH_serve.json",
+                    help="artifact path (always written; relative paths "
+                         "anchor at the repo root)")
+    ap.add_argument("--obs-json", metavar="PATH", default=None,
+                    help="also dump the telemetry registries (process + "
+                         "serve sections) as a JSON snapshot")
     ap.add_argument("--qps", type=float, default=40.0,
                     help="open-loop offered load (Poisson arrivals)")
     ap.add_argument("--clients", type=int, default=8)
@@ -209,6 +218,9 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     n_requests = 120 if args.quick else args.requests
+    if args.obs_json:
+        obs.enable()
+        obs.trace.enable()
 
     ctx = common.standard_setup()
     queries = ctx["queries"]
@@ -252,6 +264,14 @@ def main() -> None:
 
         parity = check_parity(engine, rag, queries, served_c + served_o)
         rep = srv.io_report()
+        if args.obs_json:
+            payload = obs.export.write_obs_json(
+                common.root_artifact(args.obs_json),
+                sections={"serve": (srv.metrics, srv.tracer)},
+            )
+            n_fam = len(payload["serve"]["families"])
+            print(f"# wrote {args.obs_json} ({n_fam} serve families)",
+                  file=sys.stderr)
     finally:
         srv.close()
 
@@ -279,10 +299,12 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['lat1_us']:.1f},{r['derived']:.4f}")
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump({"benchmark": "serve_bench", "rows": rows}, f, indent=1)
-        print(f"# wrote {args.json}", file=sys.stderr)
+    # the JSON artifact is unconditional: nightly uploads BENCH_serve.json
+    # from the repo root, so an empty --json falls back to the default
+    path = common.write_bench_json(
+        args.json or "BENCH_serve.json", "serve_bench", rows
+    )
+    print(f"# wrote {path}", file=sys.stderr)
     print("# serve bench done", file=sys.stderr)
 
 

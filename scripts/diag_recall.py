@@ -11,11 +11,11 @@ corpus = make_bigann_like(N, D, seed=0)
 labels = uniform_labels(N, 10, seed=0)
 queries = make_queries(corpus, B, seed=1)
 
-t0 = time.time()
+t0 = time.perf_counter()
 eng = GateANNEngine.build(
     corpus, config=EngineConfig(degree=32, build_l=64, pq_chunks=8, r_max=16), labels=labels
 )
-print(f"build: {time.time()-t0:.1f}s")
+print(f"build: {time.perf_counter()-t0:.1f}s")
 
 gt_all = filtered_ground_truth(corpus, queries, np.ones(N, bool), k=10)
 gt_f = filtered_ground_truth(corpus, queries, np.asarray(labels) == 0, k=10)

@@ -9,26 +9,26 @@ sys.path.insert(0, "src")
 from repro.core import EngineConfig, GateANNEngine, SearchConfig, recall_at_k
 from repro.data import make_bigann_like, make_queries, uniform_labels, filtered_ground_truth
 
-t0 = time.time()
+t0 = time.perf_counter()
 N, D, B = 3000, 32, 16
 corpus = make_bigann_like(N, D, seed=0)
 labels = uniform_labels(N, 10, seed=0)
 queries = make_queries(corpus, B, seed=1)
-print(f"data: {time.time()-t0:.1f}s")
+print(f"data: {time.perf_counter()-t0:.1f}s")
 
-t0 = time.time()
+t0 = time.perf_counter()
 eng = GateANNEngine.build(
     corpus,
     config=EngineConfig(degree=24, build_l=48, pq_chunks=8, r_max=12),
     labels=labels,
 )
-print(f"build: {time.time()-t0:.1f}s; mem={eng.memory_report()}")
+print(f"build: {time.perf_counter()-t0:.1f}s; mem={eng.memory_report()}")
 
 target = np.zeros(B, dtype=np.int32)  # filter to label 0 (~10% selectivity)
 gt = filtered_ground_truth(corpus, queries, np.asarray(labels) == 0, k=10)
 
 for mode in ["gate", "post", "early", "pre_naive"]:
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = eng.search(
         queries,
         filter_kind="label",
@@ -41,5 +41,5 @@ for mode in ["gate", "post", "early", "pre_naive"]:
     hops = float(np.mean(np.asarray(out.stats.n_hops)))
     print(
         f"{mode:10s} recall@10={r:.3f} ios/q={ios:6.1f} tunnels/q={tun:6.1f} "
-        f"hops={hops:5.1f} wall={time.time()-t0:.1f}s qps32={eng.modeled_qps(out.stats):.0f}"
+        f"hops={hops:5.1f} wall={time.perf_counter()-t0:.1f}s qps32={eng.modeled_qps(out.stats):.0f}"
     )

@@ -14,7 +14,7 @@ from repro.configs.base import ShapeConfig
 
 ok = True
 for arch in ARCH_IDS:
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         cfg = get_smoke_config(arch)
         import dataclasses
@@ -37,7 +37,7 @@ for arch in ARCH_IDS:
         assert jnp.all(jnp.isfinite(logits)), f"{arch}: decode logits not finite"
         n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
         print(f"OK   {arch:28s} loss={float(loss):7.3f} gnorm={float(gnorm):9.3f} "
-              f"params={n_params:,} ({time.time()-t0:.1f}s)")
+              f"params={n_params:,} ({time.perf_counter()-t0:.1f}s)")
     except Exception as e:
         ok = False
         print(f"FAIL {arch}: {e}")

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import graph as graphm
 from repro.core import pq as pqm
 from repro.core import search as searchm
@@ -454,21 +455,37 @@ class GateANNEngine:
                 submit, drain = sf(), df()
                 if submit is None or drain is None:
                     submit = drain = None
+        reg = obs.default_registry()
+        reg.counter(
+            "search.dispatch",
+            mode=cfg.mode,
+            tier=self.config.store_tier,
+            pipelined="1" if submit is not None else "0",
+        ).inc()
         try:
-            out = searchm.filtered_search(
-                fetch=store.fetch_fn(),
-                neighbor_store=self.neighbor_store,
-                filter_check=check,
-                lut=lut,
-                codes=self.codes,
-                entry=self.medoid,
-                queries=q,
-                config=cfg,
-                cached_mask=cached_mask,
-                visit_counts=visit_counts,
-                submit=submit,
-                drain=drain,
-            )
+            with obs.trace.span("engine.search", mode=cfg.mode):
+                out = searchm.filtered_search(
+                    fetch=store.fetch_fn(),
+                    neighbor_store=self.neighbor_store,
+                    filter_check=check,
+                    lut=lut,
+                    codes=self.codes,
+                    entry=self.medoid,
+                    queries=q,
+                    config=cfg,
+                    cached_mask=cached_mask,
+                    visit_counts=visit_counts,
+                    submit=submit,
+                    drain=drain,
+                )
+                if reg.enabled:
+                    # materializes the stats arrays (forcing the ordered
+                    # host callbacks to completion) so the span covers
+                    # actual I/O, not async dispatch
+                    obs.stats.record_search_stats(
+                        reg, out.stats,
+                        mode=cfg.mode, tier=self.config.store_tier,
+                    )
         except BaseException:
             # mid-search failure while a pipelined round is in flight: its
             # submitted-but-undrained token would pin a reader slot and a

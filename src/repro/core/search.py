@@ -52,6 +52,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import frontier as fr
 from repro.core import pq as pqm
 from repro.core.filter_store import CheckFn
@@ -318,6 +319,17 @@ def filtered_search(
             )
         except Exception:
             use_fused = False
+
+    # Trace-time dispatch accounting: this Python body runs once per jit
+    # trace (shape/config change), not per call, so this counts *traces*
+    # — which loop variant actually compiled — not query batches.
+    # Per-call volume lives in the engine layer (``search.dispatch``).
+    obs.default_registry().counter(
+        "search.traces",
+        mode=mode,
+        fused="1" if use_fused else "0",
+        pipelined="1" if pipelined else "0",
+    ).inc()
 
     if use_fused:
         # Pallas kernel on TPU/GPU, its bit-identical jnp twin on CPU —

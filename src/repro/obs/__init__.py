@@ -1,0 +1,40 @@
+"""Unified telemetry: metrics registry, span tracer, exporters.
+
+    from repro import obs
+
+    obs.enable()                      # counters/gauges/histograms on
+    obs.trace.enable(sample_rate=1.0) # span timing on
+
+    reg = obs.default_registry()
+    reg.counter("disk.records_read", store="idx.gann").inc(8)
+    with obs.trace.span("disk.preadv", store="idx.gann"):
+        ...
+    print(obs.export.to_prometheus())
+
+Recording is disabled by default (near-zero hot-path cost — see the
+overhead budget in ``obs/tracer.py``); set ``GATEANN_OBS=1`` or call
+``obs.enable()``.  ``disk_sweep``/``serve_bench`` enable both when run
+with ``--obs-json``, and ``scripts/obs_report.py`` renders the artifact.
+"""
+from repro.obs import export, stats  # noqa: F401
+from repro.obs import tracer as trace  # noqa: F401
+from repro.obs.registry import (  # noqa: F401
+    MetricsRegistry,
+    default_registry,
+    disable,
+    enable,
+    set_default_registry,
+    use_registry,
+)
+
+__all__ = [
+    "MetricsRegistry",
+    "default_registry",
+    "set_default_registry",
+    "use_registry",
+    "enable",
+    "disable",
+    "export",
+    "stats",
+    "trace",
+]

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core.engine import GateANNEngine
 from repro.core.search import SearchConfig, SearchStats
@@ -86,25 +87,26 @@ class RAGServer:
     last_batch_hit_rate: float = 0.0
 
     def _account(self, stats):
-        self.served_queries += int(np.asarray(stats.n_ios).shape[0])
-        ios = int(np.sum(np.asarray(stats.n_ios)))
-        hits = int(np.sum(np.asarray(stats.n_cache_hits)))
-        self.served_ios += ios
-        self.served_tunnels += int(np.sum(np.asarray(stats.n_tunnels)))
-        self.served_cache_hits += hits
-        self.last_batch_hit_rate = hits / max(ios + hits, 1)
+        # shared SearchStats arithmetic lives in obs.stats (one home for
+        # the sums both serving layers used to copy)
+        t = obs.stats.stats_totals(stats)
+        self.served_queries += t["queries"]
+        self.served_ios += t["n_ios"]
+        self.served_tunnels += t["n_tunnels"]
+        self.served_cache_hits += t["n_cache_hits"]
+        self.last_batch_hit_rate = obs.stats.hit_rate(
+            t["n_ios"], t["n_cache_hits"]
+        )
 
     def io_report(self) -> dict:
         """Lifetime tier mix: how many record fetches the cache absorbed."""
-        fetches = self.served_ios + self.served_cache_hits
-        rep = {
-            "queries": self.served_queries,
-            "slow_tier_reads": self.served_ios,
-            "cache_hits": self.served_cache_hits,
-            "tunnels": self.served_tunnels,
-            "cache_hit_rate": self.served_cache_hits / max(fetches, 1),
-            "last_batch_hit_rate": self.last_batch_hit_rate,
-        }
+        rep = obs.stats.tier_mix(
+            queries=self.served_queries,
+            ios=self.served_ios,
+            cache_hits=self.served_cache_hits,
+            tunnels=self.served_tunnels,
+        )
+        rep["last_batch_hit_rate"] = self.last_batch_hit_rate
         if self.bucket_sizes:
             rep["bucket_sizes"] = tuple(self.bucket_sizes)
             rep["padded_rows"] = self.padded_rows

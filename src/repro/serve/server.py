@@ -28,10 +28,16 @@ latency you can put an SLO on:
     because exactly one thread runs searches.
   * **per-request tracing** — every request carries a
     :class:`RequestTrace` with queue-wait / batch-form / search / drain
-    spans (monotonic-clock seconds).  ``io_report`` aggregates span
-    sums, per-tenant I/O attribution (exact: per-row ``n_ios`` sums, by
-    the measured reconciliation contract), and admission outcomes on top
-    of the underlying ``RAGServer`` report.
+    spans (``time.perf_counter`` seconds — monotonic, never corrupted
+    by wall-clock steps).  Each resolved request's spans are also
+    recorded into the front end's own ``obs`` tracer/registry
+    (``trace.span_seconds{span=serve.*}`` histograms), and admission
+    outcomes / per-tenant I/O attribution are registry counter families
+    — ``io_report`` is a thin view over the registry, layered on the
+    underlying ``RAGServer`` report.  Pass ``registry=`` to aggregate
+    several front ends into one sink; by default each server gets a
+    private, always-enabled registry so its accounting works regardless
+    of the process-wide ``GATEANN_OBS`` toggle.
 
 Failure containment: if the engine raises mid-batch, the dispatcher
 abandons any pipelined disk rounds still in flight
@@ -47,7 +53,11 @@ from collections import deque
 
 import numpy as np
 
+from repro import obs
 from repro.serve.rag import RAGRequest, RAGServer
+
+# the four per-request stages; each becomes a serve.<name> span family
+_SPANS = ("queue_wait", "batch_form", "search", "drain")
 
 
 class AdmissionError(RuntimeError):
@@ -71,7 +81,7 @@ class TenantSpec:
 
 @dataclasses.dataclass
 class RequestTrace:
-    """Per-request span breakdown (seconds, monotonic clock).
+    """Per-request span breakdown (seconds, ``time.perf_counter``).
 
     ``queue_wait`` = submit -> picked into a batch; ``batch_form`` =
     picked -> search dispatched (request assembly); ``search`` = engine
@@ -138,6 +148,7 @@ class ServeFrontend:
         max_batch: int = 32,
         batch_window_s: float = 0.002,
         admission_timeout_s: float = 1.0,
+        registry: obs.MetricsRegistry | None = None,
     ):
         if not tenants:
             raise ValueError("a server needs at least one TenantSpec")
@@ -156,24 +167,47 @@ class ServeFrontend:
         self._queue: deque[_Pending] = deque()
         self._inflight = {t.name: 0 for t in tenants}
         self._closed = False
-        # admission + outcome counters (under _lock)
-        self.admitted = 0
-        self.rejected = 0
-        self.completed = 0
-        self.failed = 0
-        self.batches = 0
-        # span sums (dispatcher-thread only)
-        self._span_sums = {"queue_wait": 0.0, "batch_form": 0.0,
-                           "search": 0.0, "drain": 0.0}
-        # per-tenant attribution (dispatcher-thread only)
-        self._tenant_stats = {
-            t.name: {"queries": 0, "ios": 0, "cache_hits": 0, "failed": 0}
-            for t in tenants
+        # admission/outcome counters and span histograms live in the
+        # registry (``io_report`` is a thin view over it); children are
+        # created eagerly so zero-traffic tenants still report
+        self.metrics = registry if registry is not None \
+            else obs.MetricsRegistry(enabled=True)
+        self.tracer = obs.trace.Tracer(registry=self.metrics)
+        self.tracer.enable()
+        self._counters = {
+            key: {t.name: self.metrics.counter(f"serve.{key}", tenant=t.name)
+                  for t in tenants}
+            for key in ("admitted", "rejected", "completed", "failed",
+                        "queries", "ios", "cache_hits")
         }
+        self._c_batches = self.metrics.counter("serve.batches")
+        self._g_queue = self.metrics.gauge("serve.queue_depth")
         self._dispatcher = threading.Thread(
             target=self._dispatch_loop, name="serve-dispatcher", daemon=True
         )
         self._dispatcher.start()
+
+    # -- registry views (kept as attributes-in-spirit: tests and callers
+    # read e.g. ``srv.rejected`` as a plain int) ---------------------------
+    @property
+    def admitted(self) -> int:
+        return int(self.metrics.family_total("serve.admitted"))
+
+    @property
+    def rejected(self) -> int:
+        return int(self.metrics.family_total("serve.rejected"))
+
+    @property
+    def completed(self) -> int:
+        return int(self.metrics.family_total("serve.completed"))
+
+    @property
+    def failed(self) -> int:
+        return int(self.metrics.family_total("serve.failed"))
+
+    @property
+    def batches(self) -> int:
+        return int(self._c_batches.value)
 
     # -- client side -------------------------------------------------------
     def submit(
@@ -195,12 +229,12 @@ class ServeFrontend:
             raise KeyError(f"unknown tenant {tenant!r}; have {sorted(self.tenants)}")
         if timeout is None:
             timeout = self.admission_timeout_s
-        deadline = time.monotonic() + timeout
+        deadline = time.perf_counter() + timeout
         with self._lock:
             while not self._closed and self._inflight[tenant] >= spec.max_inflight:
-                remaining = deadline - time.monotonic()
+                remaining = deadline - time.perf_counter()
                 if remaining <= 0 or not self._slot_freed.wait(remaining):
-                    self.rejected += 1
+                    self._counters["rejected"][tenant].inc()
                     raise AdmissionError(
                         f"tenant {tenant!r} at max_inflight="
                         f"{spec.max_inflight} for {timeout:.3f}s"
@@ -218,8 +252,9 @@ class ServeFrontend:
                 filter_params=spec.filter_params,
             )
             self._inflight[tenant] += 1
-            self.admitted += 1
-            self._queue.append(_Pending(handle, req, spec, time.monotonic()))
+            self._counters["admitted"][tenant].inc()
+            self._queue.append(_Pending(handle, req, spec, time.perf_counter()))
+            self._g_queue.set(len(self._queue))
             self._work.notify()
         return handle
 
@@ -241,6 +276,7 @@ class ServeFrontend:
                 self._work.wait(self.batch_window_s)
             batch = [self._queue.popleft()
                      for _ in range(min(len(self._queue), self.max_batch))]
+            self._g_queue.set(len(self._queue))
             if not batch:
                 # close() drained the queue between wakeup and pop
                 return None if self._closed else []
@@ -249,17 +285,18 @@ class ServeFrontend:
     def _resolve(self, p: _Pending, ids, err, t_searched: float) -> None:
         p.handle._ids = ids
         p.handle._error = err
-        p.handle.trace.drain = time.monotonic() - t_searched
+        p.handle.trace.drain = time.perf_counter() - t_searched
         p.handle._done.set()
+        name = p.tenant.name
+        outcome = "completed" if err is None else "failed"
+        self._counters[outcome][name].inc()
+        # each resolved request publishes its four spans; percentiles and
+        # means come out of trace.span_seconds{span=serve.*} histograms
+        for k in _SPANS:
+            self.tracer.record(f"serve.{k}", getattr(p.handle.trace, k),
+                               tenant=name)
         with self._lock:
-            self._inflight[p.tenant.name] -= 1
-            if err is None:
-                self.completed += 1
-            else:
-                self.failed += 1
-                self._tenant_stats[p.tenant.name]["failed"] += 1
-            for k in ("queue_wait", "batch_form", "search", "drain"):
-                self._span_sums[k] += getattr(p.handle.trace, k)
+            self._inflight[name] -= 1
             self._slot_freed.notify_all()
 
     def _dispatch_loop(self) -> None:
@@ -269,12 +306,12 @@ class ServeFrontend:
                 return
             if not batch:  # spurious wakeup, nothing to serve
                 continue
-            t_formed = time.monotonic()
+            t_formed = time.perf_counter()
             for p in batch:
                 p.handle.trace.queue_wait = t_formed - p.t_submit
                 p.handle.trace.batch_size = len(batch)
             requests = [p.request for p in batch]
-            t_dispatch = time.monotonic()
+            t_dispatch = time.perf_counter()
             for p in batch:
                 p.handle.trace.batch_form = t_dispatch - t_formed
             try:
@@ -288,43 +325,63 @@ class ServeFrontend:
                 self.rag.engine.abandon_pending_io()
                 ids = stats = None
                 err = e
-            t_searched = time.monotonic()
+            t_searched = time.perf_counter()
             n_ios = np.asarray(stats.n_ios) if err is None else None
             n_hits = np.asarray(stats.n_cache_hits) if err is None else None
             for i, p in enumerate(batch):
                 p.handle.trace.search = t_searched - t_dispatch
-                ts = self._tenant_stats[p.tenant.name]
-                ts["queries"] += 1
+                name = p.tenant.name
+                self._counters["queries"][name].inc()
                 if err is None:
                     p.handle.trace.n_ios = int(n_ios[i])
                     p.handle.trace.n_cache_hits = int(n_hits[i])
-                    ts["ios"] += int(n_ios[i])
-                    ts["cache_hits"] += int(n_hits[i])
+                    self._counters["ios"][name].inc(int(n_ios[i]))
+                    self._counters["cache_hits"][name].inc(int(n_hits[i]))
                     self._resolve(p, ids[i], None, t_searched)
                 else:
                     self._resolve(p, None, err, t_searched)
-            with self._lock:
-                self.batches += 1
+            self._c_batches.inc()
 
     # -- reporting / lifecycle ---------------------------------------------
     def io_report(self) -> dict:
         """The ``RAGServer`` report plus serving-layer aggregates:
-        admission outcomes, mean span breakdown, per-tenant attribution."""
+        admission outcomes, mean span breakdown, per-tenant attribution.
+
+        A thin view over the front end's registry — every value here is
+        a family total or histogram mean; nothing is aggregated outside
+        ``self.metrics``."""
         rep = self.rag.io_report()
-        with self._lock:
-            done = max(self.completed + self.failed, 1)
-            rep.update(
-                tenants=sorted(self.tenants),
-                admitted=self.admitted,
-                rejected=self.rejected,
-                completed=self.completed,
-                failed=self.failed,
-                batches=self.batches,
-                queue_depth=len(self._queue),
-                mean_batch_size=(self.completed + self.failed) / max(self.batches, 1),
-                spans_mean_s={k: v / done for k, v in self._span_sums.items()},
-                per_tenant={k: dict(v) for k, v in self._tenant_stats.items()},
-            )
+        total = self.metrics.family_total
+        done = self.completed + self.failed
+        spans = {}
+        for k in _SPANS:
+            children = [
+                c for c in self.metrics.children("trace.span_seconds")
+                if c.labels.get("span") == f"serve.{k}"
+            ]
+            s = sum(c.sum for c in children)
+            n = sum(c.count for c in children)
+            spans[k] = s / max(n, 1)
+        rep.update(
+            tenants=sorted(self.tenants),
+            admitted=self.admitted,
+            rejected=self.rejected,
+            completed=self.completed,
+            failed=self.failed,
+            batches=self.batches,
+            queue_depth=self.queue_depth(),
+            mean_batch_size=done / max(self.batches, 1),
+            spans_mean_s=spans,
+            per_tenant={
+                name: {
+                    "queries": int(total("serve.queries", tenant=name)),
+                    "ios": int(total("serve.ios", tenant=name)),
+                    "cache_hits": int(total("serve.cache_hits", tenant=name)),
+                    "failed": int(total("serve.failed", tenant=name)),
+                }
+                for name in self.tenants
+            },
+        )
         return rep
 
     def close(self) -> None:
@@ -340,7 +397,7 @@ class ServeFrontend:
             self._slot_freed.notify_all()
         for p in orphans:
             self._resolve(p, None, ServerClosed("server closed"),
-                          time.monotonic())
+                          time.perf_counter())
         self._dispatcher.join(timeout=30.0)
         self.rag.engine.abandon_pending_io()
 

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.store.cache import CachedRecordStore, record_nbytes, select_hot_set
 from repro.store.vector_store import is_lazy_host
 
@@ -184,6 +185,9 @@ class AdaptiveRecordCache:
                 self.partitions[bucket] = part
                 while len(self.partitions) > self.max_partitions:
                     self.partitions.popitem(last=False)  # evict LRU
+                    obs.default_registry().counter(
+                        "cache.partition_evictions"
+                    ).inc()
             part.counts = self.ema_decay * part.counts + bc
             part.dirty = True
             self.partitions.move_to_end(bucket)
@@ -238,6 +242,11 @@ class AdaptiveRecordCache:
         self.last_refresh_sets = sets
         self.n_refreshes += 1
         self.batches_since_refresh = 0
+        reg = obs.default_registry()
+        if reg.enabled:
+            reg.counter("cache.refreshes").inc()
+            reg.counter("cache.refresh_sets").inc(sets)
+            reg.gauge("cache.partitions").set(len(self.partitions))
 
     def maybe_refresh(self) -> bool:
         """Refresh if the cadence is due; returns whether it ran."""

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.tree_util import Partial
 
+from repro import obs
 from repro.store.vector_store import RecordFetchFn, is_lazy_host
 
 CACHE_POLICIES = ("visit_freq", "bfs")
@@ -244,6 +245,11 @@ class CachedRecordStore:
             cache_nbrs = jnp.concatenate(
                 [cache_nbrs, jnp.full((pad, nbrs.shape[1]), -1, jnp.int32)]
             )
+        # telemetry: one materialization per wrap — the adaptive refresh
+        # loop runs through here, so this counts hot-set rebuilds too
+        obs.default_registry().counter(
+            "cache.materializations", policy=policy
+        ).inc()
         return cls(
             backing=backing,
             slot_of=jnp.asarray(slot_of),

@@ -98,6 +98,7 @@ import numpy as np
 from jax.experimental import io_callback
 from jax.tree_util import Partial
 
+from repro import obs
 from repro.store.format import (
     PAGE_BYTES,
     SEC_NEIGHBORS,
@@ -320,6 +321,35 @@ class DiskRecordStore:
         # and may serve several engines/threads at once)
         self._lock = threading.Lock()
         self._reset_counters_locked()
+        # telemetry: mirror the measured counters into registry families
+        # (captured at construction — tests swap in private registries via
+        # obs.use_registry).  Registry counters are MONOTONIC for the
+        # registry's lifetime: reset_io_counters() resets only the store
+        # attributes above, so cross-reset contracts compare registry
+        # totals against registry totals (search.ios vs disk.records_read).
+        self._obs = obs.default_registry()
+        self._obs_label = os.path.basename(path)
+        mk = lambda name: self._obs.counter(name, store=self._obs_label)  # noqa: E731
+        self._obs_counters = {
+            "records_read": mk("disk.records_read"),
+            "pages_read": mk("disk.pages_read"),
+            "bytes_read": mk("disk.bytes_read"),
+            "unique_sectors_read": mk("disk.unique_sectors_read"),
+            "ranges_read": mk("disk.ranges_read"),
+            "syscalls": mk("disk.syscalls"),
+            "gap_sectors_read": mk("disk.gap_sectors_read"),
+            "fetch_rounds": mk("disk.fetch_rounds"),
+            "read_rounds": mk("disk.read_rounds"),
+            "overlapped_rounds": mk("disk.overlapped_rounds"),
+            "submits": mk("disk.submits"),
+            "drains": mk("disk.drains"),
+            "abandoned_tokens": mk("disk.abandoned_tokens"),
+            "abandon_events": mk("disk.abandon_events"),
+            "warmed_bytes": mk("disk.warmed_bytes"),
+        }
+        self._obs_inflight = self._obs.gauge(
+            "disk.inflight_depth", store=self._obs_label
+        )
         rd = record_dtype(header.dim, header.degree)
         idx = IndexFile(header)
         if header.shards:
@@ -408,6 +438,10 @@ class DiskRecordStore:
         if orphans:
             with self._lock:
                 self.abandoned_tokens += len(orphans)
+            if self._obs.enabled:
+                self._obs_counters["abandoned_tokens"].inc(len(orphans))
+                self._obs_counters["abandon_events"].inc()
+                self._obs_inflight.set(0)
         return len(orphans)
 
     def __del__(self):  # best-effort fd cleanup
@@ -516,7 +550,9 @@ class DiskRecordStore:
         if m:
             uniq, inv = np.unique(flat[vmask], return_inverse=True)
             u = int(uniq.size)
-            recs, io = self._read_unique(uniq)
+            with obs.trace.span("disk.preadv", store=self._obs_label,
+                                io_mode=self.io_mode):
+                recs, io = self._read_unique(uniq)
             got = recs[inv]  # scatter back to beam order (dups included)
             vecs.reshape(-1, self.dim)[vmask] = got["vec"]
             nbrs.reshape(-1, self.degree)[vmask] = got["nbrs"]
@@ -530,6 +566,20 @@ class DiskRecordStore:
             self.gap_sectors_read += io["gap_sectors"]
             self.fetch_rounds += 1
             self.read_rounds += int(u > 0)
+        if self._obs.enabled:
+            c = self._obs_counters
+            # records BEFORE unique: a registry snapshot taken between the
+            # two increments under-counts unique, so the mid-flight
+            # invariant unique_sectors_read <= records_read always holds
+            c["records_read"].inc(m)
+            c["pages_read"].inc(m * self.pages_per_record)
+            c["bytes_read"].inc(m * self.sector_bytes)
+            c["unique_sectors_read"].inc(u)
+            c["ranges_read"].inc(io["ranges"])
+            c["syscalls"].inc(io["syscalls"])
+            c["gap_sectors_read"].inc(io["gap_sectors"])
+            c["fetch_rounds"].inc()
+            c["read_rounds"].inc(int(u > 0))
         return vecs, nbrs
 
     def _traced_fetch(self, ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -569,9 +619,10 @@ class DiskRecordStore:
         flat = np.clip(ids, 0, self.n - 1).reshape(-1)
         nbrs = np.full(ids.shape + (self.degree,), -1, np.int32)
         vmask = valid.reshape(-1)
-        if vmask.any():
-            adj = self._adjacency_host()
-            nbrs.reshape(-1, self.degree)[vmask] = adj[flat[vmask]]
+        with obs.trace.span("disk.submit", store=self._obs_label):
+            if vmask.any():
+                adj = self._adjacency_host()
+                nbrs.reshape(-1, self.degree)[vmask] = adj[flat[vmask]]
         job_ids = np.array(ids, copy=True)  # the callback buffer is reused
         with self._lock:
             if self._pool is None:
@@ -583,9 +634,16 @@ class DiskRecordStore:
             self._next_token = (self._next_token + 1) % (1 << 30)
             self._pending[token] = self._pool.submit(self._host_fetch, job_ids)
             self._inflight += 1
+            inflight = self._inflight
             self.inflight_depth_max = max(self.inflight_depth_max, self._inflight)
-            if self._inflight >= 2:
+            overlapped = self._inflight >= 2
+            if overlapped:
                 self.overlapped_rounds += 1
+        if self._obs.enabled:
+            self._obs_counters["submits"].inc()
+            if overlapped:
+                self._obs_counters["overlapped_rounds"].inc()
+            self._obs_inflight.set(inflight)
         return np.int32(token), nbrs
 
     def _host_drain(self, token: np.ndarray, ids: np.ndarray, flag: np.ndarray):
@@ -600,12 +658,17 @@ class DiskRecordStore:
             fut = self._pending.pop(int(token), None)
             if fut is not None:
                 self._inflight -= 1
+                inflight = self._inflight
         if fut is None:
             raise KeyError(
                 f"drain of unknown token {int(token)} — not submitted, "
                 "already drained, or the store was closed"
             )
-        got_vecs, _got_nbrs = fut.result()
+        with obs.trace.span("disk.drain_wait", store=self._obs_label):
+            got_vecs, _got_nbrs = fut.result()
+        if self._obs.enabled:
+            self._obs_counters["drains"].inc()
+            self._obs_inflight.set(inflight)
         return got_vecs
 
     def _traced_submit(self, ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -678,6 +741,8 @@ class DiskRecordStore:
                     off += len(data)
                     with self._lock:
                         self.warmed_bytes += len(data)
+                    if self._obs.enabled:
+                        self._obs_counters["warmed_bytes"].inc(len(data))
             finally:
                 os.close(fd)
 
@@ -747,6 +812,9 @@ class DiskRecordStore:
             }
 
     def reset_io_counters(self) -> None:
+        """Zero the store-local counters.  The mirrored ``disk.*``
+        registry families are NOT reset — registry counters stay
+        monotonic so telemetry contracts hold across benchmark resets."""
         with self._lock:
             self._reset_counters_locked()
 

@@ -247,17 +247,24 @@ def test_padding_reconciles_measured_disk_adaptive(serve_index, tiny_corpus):
 
 def test_concurrent_hammer_pipelined_disk(serve_index, tiny_corpus):
     """Satellite: mixed-tenant client threads through the pipelined disk
-    path.  Results stay correct and every counter family holds under
-    concurrency."""
+    path.  Results stay correct, every counter family holds under
+    concurrency, and MID-FLIGHT registry snapshots (taken by a sampler
+    thread while searches are in progress) satisfy the physical
+    invariants — counter-snapshot atomicity, not just final totals."""
+    from repro import obs
+
     _, _, queries = tiny_corpus
-    engine = GateANNEngine.load(
-        serve_index, store_tier="disk", cache_budget_bytes=48 * RECORD,
-        cache_policy="adaptive", refresh_every=2,
-    )
+    reg = obs.MetricsRegistry(enabled=True)
+    with obs.use_registry(reg):
+        engine = GateANNEngine.load(
+            serve_index, store_tier="disk", cache_budget_bytes=48 * RECORD,
+            cache_policy="adaptive", refresh_every=2,
+        )
     store = engine.measured_store()
     rag = _rag(engine, bucket_sizes=(4, 8), depth=2)
     n_threads, per_thread = 6, 4
     results, errs = {}, []
+    snaps, stop = [], threading.Event()
 
     def client(tid):
         try:
@@ -269,14 +276,24 @@ def test_concurrent_hammer_pipelined_disk(serve_index, tiny_corpus):
         except Exception as e:  # pragma: no cover
             errs.append(e)
 
-    with ServeFrontend(rag, _tenants(), max_batch=8,
-                       batch_window_s=0.002) as srv:
+    def sampler():
+        while not stop.is_set():
+            snaps.append(reg.snapshot())
+            time.sleep(0.01)
+
+    with obs.use_registry(reg), \
+            ServeFrontend(rag, _tenants(), max_batch=8,
+                          batch_window_s=0.002) as srv:
         threads = [threading.Thread(target=client, args=(t,))
                    for t in range(n_threads)]
+        smp = threading.Thread(target=sampler)
+        smp.start()
         for t in threads:
             t.start()
         for t in threads:
             t.join()
+        stop.set()
+        smp.join(timeout=10.0)
         assert not errs, errs
         rep = srv.io_report()
     assert rep["completed"] == n_threads * per_thread
@@ -287,6 +304,27 @@ def test_concurrent_hammer_pipelined_disk(serve_index, tiny_corpus):
     assert rag.measured_reads == rag.served_ios + rag.padding_ios
     c = store.io_counters()
     assert c["unique_sectors_read"] <= c["records_read"]
+
+    # snapshot atomicity: EVERY mid-flight snapshot (registry state with
+    # reads in flight) keeps the physical invariant — never more unique
+    # sectors than requested records
+    def fam_total(snap, name):
+        fam = snap.get(name)
+        return fam["total"] if fam else 0
+
+    assert snaps, "sampler took no snapshots"
+    for snap in snaps:
+        assert fam_total(snap, "disk.unique_sectors_read") <= \
+            fam_total(snap, "disk.records_read")
+    # final registry totals reconcile bit-exactly with the store's own
+    # measured counters (no reset ran, so the monotonic families match)
+    for key in ("records_read", "pages_read", "unique_sectors_read",
+                "syscalls", "read_rounds"):
+        assert reg.family_total(f"disk.{key}") == c[key], key
+    assert reg.family_total("disk.abandoned_tokens") == 0
+    # registry search-side total == store-side total (drift == 0 in
+    # registry form: slow-tier dispatches are exactly the records read)
+    assert reg.family_total("search.ios", tier="disk") == c["records_read"]
     if store.io_mode == "preadv":
         assert (c["read_rounds"] <= c["syscalls"]
                 <= c["read_rounds"] * store.n_shards)
