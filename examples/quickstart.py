@@ -23,13 +23,13 @@ labels = uniform_labels(N, 10, seed=0)
 queries = make_queries(corpus, NQ, seed=1)
 
 # 2. Build once: Vamana graph + PQ codes + neighbor store + filter store.
-t0 = time.time()
+t0 = time.perf_counter()
 engine = GateANNEngine.build(
     corpus,
     config=EngineConfig(degree=32, build_l=64, pq_chunks=8, r_max=16),
     labels=labels,
 )
-print(f"built index for N={N} in {time.time()-t0:.0f}s")
+print(f"built index for N={N} in {time.perf_counter()-t0:.0f}s")
 print("memory:", engine.memory_report())
 
 # 3. Search with a 10%-selectivity equality predicate, in every mode.
@@ -76,10 +76,10 @@ for n_records in (0, 256, 1024):
 import os, tempfile
 
 path = os.path.join(tempfile.mkdtemp(), "quickstart.gann")
-t0 = time.time()
+t0 = time.perf_counter()
 engine.save(path)
 print(f"\nsaved index -> {path} ({os.path.getsize(path)//1024} KiB) "
-      f"in {time.time()-t0:.1f}s")
+      f"in {time.perf_counter()-t0:.1f}s")
 
 disk = GateANNEngine.load(path, store_tier="disk")  # no rebuild, no retrain
 store = disk.record_store

@@ -62,7 +62,7 @@ reqs = [
     for i in range(4)
 ]
 
-t0 = time.time()
+t0 = time.perf_counter()
 tokens, stats = server.generate(reqs, max_new_tokens=8)
 ios = float(np.mean(np.asarray(stats.n_ios)))
 tun = float(np.mean(np.asarray(stats.n_tunnels)))
@@ -76,6 +76,6 @@ server.retrieve(reqs)
 rep = server.io_report()
 print(f"after adaptation: hit rate {rep['last_batch_hit_rate']:.2f} "
       f"(refreshes={rep['cache_refreshes']}, partitions={rep['cache_partitions']})")
-print(f"generated {tokens.shape[1]} tokens per request in {time.time()-t0:.0f}s:")
+print(f"generated {tokens.shape[1]} tokens per request in {time.perf_counter()-t0:.0f}s:")
 for i, row in enumerate(tokens):
     print(f"  request {i}: {row.tolist()}")

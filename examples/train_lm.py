@@ -55,22 +55,26 @@ def main():
     step_fn = jax.jit(make_train_step(CFG, NULL_LAYOUT, hp))
     ds = TokenStreamConfig(vocab_size=CFG.vocab_size, seq_len=args.seq_len,
                            global_batch=args.batch, seed=0)
-    t0 = time.time()
+    t0 = time.perf_counter()
     first = None
-    for step in range(int(state.step), args.steps):
+    start_step = int(state.step)  # snapshot: state is reassigned in the loop
+    if start_step >= args.steps:
+        print(f"already trained to step {start_step}; nothing to do")
+        return
+    for step in range(start_step, args.steps):
         batch = jax.tree.map(jnp.asarray, batch_at_step(ds, step))
         state, metrics = step_fn(state, batch)
         loss = float(metrics["loss"])
         first = loss if first is None else first
         if step % 20 == 0 or step == args.steps - 1:
-            tput = args.batch * args.seq_len / max((time.time() - t0) / (step - int(state.step) + 1), 1e-9)
+            tput = args.batch * args.seq_len / max((time.perf_counter() - t0) / (step - start_step + 1), 1e-9)
             print(f"step {step:4d}  loss {loss:.4f}  gnorm "
                   f"{float(metrics['grad_norm']):7.2f}  lr {float(metrics['lr']):.2e}",
                   flush=True)
         if step and step % 100 == 0:
             ckpt.save(step, state)  # async
     ckpt.save(args.steps, state, blocking=True)
-    print(f"done: loss {first:.3f} -> {loss:.3f} in {time.time()-t0:.0f}s")
+    print(f"done: loss {first:.3f} -> {loss:.3f} in {time.perf_counter()-t0:.0f}s")
     assert loss < first, "loss did not improve"
 
 

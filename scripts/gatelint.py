@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""gatelint — run the repo's static analysis rules over a tree.
+
+Usage:
+    python scripts/gatelint.py src/                      # lint, exit 1 on findings
+    python scripts/gatelint.py src/ tests/ --json        # machine-readable output
+    python scripts/gatelint.py src/ --baseline analysis_baseline.json
+    python scripts/gatelint.py --explain token-leak      # rule rationale
+    python scripts/gatelint.py --list-rules
+
+Pure AST — no jax/numpy import, suitable for a <30 s CI gate.
+Exit codes: 0 clean, 1 unsuppressed findings, 2 usage error.
+"""
+import argparse
+import json
+import os
+import sys
+import textwrap
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+)
+
+from repro.analysis import core  # noqa: E402
+
+
+def _explain(rule_id: str) -> int:
+    rule = core.RULES.get(rule_id)
+    if rule is None:
+        print(f"unknown rule: {rule_id}", file=sys.stderr)
+        print("known rules: " + ", ".join(sorted(core.RULES)), file=sys.stderr)
+        return 2
+    print(f"{rule.id}  [{rule.family}]")
+    print(f"  {rule.summary}\n")
+    print(textwrap.fill(rule.rationale, width=78,
+                        initial_indent="  ", subsequent_indent="  "))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="gatelint",
+        description="project-specific static analysis: lock discipline, "
+                    "trace hygiene, timing policy, I/O-token lifecycle",
+    )
+    ap.add_argument("paths", nargs="*", help="files or directories to lint")
+    ap.add_argument("--baseline", metavar="FILE",
+                    help="findings baseline (analysis_baseline.json)")
+    ap.add_argument("--json", action="store_true", dest="json_out",
+                    help="emit findings as JSON on stdout")
+    ap.add_argument("--explain", metavar="RULE",
+                    help="print the rationale for one rule and exit")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="list rule ids and summaries and exit")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print suppressed/baselined findings")
+    args = ap.parse_args(argv)
+
+    if args.explain:
+        return _explain(args.explain)
+    if args.list_rules:
+        for rule in sorted(core.RULES.values(), key=lambda r: r.id):
+            print(f"{rule.id:28s} [{rule.family}] {rule.summary}")
+        return 0
+    if not args.paths:
+        ap.print_usage(sys.stderr)
+        print("gatelint: error: no paths given", file=sys.stderr)
+        return 2
+
+    findings = core.lint_paths(args.paths)
+    if args.baseline:
+        core.apply_baseline(findings, core.load_baseline(args.baseline))
+
+    live = [f for f in findings if not f.suppressed and not f.baselined]
+    if args.json_out:
+        doc = {
+            "findings": [f.to_json() for f in
+                         (findings if args.show_suppressed else live)],
+            "summary": core.summarize(findings),
+        }
+        print(json.dumps(doc, indent=2))
+    else:
+        shown = findings if args.show_suppressed else live
+        for f in shown:
+            tag = ""
+            if f.suppressed:
+                tag = f"  [suppressed: {f.suppress_reason or 'NO REASON'}]"
+            elif f.baselined:
+                tag = "  [baselined]"
+            print(f.render() + tag)
+        s = core.summarize(findings)
+        print(f"gatelint: {s['live']} finding(s) "
+              f"({s['suppressed']} suppressed, {s['baselined']} baselined) "
+              f"across {len(args.paths)} path(s)")
+    return 1 if live else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

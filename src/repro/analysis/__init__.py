@@ -1,0 +1,29 @@
+"""gatelint — project-specific static analysis + lockdep runtime recorder.
+
+Pure stdlib (ast/json/re/threading): importing this package must never
+pull in jax or numpy, so the CI lint job runs on a bare interpreter.
+
+Static rules (see ``core.RULES`` / ``scripts/gatelint.py --explain``):
+
+  * ``lock-guarded-write``   — lock discipline on guarded attributes
+  * ``trace-host-branch``    — Python control flow on traced values
+  * ``trace-dynamic-shape``  — data-dependent shapes in jitted loops
+  * ``trace-unseeded-rng``   — host RNG baked in at trace time
+  * ``timing-wallclock``     — durations off time.time/monotonic
+  * ``token-leak``           — submit() tokens that never drain
+
+Runtime companion: :mod:`repro.analysis.lockdep`.
+"""
+from repro.analysis.core import (  # noqa: F401
+    RULES,
+    Finding,
+    apply_baseline,
+    lint_paths,
+    lint_source,
+    load_baseline,
+    summarize,
+)
+from repro.analysis.lockdep import (  # noqa: F401
+    LockOrderRecorder,
+    instrument_disk_store,
+)

@@ -1,0 +1,355 @@
+"""gatelint core — findings, suppressions, baseline, and the rule registry.
+
+The analysis package is **pure stdlib AST**: importing it (or running
+``scripts/gatelint.py``) must never pull in jax/numpy, so the CI gate
+runs in seconds on a bare interpreter.  Each rule module exposes
+``check(tree, source, path) -> list[Finding]``; this module owns the
+shared plumbing:
+
+  * :class:`Finding` — one diagnostic, with file:line, rule id, message.
+  * inline suppressions — ``# gatelint: disable=<rule>[,<rule>] — reason``
+    on the flagged line.  The reason is mandatory: a reasonless pragma
+    still suppresses (so CI stays green while someone writes the
+    justification) but raises its own ``suppression-missing-reason``
+    finding, as does a pragma naming a rule that doesn't exist.
+  * the findings baseline — ``analysis_baseline.json`` entries of
+    ``{"path", "rule", "count", "reason"}`` absorb up to ``count``
+    findings of that rule in that file (line-insensitive, so unrelated
+    edits never invalidate the baseline).  Findings beyond the allowance
+    surface normally.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    family: str
+    summary: str
+    rationale: str
+
+
+RULES: dict[str, Rule] = {
+    r.id: r
+    for r in [
+        Rule(
+            id="lock-guarded-write",
+            family="lock-discipline",
+            summary="read-modify-write of a lock-guarded attribute outside "
+                    "its `with self.<lock>:` block",
+            rationale=(
+                "Counter attributes declared in a `*_locked` initializer "
+                "(e.g. `_reset_counters_locked`) or annotated "
+                "`# guarded by _lock` are shared across threads — the disk "
+                "store's measured counters advance from reader-pool "
+                "threads, the serve front end's inflight map from client "
+                "threads.  A `self.x += 1`, `self.d[k] = v`, or "
+                "`self.q.append(...)` outside the guarding `with` block is "
+                "a lost-update race: it reproduces only under the 6-thread "
+                "hammer, and then only sometimes.  Methods whose name ends "
+                "in `_locked` are exempt (the caller holds the lock by "
+                "convention), as is `__init__` (the object is not shared "
+                "yet)."
+            ),
+        ),
+        Rule(
+            id="trace-host-branch",
+            family="trace-hygiene",
+            summary="Python `if`/`while` on a traced value inside a jitted "
+                    "loop body",
+            rationale=(
+                "Bodies passed to `lax.while_loop`/`scan`/`fori_loop` (and "
+                "`@jax.jit` functions) trace once: a Python branch on a "
+                "traced array raises ConcretizationTypeError at best, or "
+                "silently bakes one branch into the compiled loop at "
+                "worst.  Branching on trace-time statics is fine — config "
+                "attributes, `.shape`/`.ndim`/`.dtype`, `is None` checks — "
+                "and the rule exempts those; it fires only when the test "
+                "expression reaches a value derived from the body's own "
+                "(traced) parameters.  Use `jnp.where`/`lax.cond` instead."
+            ),
+        ),
+        Rule(
+            id="trace-dynamic-shape",
+            family="trace-hygiene",
+            summary="data-dependent output shape inside a jitted loop body",
+            rationale=(
+                "`nonzero`/`flatnonzero`/`argwhere`/`unique` without "
+                "`size=`, and one-argument `where(cond)`, produce shapes "
+                "that depend on runtime values — inside a traced loop "
+                "carry that is a retrace per shape (or an outright error). "
+                "The repo's fixed-shape discipline (bucketed batch sizes, "
+                "padded frontier slots, `n_slots`-row cache blocks) exists "
+                "so jit never retraces mid-serve; pass `size=`/`fill_value=` "
+                "or restructure with masks."
+            ),
+        ),
+        Rule(
+            id="trace-unseeded-rng",
+            family="trace-hygiene",
+            summary="host RNG (`np.random.*` / `random.*`) inside a jitted "
+                    "path",
+            rationale=(
+                "A host RNG call inside a traced body executes once at "
+                "trace time and its value is baked into the compiled "
+                "executable — every subsequent call replays the same "
+                "'random' constant, and results stop being reproducible "
+                "from a seed.  Thread `jax.random` keys through the loop "
+                "carry instead; host-side np.random is fine outside traced "
+                "code when seeded explicitly."
+            ),
+        ),
+        Rule(
+            id="timing-wallclock",
+            family="timing-policy",
+            summary="`time.time()`/`time.monotonic()` used to compute a "
+                    "duration (or fed to an obs span)",
+            rationale=(
+                "Span math is on `time.perf_counter()` (PR 8 policy): "
+                "wall clock steps under NTP — a step backwards mid-request "
+                "produces negative spans, and the serve-latency histograms "
+                "quietly corrupt.  `time.monotonic()` is step-immune but "
+                "coarser than perf_counter on some platforms and its use "
+                "for durations splits the codebase across two clocks; the "
+                "policy is one clock for every duration.  Absolute "
+                "timestamps (logging when something happened) may still "
+                "use time.time()."
+            ),
+        ),
+        Rule(
+            id="token-leak",
+            family="io-token-lifecycle",
+            summary="a `submit()` I/O token that does not reach `drain()` / "
+                    "`abandon_pending()` on every path",
+            rationale=(
+                "`DiskRecordStore.submit()` pins a reader-pool slot and a "
+                "completion-queue entry until the token is drained or "
+                "abandoned.  A token that is dropped (result discarded, "
+                "used on only one branch, or bypassed by an exception "
+                "between submit and drain) leaks that slot until close() — "
+                "under serving load the pool starves and every later "
+                "search stalls.  Drain on all paths, or wrap in "
+                "try/finally with `drain`/`abandon_pending` in the "
+                "`finally`.  Executor pools (`pool.submit`) are exempt: "
+                "their futures have no store-side lifecycle."
+            ),
+        ),
+        Rule(
+            id="suppression-missing-reason",
+            family="meta",
+            summary="a `# gatelint: disable=` pragma without a justification "
+                    "(or naming an unknown rule)",
+            rationale=(
+                "Suppressions are part of the correctness record: the next "
+                "builder must be able to tell a justified exception from a "
+                "silenced bug.  Write "
+                "`# gatelint: disable=<rule> — <why this is safe>`."
+            ),
+        ),
+        Rule(
+            id="parse-error",
+            family="meta",
+            summary="file could not be parsed as Python",
+            rationale=(
+                "gatelint runs on the AST; a file that does not parse "
+                "cannot be checked and is reported instead of skipped "
+                "(a syntax error reaching CI is itself a finding)."
+            ),
+        ),
+    ]
+}
+
+
+@dataclasses.dataclass
+class Finding:
+    path: str
+    line: int
+    rule: str
+    message: str
+    suppressed: bool = False
+    suppress_reason: str | None = None
+    baselined: bool = False
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+    def to_json(self) -> dict:
+        out = {
+            "file": self.path,
+            "line": self.line,
+            "rule": self.rule,
+            "message": self.message,
+        }
+        if self.suppressed:
+            out["suppressed"] = True
+            out["suppress_reason"] = self.suppress_reason
+        if self.baselined:
+            out["baselined"] = True
+        return out
+
+
+# ``—`` (em dash) is the documented separator; ``--`` is accepted so the
+# pragma can be typed on a keyboard without compose keys.
+_SUPPRESS_RE = re.compile(
+    r"#\s*gatelint:\s*disable=([A-Za-z0-9_\-, ]+?)\s*(?:(?:—|--)\s*(\S.*))?$"
+)
+
+
+def parse_suppressions(source: str) -> dict[int, tuple[set, str | None]]:
+    """line number -> (rule ids suppressed on that line, reason or None)."""
+    out: dict[int, tuple[set, str | None]] = {}
+    for i, line in enumerate(source.splitlines(), 1):
+        m = _SUPPRESS_RE.search(line)
+        if m:
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            out[i] = (rules, m.group(2))
+    return out
+
+
+def _checkers():
+    # imported lazily so a single rule module failing to import doesn't
+    # take the registry down with it at module-import time
+    from repro.analysis import locks, timing, tokens, trace
+
+    return (locks.check, trace.check, timing.check, tokens.check)
+
+
+def lint_source(source: str, path: str) -> list[Finding]:
+    """All findings for one file's source, suppressions applied."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 1, "parse-error", str(e.msg))]
+    findings: list[Finding] = []
+    for check in _checkers():
+        findings.extend(check(tree, source, path))
+
+    sup = parse_suppressions(source)
+    for f in findings:
+        hit = sup.get(f.line)
+        if hit and f.rule in hit[0]:
+            f.suppressed = True
+            f.suppress_reason = hit[1]
+    for line, (rules, reason) in sorted(sup.items()):
+        unknown = sorted(r for r in rules if r not in RULES)
+        if unknown:
+            findings.append(Finding(
+                path, line, "suppression-missing-reason",
+                f"suppression names unknown rule(s): {', '.join(unknown)}",
+            ))
+        if not reason:
+            findings.append(Finding(
+                path, line, "suppression-missing-reason",
+                "suppression has no justification — write "
+                "`# gatelint: disable=<rule> — reason`",
+            ))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def iter_py_files(paths) -> list[str]:
+    out = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(
+                d for d in dirs
+                if not d.startswith(".") and d != "__pycache__"
+            )
+            out.extend(
+                os.path.join(root, f) for f in sorted(files)
+                if f.endswith(".py")
+            )
+    return out
+
+
+def _norm(path: str) -> str:
+    rel = os.path.relpath(path)
+    return rel.replace(os.sep, "/")
+
+
+def lint_paths(paths) -> list[Finding]:
+    findings: list[Finding] = []
+    for fp in iter_py_files(paths):
+        with open(fp, "r", encoding="utf-8") as f:
+            source = f.read()
+        findings.extend(lint_source(source, _norm(fp)))
+    return findings
+
+
+# -- baseline ---------------------------------------------------------------
+def load_baseline(path: str) -> list[dict]:
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    if doc.get("version") != 1:
+        raise ValueError(f"unsupported baseline version: {doc.get('version')}")
+    entries = doc["entries"]
+    for e in entries:
+        for key in ("path", "rule", "count", "reason"):
+            if key not in e:
+                raise ValueError(f"baseline entry missing {key!r}: {e}")
+    return entries
+
+
+def apply_baseline(findings: list[Finding], entries: list[dict]) -> None:
+    """Mark findings covered by the baseline allowance (in place).
+
+    Matching is (path, rule) with a per-entry count — deliberately
+    line-insensitive so unrelated edits to a baselined file don't
+    invalidate the entry.  Findings beyond ``count`` stay live.
+    """
+    budget = {(e["path"], e["rule"]): int(e["count"]) for e in entries}
+    for f in findings:
+        if f.suppressed:
+            continue
+        key = (f.path, f.rule)
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+            f.baselined = True
+
+
+def summarize(findings: list[Finding]) -> dict:
+    live = [f for f in findings if not f.suppressed and not f.baselined]
+    by_rule: dict[str, int] = {}
+    for f in live:
+        by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+    return {
+        "total": len(findings),
+        "live": len(live),
+        "suppressed": sum(1 for f in findings if f.suppressed),
+        "baselined": sum(1 for f in findings if f.baselined),
+        "by_rule": dict(sorted(by_rule.items())),
+    }
+
+
+# -- small shared AST helpers ----------------------------------------------
+def dotted(node: ast.AST) -> str:
+    """Best-effort dotted-name rendering: ``self._pool`` -> 'self._pool'."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    if isinstance(node, ast.Call):
+        return dotted(node.func)
+    if isinstance(node, ast.Subscript):
+        return dotted(node.value)
+    return ""
+
+
+def func_name(call: ast.Call) -> str:
+    """The called name without its receiver: ``a.b.submit(...)`` -> 'submit'."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""

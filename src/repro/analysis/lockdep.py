@@ -1,0 +1,148 @@
+"""lockdep-lite — runtime lock-acquisition-order recording.
+
+Static analysis can prove a mutation happened under *a* lock; it cannot
+prove two locks are always taken in a consistent order.  This module
+wraps locks in recording proxies and builds a name-keyed edge graph of
+observed nesting (``A -> B`` means "acquired B while holding A").  A
+pair of edges ``A -> B`` and ``B -> A`` — or a self-edge ``A -> A``
+across two *instances* of the same lock class — is a lock-order
+inversion: two threads interleaving those acquisitions can deadlock.
+
+The serve hammer runs under this recorder (nightly) to pin the store's
+invariant: ``DiskRecordStore._lock`` and the per-segment ``_open_lock``
+are never nested in either direction (fd opening happens before counter
+accounting, and the adjacency path takes ``_lock`` only).
+
+Pure stdlib; safe to import from tests without jax.
+"""
+from __future__ import annotations
+
+import threading
+
+
+class _WrappedLock:
+    """Proxy for a Lock/RLock that reports acquire/release to a recorder."""
+
+    def __init__(self, recorder: "LockOrderRecorder", lock, name: str):
+        self._rec = recorder
+        self._lock = lock
+        self._name = name
+
+    def acquire(self, *args, **kwargs):
+        got = self._lock.acquire(*args, **kwargs)
+        if got:
+            self._rec._note_acquire(self._name)
+        return got
+
+    def release(self):
+        self._rec._note_release(self._name)
+        self._lock.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def locked(self):
+        return self._lock.locked()
+
+    def __repr__(self):
+        return f"<WrappedLock {self._name} wrapping {self._lock!r}>"
+
+
+class LockOrderRecorder:
+    """Records per-thread lock nesting; reports order inversions.
+
+    Usage::
+
+        rec = LockOrderRecorder()
+        obj._lock = rec.wrap(obj._lock, "Thing._lock")
+        ... exercise under threads ...
+        rec.assert_no_inversions()
+    """
+
+    def __init__(self):
+        self._tls = threading.local()
+        self._meta = threading.Lock()
+        # (held_name, acquired_name) -> observation count
+        self._edges: dict[tuple, int] = {}
+
+    def wrap(self, lock, name: str) -> _WrappedLock:
+        return _WrappedLock(self, lock, name)
+
+    def _stack(self) -> list:
+        stack = getattr(self._tls, "stack", None)
+        if stack is None:
+            stack = []
+            self._tls.stack = stack
+        return stack
+
+    def _note_acquire(self, name: str) -> None:
+        stack = self._stack()
+        if stack:
+            with self._meta:
+                for held in set(stack):
+                    key = (held, name)
+                    self._edges[key] = self._edges.get(key, 0) + 1
+        stack.append(name)
+
+    def _note_release(self, name: str) -> None:
+        stack = self._stack()
+        # releases are LIFO in `with`-discipline code, but tolerate
+        # out-of-order release by removing the most recent occurrence
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] == name:
+                del stack[i]
+                return
+
+    def edges(self) -> dict:
+        with self._meta:
+            return dict(self._edges)
+
+    def inversions(self) -> list:
+        """Order-inverted name pairs: both A->B and B->A observed.
+
+        A self-edge (A while holding A) is reported too — with
+        non-reentrant locks that is nested acquisition of two instances
+        sharing a class, which deadlocks the moment two threads take
+        them in opposite instance order.
+        """
+        edges = self.edges()
+        out = []
+        for (a, b) in sorted(edges):
+            if a == b:
+                out.append((a, b))
+            elif a < b and (b, a) in edges:
+                out.append((a, b))
+        return out
+
+    def assert_no_inversions(self) -> None:
+        inv = self.inversions()
+        if inv:
+            edges = self.edges()
+            detail = "; ".join(
+                f"{a} <-> {b} (counts {edges.get((a, b), 0)}/"
+                f"{edges.get((b, a), 0)})"
+                for a, b in inv
+            )
+            raise AssertionError(f"lock-order inversions observed: {detail}")
+
+
+def instrument_disk_store(recorder: LockOrderRecorder, store) -> None:
+    """Wrap a DiskRecordStore's counter lock and per-segment open locks.
+
+    Duck-typed on purpose (no import of repro.store here): anything with
+    a ``_lock`` and a ``_segments`` list whose items carry ``_open_lock``
+    gets the same treatment.
+    """
+    store._lock = recorder.wrap(store._lock, type(store).__name__ + "._lock")
+    for seg in getattr(store, "_segments", []):
+        if hasattr(seg, "_open_lock"):
+            seg._open_lock = recorder.wrap(
+                seg._open_lock, type(seg).__name__ + "._open_lock")
+
+
+__all__ = ["LockOrderRecorder", "instrument_disk_store"]

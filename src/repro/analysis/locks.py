@@ -1,0 +1,225 @@
+"""lock-guarded-write — counter/state mutations outside their lock.
+
+Per class, the guarded-attribute set is inferred from two sources:
+
+  1. any method whose name ends in ``_locked`` (the repo convention for
+     "caller holds the lock"): every ``self.x = ...`` target it assigns
+     is guarded by ``_lock`` (e.g. ``DiskRecordStore._reset_counters_locked``
+     declares the measured I/O counters);
+  2. an explicit trailing ``# guarded by <lockname>`` comment on an
+     attribute assignment — either ``self.x = ...`` in a method or a
+     class-body field line (dataclass style).
+
+The rule then flags, in any method that is not ``__init__`` /
+``__post_init__`` / ``*_locked``, a read-modify-write of a guarded
+attribute while the guarding ``with self.<lockname>:`` is not held:
+
+  * ``self.x += 1`` / ``self.x[k] += v``   (augmented assign)
+  * ``self.x = f(self.x)``                  (assign reading itself)
+  * ``self.x[k] = v`` / ``del self.x[k]``   (container store/delete)
+  * ``self.x.append(...)`` and friends      (mutator method calls)
+
+Plain overwrites (``self.x = 0`` with no self-read) are deliberately
+not flagged — they are atomic under the GIL and common in teardown.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.core import Finding
+
+# the phrase may sit anywhere in a trailing comment:
+#   self._pending = {}  # guarded by _lock
+#   self._inflight = 0  # live counter, not reset; guarded by _lock
+_GUARD_RE = re.compile(r"#.*\bguarded by\s+(\w+)")
+
+_MUTATORS = {
+    "append", "appendleft", "extend", "extendleft", "insert", "pop",
+    "popleft", "popitem", "remove", "clear", "update", "add", "discard",
+    "setdefault", "move_to_end", "sort", "reverse",
+}
+
+_EXEMPT_METHODS = {"__init__", "__post_init__", "__new__"}
+
+
+def _self_attr(node: ast.AST) -> str | None:
+    """'x' for a ``self.x`` attribute node, else None."""
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _guard_comment(source_lines: list[str], lineno: int) -> str | None:
+    if 1 <= lineno <= len(source_lines):
+        m = _GUARD_RE.search(source_lines[lineno - 1])
+        if m:
+            return m.group(1)
+    return None
+
+
+def _infer_guarded(cls: ast.ClassDef, source_lines: list[str]) -> dict[str, str]:
+    """attr name -> guarding lock attr name."""
+    guarded: dict[str, str] = {}
+    # class-body field annotations (dataclass style)
+    for stmt in cls.body:
+        target = None
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
+            target = stmt.target.id
+        elif (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)):
+            target = stmt.targets[0].id
+        if target:
+            lock = _guard_comment(source_lines, stmt.lineno)
+            if lock:
+                guarded[target] = lock
+    for stmt in cls.body:
+        if not isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        locked_init = stmt.name.endswith("_locked")
+        for node in ast.walk(stmt):
+            targets: list[tuple[ast.AST, int]] = []
+            if isinstance(node, ast.Assign):
+                targets = [(t, node.lineno) for t in node.targets]
+            elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+                targets = [(node.target, node.lineno)]
+            for t, lineno in targets:
+                attr = _self_attr(t)
+                if attr is None:
+                    continue
+                lock = _guard_comment(source_lines, lineno)
+                if lock:
+                    guarded[attr] = lock
+                elif locked_init:
+                    guarded.setdefault(attr, "_lock")
+    return guarded
+
+
+def _reads_self_attr(expr: ast.AST, attr: str) -> bool:
+    for node in ast.walk(expr):
+        if _self_attr(node) == attr:
+            return True
+    return False
+
+
+class _MethodScan:
+    """Walk one method body tracking which ``self.<lock>`` names are held."""
+
+    def __init__(self, guarded: dict[str, str], cls_name: str,
+                 method_name: str, path: str):
+        self.guarded = guarded
+        self.cls_name = cls_name
+        self.method_name = method_name
+        self.path = path
+        self.findings: list[Finding] = []
+
+    def run(self, body: list[ast.stmt]) -> list[Finding]:
+        self._stmts(body, held=frozenset())
+        return self.findings
+
+    def _stmts(self, stmts: list[ast.stmt], held: frozenset) -> None:
+        for stmt in stmts:
+            self._stmt(stmt, held)
+
+    def _stmt(self, stmt: ast.stmt, held: frozenset) -> None:
+        if isinstance(stmt, ast.With):
+            acquired = set()
+            for item in stmt.items:
+                attr = _self_attr(item.context_expr)
+                if attr:
+                    acquired.add(attr)
+            self._stmts(stmt.body, held | acquired)
+            return
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested def: conservatively treat as running without the lock
+            self._stmts(stmt.body, frozenset())
+            return
+        if isinstance(stmt, (ast.If, ast.While)):
+            self._check_expr(stmt.test, held)
+            self._stmts(stmt.body, held)
+            self._stmts(stmt.orelse, held)
+            return
+        if isinstance(stmt, ast.For):
+            self._check_expr(stmt.iter, held)
+            self._stmts(stmt.body, held)
+            self._stmts(stmt.orelse, held)
+            return
+        if isinstance(stmt, ast.Try):
+            self._stmts(stmt.body, held)
+            for h in stmt.handlers:
+                self._stmts(h.body, held)
+            self._stmts(stmt.orelse, held)
+            self._stmts(stmt.finalbody, held)
+            return
+        # leaf statements
+        if isinstance(stmt, ast.AugAssign):
+            attr = _self_attr(stmt.target)
+            if attr is None and isinstance(stmt.target, ast.Subscript):
+                attr = _self_attr(stmt.target.value)
+            self._flag_if_unheld(attr, held, stmt.lineno, "augmented assignment")
+            self._check_expr(stmt.value, held)
+            return
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                attr = _self_attr(t)
+                if attr is not None and _reads_self_attr(stmt.value, attr):
+                    self._flag_if_unheld(attr, held, stmt.lineno,
+                                         "read-modify-write assignment")
+                if isinstance(t, ast.Subscript):
+                    sub_attr = _self_attr(t.value)
+                    self._flag_if_unheld(sub_attr, held, stmt.lineno,
+                                         "subscript store")
+            self._check_expr(stmt.value, held)
+            return
+        if isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                if isinstance(t, ast.Subscript):
+                    self._flag_if_unheld(_self_attr(t.value), held,
+                                         stmt.lineno, "subscript delete")
+            return
+        self._check_expr(stmt, held)
+
+    def _check_expr(self, node: ast.AST, held: frozenset) -> None:
+        """Find mutator calls on guarded attrs inside any expression."""
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Attribute):
+                if sub.func.attr in _MUTATORS:
+                    attr = _self_attr(sub.func.value)
+                    self._flag_if_unheld(attr, held, sub.lineno,
+                                         f".{sub.func.attr}() call")
+
+    def _flag_if_unheld(self, attr: str | None, held: frozenset,
+                        lineno: int, what: str) -> None:
+        if attr is None:
+            return
+        lock = self.guarded.get(attr)
+        if lock is None or lock in held:
+            return
+        self.findings.append(Finding(
+            self.path, lineno, "lock-guarded-write",
+            f"{self.cls_name}.{self.method_name}: {what} on "
+            f"`self.{attr}` (guarded by `{lock}`) outside "
+            f"`with self.{lock}:`",
+        ))
+
+
+def check(tree: ast.AST, source: str, path: str) -> list[Finding]:
+    source_lines = source.splitlines()
+    findings: list[Finding] = []
+    for cls in [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]:
+        guarded = _infer_guarded(cls, source_lines)
+        if not guarded:
+            continue
+        for stmt in cls.body:
+            if not isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if stmt.name in _EXEMPT_METHODS or stmt.name.endswith("_locked"):
+                continue
+            scan = _MethodScan(guarded, cls.name, stmt.name, path)
+            findings.extend(scan.run(stmt.body))
+    return findings
+
+
+__all__ = ["check"]

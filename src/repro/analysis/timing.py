@@ -1,0 +1,233 @@
+"""timing-wallclock — wall-clock reads where a duration is computed.
+
+The PR 8 policy: every duration (span math, latency accounting, elapsed
+prints) is on ``time.perf_counter()``.  ``time.time()`` and
+``time.monotonic()`` remain legal for *absolute* timestamps, so the rule
+only fires when the wall-clock value participates in duration math:
+
+  * a subtraction with a wall-clock call (or a value assigned from one)
+    on either side: ``time.time() - t0``, ``dt = now - start``;
+  * an augmented ``-=`` involving one;
+  * a tainted value passed to an obs-style recording call
+    (``observe``/``record``/``span``/``push``/``add_sample``).
+
+Taint is simple forward flow per function scope: names and ``self.x``
+attrs assigned from a banned clock call (or from another tainted value)
+are tainted.  Import aliases are honored (``from time import time as
+now`` still counts; ``from time import perf_counter as time`` does
+not).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, dotted
+
+_BANNED = {"time", "monotonic"}
+_OBS_SINKS = {"observe", "record", "span", "push", "add_sample"}
+
+
+def _banned_aliases(tree: ast.AST) -> tuple[set, set]:
+    """(dotted call names that are banned clocks, module aliases of `time`)."""
+    banned_calls = set()
+    time_modules = {"time"}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "time":
+                    time_modules.add(alias.asname or "time")
+        elif isinstance(node, ast.ImportFrom) and node.module == "time":
+            for alias in node.names:
+                if alias.name in _BANNED:
+                    banned_calls.add(alias.asname or alias.name)
+    return banned_calls, time_modules
+
+
+class _Clock:
+    def __init__(self, banned_calls: set, time_modules: set):
+        self.banned_calls = banned_calls
+        self.time_modules = time_modules
+
+    def is_banned_call(self, node: ast.AST) -> str | None:
+        if not isinstance(node, ast.Call):
+            return None
+        name = dotted(node.func)
+        parts = name.split(".")
+        if len(parts) == 2 and parts[0] in self.time_modules and parts[1] in _BANNED:
+            return name
+        if len(parts) == 1 and parts[0] in self.banned_calls:
+            return name
+        return None
+
+
+def _target_key(node: ast.AST) -> str | None:
+    """A stable key for taintable targets: bare names and self attrs."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if (isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return f"self.{node.attr}"
+    return None
+
+
+class _FuncScan:
+    def __init__(self, clock: _Clock, path: str, scope_name: str):
+        self.clock = clock
+        self.path = path
+        self.scope = scope_name
+        self.tainted: set = set()
+        self.findings: list[Finding] = []
+
+    def _expr_taint(self, expr: ast.AST) -> str | None:
+        """The banned clock name if expr carries wall-clock taint."""
+        for node in ast.walk(expr):
+            name = self.clock.is_banned_call(node)
+            if name:
+                return name
+            key = _target_key(node)
+            if key is not None and key in self.tainted:
+                if isinstance(node, ast.Name) and not isinstance(node.ctx, ast.Load):
+                    continue
+                return key
+        return None
+
+    def scan(self, stmts: list) -> list[Finding]:
+        for stmt in stmts:
+            self._stmt(stmt)
+        return self.findings
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # separate scope; nested functions get their own scan
+            _FuncScan(self.clock, self.path,
+                      f"{self.scope}.{stmt.name}").scan(stmt.body)
+            return
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+            value = stmt.value
+            if value is not None:
+                self._check_expr(value)
+                src = self._expr_taint(value)
+                targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                           else [stmt.target])
+                if src is not None:
+                    for t in targets:
+                        key = _target_key(t)
+                        if key:
+                            self.tainted.add(key)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            self._check_expr(stmt.value)
+            if isinstance(stmt.op, ast.Sub):
+                src = self._expr_taint(stmt.value) or (
+                    _target_key(stmt.target)
+                    if _target_key(stmt.target) in self.tainted else None)
+                if src:
+                    self.findings.append(Finding(
+                        self.path, stmt.lineno, "timing-wallclock",
+                        f"duration computed from wall clock (`{src}`) — "
+                        "use time.perf_counter()",
+                    ))
+            if self._expr_taint(stmt.value):
+                key = _target_key(stmt.target)
+                if key:
+                    self.tainted.add(key)
+            return
+        # recurse into compound statements, checking embedded expressions
+        for child_block in self._blocks(stmt):
+            for s in child_block:
+                self._stmt(s)
+        for expr in self._exprs(stmt):
+            self._check_expr(expr)
+
+    @staticmethod
+    def _blocks(stmt: ast.stmt) -> list:
+        blocks = []
+        for field in ("body", "orelse", "finalbody"):
+            val = getattr(stmt, field, None)
+            if isinstance(val, list):
+                blocks.append(val)
+        for h in getattr(stmt, "handlers", []) or []:
+            blocks.append(h.body)
+        return blocks
+
+    @staticmethod
+    def _exprs(stmt: ast.stmt) -> list:
+        out = []
+        for field in ("test", "iter", "value"):
+            val = getattr(stmt, field, None)
+            if isinstance(val, ast.expr):
+                out.append(val)
+        for item in getattr(stmt, "items", []) or []:
+            out.append(item.context_expr)
+        return out
+
+    def _check_expr(self, expr: ast.AST) -> None:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Sub):
+                src = self._expr_taint(node.left) or self._expr_taint(node.right)
+                if src:
+                    self.findings.append(Finding(
+                        self.path, node.lineno, "timing-wallclock",
+                        f"duration computed from wall clock (`{src}`) — "
+                        "use time.perf_counter()",
+                    ))
+            if isinstance(node, ast.Call):
+                callee = dotted(node.func).split(".")[-1]
+                if callee in _OBS_SINKS:
+                    for a in list(node.args) + [kw.value for kw in node.keywords]:
+                        src = self._expr_taint(a)
+                        if src:
+                            self.findings.append(Finding(
+                                self.path, node.lineno, "timing-wallclock",
+                                f"wall-clock value (`{src}`) fed to "
+                                f"`{callee}()` — obs spans are on "
+                                "time.perf_counter()",
+                            ))
+                            break
+
+
+def check(tree: ast.AST, source: str, path: str) -> list[Finding]:
+    banned_calls, time_modules = _banned_aliases(tree)
+    clock = _Clock(banned_calls, time_modules)
+    findings: list[Finding] = []
+    # module level plus each top-level function/method get their own scope
+    _ModuleWalker(clock, path, findings).visit(tree)
+    # defs nested inside module-level compound statements can be reached
+    # twice (once via block recursion, once via the walker) — dedupe
+    seen: set = set()
+    unique = []
+    for f in findings:
+        key = (f.line, f.rule, f.message)
+        if key not in seen:
+            seen.add(key)
+            unique.append(f)
+    return unique
+
+
+class _ModuleWalker(ast.NodeVisitor):
+    def __init__(self, clock: _Clock, path: str, findings: list):
+        self.clock = clock
+        self.path = path
+        self.findings = findings
+
+    def visit_Module(self, node: ast.Module) -> None:
+        scan = _FuncScan(self.clock, self.path, "<module>")
+        top = [s for s in node.body
+               if not isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef))]
+        self.findings.extend(scan.scan(top))
+        self.generic_visit(node)
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.generic_visit(node)
+
+    def _visit_func(self, node) -> None:
+        self.findings.extend(
+            _FuncScan(self.clock, self.path, node.name).scan(node.body))
+        # do NOT generic_visit: _FuncScan recurses into nested defs itself
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+
+__all__ = ["check"]

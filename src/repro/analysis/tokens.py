@@ -1,0 +1,278 @@
+"""token-leak — every store submit() token reaches drain/abandon.
+
+Intraprocedural dataflow over each function body:
+
+  1. A *submission* is a call whose callee is ``submit``/``_host_submit``
+     on a receiver that is not an executor pool (receiver names
+     containing ``pool``/``executor``/``threads`` are exempt —
+     ``self._pool.submit(...)`` returns a Future with no store-side
+     lifecycle).
+  2. ``Expr``-statement submissions (result discarded on the floor) are
+     flagged immediately.
+  3. For ``token = submit(...)`` / ``token, nbrs = submit(...)``
+     assignments, the token must be *used* on every path from the
+     submission to function exit.  Any later use counts as resolution —
+     a ``drain(token)``/``abandon``, but also storing it in a pending
+     map, returning it, or passing it to another call (ownership
+     transfer; the new owner is checked at its own site).  The
+     all-paths check walks the statement list after the submission
+     (and outward through enclosing blocks): an ``if`` resolves only
+     when both arms (or a later statement) do; loop bodies are treated
+     as may-execute-again, so a use anywhere in an enclosing loop body
+     counts.
+  4. Exception edges: when the resolving use is itself a
+     ``drain``/``abandon`` call in the same block, any intervening
+     statement that makes a call may raise and skip the drain — unless
+     the drain sits in a ``finally`` or an except handler.  That is
+     flagged as a may-leak-on-exception finding.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, dotted, func_name
+
+_SUBMIT_NAMES = {"submit", "_host_submit"}
+_POOL_HINTS = ("pool", "executor", "threads")
+_RESOLVE_HINTS = ("drain", "abandon")
+
+
+def _is_store_submit(call: ast.Call) -> bool:
+    if func_name(call) not in _SUBMIT_NAMES:
+        return False
+    if isinstance(call.func, ast.Attribute):
+        receiver = dotted(call.func.value).lower()
+        if any(h in receiver for h in _POOL_HINTS):
+            return False
+    return True
+
+
+def _token_targets(assign: ast.Assign) -> list[str]:
+    """Token names bound by ``tok = submit(...)`` / ``tok, x = submit(...)``.
+
+    For tuple unpacking the token is by convention the first element
+    (``submit`` returns ``(token, neighbors)``).
+    """
+    if len(assign.targets) != 1:
+        return []
+    t = assign.targets[0]
+    if isinstance(t, ast.Name):
+        return [t.id]
+    if isinstance(t, (ast.Tuple, ast.List)) and t.elts:
+        first = t.elts[0]
+        if isinstance(first, ast.Name):
+            return [first.id]
+    return []
+
+
+def _uses_name(node: ast.AST, name: str) -> bool:
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.Name) and sub.id == name
+                and isinstance(sub.ctx, ast.Load)):
+            return True
+    return False
+
+
+def _contains_call(node: ast.AST) -> bool:
+    return any(isinstance(sub, ast.Call) for sub in ast.walk(node))
+
+
+class _Parents(ast.NodeVisitor):
+    """stmt -> (containing block list, index, owner stmt or function)."""
+
+    def __init__(self, fn):
+        self.blockinfo: dict[int, tuple[list, int, object]] = {}
+        self.loop_stack_of: dict[int, tuple] = {}
+        self._loops: list = []
+        self._walk_block(fn.body, fn)
+
+    def _walk_block(self, block: list, owner) -> None:
+        for i, stmt in enumerate(block):
+            self.blockinfo[id(stmt)] = (block, i, owner)
+            self.loop_stack_of[id(stmt)] = tuple(self._loops)
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # nested defs are separate dataflow scopes — analyzed on
+                # their own by check(); don't merge their blocks into ours
+                continue
+            is_loop = isinstance(stmt, (ast.For, ast.While, ast.AsyncFor))
+            if is_loop:
+                self._loops.append(stmt)
+            for field in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, field, None)
+                if isinstance(sub, list):
+                    self._walk_block(sub, stmt)
+            for h in getattr(stmt, "handlers", []) or []:
+                self._walk_block(h.body, stmt)
+            if is_loop:
+                self._loops.pop()
+
+
+def _covers(stmts: list, token: str) -> bool:
+    """True if every path through stmts uses `token` (or exits early)."""
+    for stmt in stmts:
+        if isinstance(stmt, (ast.Return, ast.Raise, ast.Continue, ast.Break)):
+            # early exit: a Return/Raise that uses the token resolves it;
+            # one that doesn't is an escape from this block — the caller
+            # (outer-continuation walk) accounts for what runs after.
+            return _uses_name(stmt, token)
+        if isinstance(stmt, ast.If):
+            if stmt.orelse:
+                if _covers(stmt.body, token) and _covers(stmt.orelse, token):
+                    return True
+            if _uses_name(stmt.test, token):
+                return True
+            continue
+        if isinstance(stmt, (ast.For, ast.While)):
+            # may execute zero times — only the header counts for sure
+            header = stmt.iter if isinstance(stmt, ast.For) else stmt.test
+            if _uses_name(header, token):
+                return True
+            continue
+        if isinstance(stmt, ast.Try):
+            if stmt.finalbody and _covers(stmt.finalbody, token):
+                return True
+            if _covers(stmt.body, token):
+                # resolved on the normal path; handlers own the error path
+                return True
+            continue
+        if _uses_name(stmt, token):
+            return True
+    return False
+
+
+def _in_raises_block(stmt, parents: "_Parents") -> bool:
+    node = stmt
+    while True:
+        info = parents.blockinfo.get(id(node))
+        if info is None:
+            return False
+        _, _, owner = info
+        if isinstance(owner, ast.With):
+            for item in owner.items:
+                if "raises" in dotted(item.context_expr):
+                    return True
+        if isinstance(owner, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return False
+        node = owner
+
+
+def _enclosing_finally_or_handler(stmt, parents: _Parents) -> bool:
+    node = stmt
+    while True:
+        info = parents.blockinfo.get(id(node))
+        if info is None:
+            return False
+        block, _, owner = info
+        if isinstance(owner, ast.Try):
+            if block is owner.finalbody:
+                return True
+            if any(block is h.body for h in owner.handlers):
+                return True
+        if isinstance(owner, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            return False
+        node = owner
+
+
+def _analyze_function(fn, path: str) -> list[Finding]:
+    findings: list[Finding] = []
+    parents = _Parents(fn)
+
+    for stmt in ast.walk(fn):
+        # discarded result: `store.submit(ids)` as a bare statement.
+        # Exempt submits under `with pytest.raises(...)`: the call is
+        # expected to raise, so no token is ever created.
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+            if (_is_store_submit(stmt.value)
+                    and id(stmt) in parents.blockinfo
+                    and not _in_raises_block(stmt, parents)):
+                findings.append(Finding(
+                    path, stmt.lineno, "token-leak",
+                    "submit() result discarded — the token must reach "
+                    "drain() or abandon_pending()",
+                ))
+            continue
+        if not (isinstance(stmt, ast.Assign)
+                and isinstance(stmt.value, ast.Call)
+                and _is_store_submit(stmt.value)):
+            continue
+        tokens = _token_targets(stmt)
+        if not tokens:
+            continue
+        token = tokens[0]
+        info = parents.blockinfo.get(id(stmt))
+        if info is None:
+            continue
+        block, idx, _ = info
+
+        # continuation: trailing statements of this block, then outward
+        # through enclosing blocks; enclosing loop bodies re-run in full
+        continuation: list = list(block[idx + 1:])
+        node = stmt
+        while True:
+            pinfo = parents.blockinfo.get(id(node))
+            if pinfo is None:
+                break
+            pblock, pidx, owner = pinfo
+            if node is not stmt:
+                continuation.extend(pblock[pidx + 1:])
+            if isinstance(owner, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                break
+            node = owner
+        for loop in parents.loop_stack_of.get(id(stmt), ()):
+            continuation.extend(loop.body)
+
+        used_anywhere = any(_uses_name(s, token) for s in continuation)
+        if not used_anywhere:
+            findings.append(Finding(
+                path, stmt.lineno, "token-leak",
+                f"token `{token}` from submit() is never drained or "
+                "abandoned",
+            ))
+            continue
+        if not _covers(continuation, token):
+            findings.append(Finding(
+                path, stmt.lineno, "token-leak",
+                f"token `{token}` from submit() is not drained on every "
+                "path — cover the else/early-return branches or use "
+                "try/finally",
+            ))
+            continue
+
+        # exception edge: submit ... <calls that may raise> ... drain,
+        # with the drain in the same block and not exception-protected
+        tail = block[idx + 1:]
+        resolver = None
+        for s in tail:
+            if _uses_name(s, token):
+                resolver = s
+                break
+        if resolver is None or isinstance(resolver, ast.Try):
+            continue
+        is_drain = any(
+            any(h in dotted(c.func).lower() for h in _RESOLVE_HINTS)
+            for c in ast.walk(resolver) if isinstance(c, ast.Call)
+            if _uses_name(c, token)
+        )
+        if not is_drain:
+            continue
+        between = tail[:tail.index(resolver)]
+        risky = [s for s in between if _contains_call(s)]
+        if risky and not _enclosing_finally_or_handler(resolver, parents):
+            findings.append(Finding(
+                path, risky[0].lineno, "token-leak",
+                f"call between submit() and drain of `{token}` may raise "
+                "and leak the token — drain in a finally or abandon in "
+                "the handler",
+            ))
+    return findings
+
+
+def check(tree: ast.AST, source: str, path: str) -> list[Finding]:
+    findings: list[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            findings.extend(_analyze_function(node, path))
+    return findings
+
+
+__all__ = ["check"]

@@ -1,0 +1,284 @@
+"""trace hygiene — host control flow / dynamic shapes / RNG in jitted code.
+
+Traced contexts are discovered structurally, with no jax import:
+
+  * functions (defs or lambdas) passed in the body position of
+    ``lax.while_loop(cond, body, init)``, ``lax.scan(f, ...)``,
+    ``lax.fori_loop(lo, hi, body, init)`` — matched by callee name, so
+    ``jax.lax.while_loop`` and a bare ``while_loop`` both count;
+  * functions decorated with ``jax.jit`` / ``jit`` /
+    ``partial(jax.jit, ...)``.  Parameters named in a literal
+    ``static_argnames=`` are trace-time constants and excluded from
+    taint.
+
+Inside a traced context, three rules fire:
+
+  * ``trace-host-branch`` — a Python ``if``/``while`` whose test reaches
+    a value derived from the traced parameters.  Static tests are
+    exempt: ``x is None``, ``x.shape/.ndim/.dtype/.size`` accesses,
+    ``isinstance``/``len`` on statics, and anything built only from
+    untainted names.
+  * ``trace-dynamic-shape`` — ``nonzero``/``flatnonzero``/``argwhere``/
+    ``unique`` without ``size=``, or one-argument ``where(cond)``.
+  * ``trace-unseeded-rng`` — any ``np.random.*`` / ``numpy.random.*`` /
+    ``random.<fn>()`` call (host RNG is baked in at trace time).
+
+Taint propagation is simple forward flow over assignments: a name is
+tainted if its value expression uses a tainted name *dynamically*
+(i.e. not exclusively under a static attribute or an ``is`` compare).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, dotted, func_name
+
+_LOOP_BODY_ARGS = {
+    # callee name -> indices of positional args that are traced callables
+    "while_loop": (0, 1),
+    "fori_loop": (2,),
+    "scan": (0,),
+}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "aval"}
+_DYN_SHAPE_FNS = {"nonzero", "flatnonzero", "argwhere", "unique"}
+
+
+def _is_jit_decorator(dec: ast.expr) -> bool:
+    name = dotted(dec)
+    if name.endswith("jit") or ".jit" in name:
+        return True
+    if isinstance(dec, ast.Call):
+        if dotted(dec.func).endswith("partial"):
+            return any(dotted(a).endswith("jit") for a in dec.args)
+    return False
+
+
+def _jit_static_argnames(dec: ast.expr) -> set:
+    names: set = set()
+    calls = [dec] if isinstance(dec, ast.Call) else []
+    for call in calls:
+        for kw in call.keywords:
+            if kw.arg in ("static_argnames", "static_argnums"):
+                for node in ast.walk(kw.value):
+                    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+                        names.add(node.value)
+    return names
+
+
+def _collect_traced(tree: ast.AST):
+    """Yield (fn_node, static_param_names, why) for every traced context."""
+    defs: dict[str, list] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, []).append(node)
+
+    seen: set = set()
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if _is_jit_decorator(dec):
+                    statics = _jit_static_argnames(dec)
+                    if id(node) not in seen:
+                        seen.add(id(node))
+                        yield node, statics, "jit-decorated"
+                    break
+        if isinstance(node, ast.Call):
+            callee = func_name(node)
+            positions = _LOOP_BODY_ARGS.get(callee)
+            if positions is None:
+                continue
+            for idx in positions:
+                if idx >= len(node.args):
+                    continue
+                arg = node.args[idx]
+                fns = []
+                if isinstance(arg, ast.Lambda):
+                    fns = [arg]
+                elif isinstance(arg, ast.Name):
+                    fns = defs.get(arg.id, [])
+                for fn in fns:
+                    if id(fn) not in seen:
+                        seen.add(id(fn))
+                        yield fn, set(), f"body of {callee}"
+
+
+def _param_names(fn) -> list[str]:
+    if isinstance(fn, ast.Lambda):
+        a = fn.args
+    else:
+        a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _dynamic_names(expr: ast.AST, tainted: set) -> list[ast.Name]:
+    """Tainted Name loads used *dynamically* in expr.
+
+    A use is static (and skipped) when it appears under a static
+    attribute (``x.shape``), as an operand of an ``is``/``is not``
+    compare, or inside ``isinstance(...)``.
+    """
+    static_ids: set = set()
+
+    def mark_static(node: ast.AST) -> None:
+        for sub in ast.walk(node):
+            static_ids.add(id(sub))
+
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+            mark_static(node.value)
+        if isinstance(node, ast.Compare):
+            if any(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                mark_static(node.left)
+                for cmp in node.comparators:
+                    mark_static(cmp)
+        if isinstance(node, ast.Call) and func_name(node) in ("isinstance", "len", "getattr", "hasattr"):
+            for a in node.args:
+                mark_static(a)
+
+    out = []
+    for node in ast.walk(expr):
+        if (isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load)
+                and node.id in tainted and id(node) not in static_ids):
+            out.append(node)
+    return out
+
+
+def _returns_array(expr: ast.AST) -> bool:
+    """Heuristic: calls into jnp/jax/lax produce traced values."""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call):
+            name = dotted(node.func)
+            root = name.split(".")[0]
+            if root in ("jnp", "jax", "lax") and not any(
+                    part in _STATIC_ATTRS for part in name.split(".")):
+                if "eval_shape" in name:
+                    continue
+                return True
+    return False
+
+
+class _TracedScan:
+    def __init__(self, fn, statics: set, why: str, path: str):
+        self.fn = fn
+        self.why = why
+        self.path = path
+        self.tainted = {p for p in _param_names(fn) if p not in statics}
+        self.findings: list[Finding] = []
+
+    def run(self) -> list[Finding]:
+        body = self.fn.body
+        if isinstance(self.fn, ast.Lambda):
+            self._expr_rules(body)
+            return self.findings
+        self._stmts(body)
+        return self.findings
+
+    def _stmts(self, stmts: list) -> None:
+        for stmt in stmts:
+            self._stmt(stmt)
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested defs inherit the enclosing taint (closures over the
+            # carry are traced too)
+            self._stmts(stmt.body)
+            return
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = stmt.value
+            if value is not None:
+                self._expr_rules(value)
+                dyn = _dynamic_names(value, self.tainted)
+                if dyn or _returns_array(value):
+                    targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                               else [stmt.target])
+                    for t in targets:
+                        for node in ast.walk(t):
+                            if isinstance(node, ast.Name):
+                                self.tainted.add(node.id)
+            return
+        if isinstance(stmt, (ast.If, ast.While)):
+            dyn = _dynamic_names(stmt.test, self.tainted)
+            if dyn:
+                kw = "while" if isinstance(stmt, ast.While) else "if"
+                names = ", ".join(sorted({n.id for n in dyn}))
+                self.findings.append(Finding(
+                    self.path, stmt.lineno, "trace-host-branch",
+                    f"Python `{kw}` on traced value(s) `{names}` inside "
+                    f"{self.why} — use jnp.where/lax.cond",
+                ))
+            self._expr_rules(stmt.test)
+            self._stmts(stmt.body)
+            self._stmts(stmt.orelse)
+            return
+        if isinstance(stmt, ast.For):
+            self._expr_rules(stmt.iter)
+            # loop targets over a traced iterable are themselves traced
+            if _dynamic_names(stmt.iter, self.tainted):
+                for node in ast.walk(stmt.target):
+                    if isinstance(node, ast.Name):
+                        self.tainted.add(node.id)
+            self._stmts(stmt.body)
+            self._stmts(stmt.orelse)
+            return
+        if isinstance(stmt, ast.Try):
+            self._stmts(stmt.body)
+            for h in stmt.handlers:
+                self._stmts(h.body)
+            self._stmts(stmt.orelse)
+            self._stmts(stmt.finalbody)
+            return
+        if isinstance(stmt, ast.With):
+            self._stmts(stmt.body)
+            return
+        if isinstance(stmt, ast.Return) and stmt.value is not None:
+            self._expr_rules(stmt.value)
+            return
+        if isinstance(stmt, ast.Expr):
+            self._expr_rules(stmt.value)
+            return
+
+    def _expr_rules(self, expr: ast.AST) -> None:
+        """dynamic-shape and RNG rules over every call in the expression."""
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = func_name(node)
+            receiver = dotted(node.func)
+            if callee in _DYN_SHAPE_FNS:
+                has_size = any(kw.arg == "size" for kw in node.keywords)
+                if not has_size:
+                    self.findings.append(Finding(
+                        self.path, node.lineno, "trace-dynamic-shape",
+                        f"`{callee}` without `size=` inside {self.why} "
+                        "has a data-dependent output shape",
+                    ))
+            elif callee == "where" and len(node.args) == 1 and not node.keywords:
+                self.findings.append(Finding(
+                    self.path, node.lineno, "trace-dynamic-shape",
+                    f"one-argument `where(cond)` inside {self.why} has a "
+                    "data-dependent output shape — pass x/y or use "
+                    "`size=` via nonzero",
+                ))
+            if ".random." in f".{receiver}." and "jax" not in receiver.split("."):
+                self.findings.append(Finding(
+                    self.path, node.lineno, "trace-unseeded-rng",
+                    f"host RNG `{receiver}` inside {self.why} is baked in "
+                    "at trace time — thread a jax.random key through the "
+                    "carry",
+                ))
+
+
+def check(tree: ast.AST, source: str, path: str) -> list[Finding]:
+    findings: list[Finding] = []
+    for fn, statics, why in _collect_traced(tree):
+        findings.extend(_TracedScan(fn, statics, why, path).run())
+    return findings
+
+
+__all__ = ["check"]

@@ -36,11 +36,20 @@ class CheckpointConfig:
     async_write: bool = True
 
 
+def _path_entry_str(p) -> str:
+    # DictKey -> .key, SequenceKey -> .idx, GetAttrKey (dataclass /
+    # NamedTuple states like TrainState) -> .name
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
 def _flatten_with_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
-        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        key = "/".join(_path_entry_str(p) for p in path)
         out[key] = leaf
     return out, treedef
 

@@ -331,7 +331,7 @@ def filtered_search(
         pipelined="1" if pipelined else "0",
     ).inc()
 
-    if use_fused:
+    if use_fused:  # gatelint: disable=trace-host-branch — trace-static: r_max is pytree aux (a Python int) and fused_supported returns a host bool
         # Pallas kernel on TPU/GPU, its bit-identical jnp twin on CPU —
         # see fused_round_for_backend for why interpret mode stays out of
         # the serving loop

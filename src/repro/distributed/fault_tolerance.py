@@ -54,11 +54,11 @@ class StepWatchdog:
         self._hist: list[float] = []
 
     def __enter__(self):
-        self._t0 = time.monotonic()
+        self._t0 = time.perf_counter()
         return self
 
     def __exit__(self, exc_type, exc, tb):
-        dt = time.monotonic() - self._t0
+        dt = time.perf_counter() - self._t0
         self._hist = (self._hist + [dt])[-self.history_len :]
         if dt > self.limit_s:
             self.trips += 1

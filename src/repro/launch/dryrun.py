@@ -114,6 +114,16 @@ def collective_bytes(hlo_text: str) -> dict:
     return out
 
 
+def _cost_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: older
+    releases return a list with one dict per computation, newer ones the
+    dict itself (or None when analysis is unavailable)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return cost or {}
+
+
 def _bf16_struct(tree):
     def conv(s):
         dt = jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype
@@ -171,7 +181,7 @@ def lower_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool = False,
     specs = zoo.input_specs(cfg, shape)
     in_sh = input_shardings(cfg, shape, layout)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if shape.kind == "train":
         opt_name = OPT_FOR.get(arch, "adamw")
         hp = TrainHParams(opt=OptConfig(name=opt_name))
@@ -220,13 +230,13 @@ def lower_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool = False,
                          out_shardings=out_sh,
                          donate_argnums=(1,) if donate else ())
         lowered = jitted.lower(p_bf16, specs["caches"], specs["tokens"], specs["pos"])
-    t_lower = time.time() - t0
+    t_lower = time.perf_counter() - t0
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     from repro.launch.hlo_analysis import analyze
@@ -284,10 +294,10 @@ def lower_retrieval(*, multi_pod: bool = False, n: int = 100_000_000,
         s((), jnp.int32),  # entry
         s((batch,), jnp.int32),  # targets
     )
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered = step.lower(*args_struct)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     from repro.launch.hlo_analysis import analyze
 
     loop_aware = analyze(compiled.as_text())
@@ -296,7 +306,7 @@ def lower_retrieval(*, multi_pod: bool = False, n: int = 100_000_000,
         "shape": f"bigann{n//1_000_000}m_b{batch}",
         "mesh": list(mesh.devices.shape),
         "multi_pod": multi_pod,
-        "compile_s": round(time.time() - t0, 1),
+        "compile_s": round(time.perf_counter() - t0, 1),
         "flops_per_device_raw": float(cost.get("flops", -1)),
         "bytes_accessed_per_device_raw": float(cost.get("bytes accessed", -1)),
         "flops_per_device": loop_aware["flops"],

@@ -50,7 +50,7 @@ def run(arch: str, *, smoke: bool = False, steps: int = 50, seq_len: int = 128,
     ds = TokenStreamConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
                            global_batch=batch, seed=0)
     losses = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(start, steps):
         batch_np = batch_at_step(ds, step)
         state, metrics = step_fn(state, jax.tree.map(jnp.asarray, batch_np))
@@ -58,7 +58,7 @@ def run(arch: str, *, smoke: bool = False, steps: int = 50, seq_len: int = 128,
         if step % log_every == 0 or step == steps - 1:
             print(f"step {step:5d} loss {losses[-1]:.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "
-                  f"lr {float(metrics['lr']):.2e} ({time.time()-t0:.1f}s)", flush=True)
+                  f"lr {float(metrics['lr']):.2e} ({time.perf_counter()-t0:.1f}s)", flush=True)
         if ckpt and step and step % 50 == 0:
             ckpt.save(step + 1, state)
     if ckpt:

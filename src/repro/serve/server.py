@@ -164,9 +164,9 @@ class ServeFrontend:
         self._lock = threading.Lock()
         self._slot_freed = threading.Condition(self._lock)
         self._work = threading.Condition(self._lock)
-        self._queue: deque[_Pending] = deque()
-        self._inflight = {t.name: 0 for t in tenants}
-        self._closed = False
+        self._queue: deque[_Pending] = deque()  # guarded by _lock
+        self._inflight = {t.name: 0 for t in tenants}  # guarded by _lock
+        self._closed = False  # guarded by _lock
         # admission/outcome counters and span histograms live in the
         # registry (``io_report`` is a thin view over it); children are
         # created eagerly so zero-traffic tenants still report

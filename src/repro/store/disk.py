@@ -191,8 +191,8 @@ class _Segment:
     n_rows: int
     data_offset: int  # file offset of sector 0 (row ``row_start``)
     rec_dtype: np.dtype
-    fd: int = -1
-    _mmap: np.memmap | None = None
+    fd: int = -1  # guarded by _open_lock
+    _mmap: np.memmap | None = None  # guarded by _open_lock
     # first-open is lazy and stores are shared across threads — an
     # unsynchronized double-open would leak the losing thread's fd
     _open_lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
@@ -378,9 +378,9 @@ class DiskRecordStore:
         # async submission/completion state: a background reader pool plus
         # the completion queue (token -> in-flight Future), all under _lock
         self._pool: ThreadPoolExecutor | None = None
-        self._pending: dict[int, object] = {}
-        self._next_token = 0
-        self._inflight = 0  # submitted-but-undrained tokens (live, not reset)
+        self._pending: dict[int, object] = {}  # guarded by _lock
+        self._next_token = 0  # guarded by _lock
+        self._inflight = 0  # submitted-but-undrained tokens, live not reset; guarded by _lock
         # background page-cache warmer (non-blocking close: stop is an event)
         self._warm_stop = threading.Event()
         self._warm_thread: threading.Thread | None = None
