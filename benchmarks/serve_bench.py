@@ -41,6 +41,18 @@ asserts on:
     PYTHONPATH=src python -m benchmarks.serve_bench [--quick]
         [--json PATH] [--obs-json PATH] [--qps F] [--clients N]
         [--requests N] [--tenants N] [--alpha F] [--pipeline-depth K]
+        [--soak MINUTES] [--soak-qps F]
+        [--fault-eio P] [--fault-policy POLICY]
+
+``--soak MINUTES`` replaces the closed/open pair with a fixed-rate
+(deterministic arrivals, not Poisson) open loop that runs for the
+given wall time and reports a per-minute p99 series plus a drift row
+(last-minute p99 vs first-minute p99) — the latency-stability soak the
+nightly chaos lane runs under fault injection.  ``--fault-eio P``
+attaches a ``FaultPlan(p_eio=P)`` to the disk tier and
+``--fault-policy`` picks the front end's resilience mode
+(``fail`` | ``degrade`` | ``retry_then_degrade``); recall parity is
+only asserted (and only emitted) when no faults are injected.
 
 ``BENCH_serve.json`` is always written (repo-root-anchored, with a
 ``schema_version`` field); ``--obs-json`` additionally dumps the
@@ -60,6 +72,7 @@ from benchmarks import common
 from repro import obs
 from repro.core import GateANNEngine, SearchConfig
 from repro.serve import AdmissionError, RAGServer, ServeFrontend, TenantSpec
+from repro.store import FaultPlan
 
 RECORD = 4096  # one record sector
 
@@ -76,14 +89,18 @@ def zipf_probs(n: int, alpha: float) -> np.ndarray:
     return p / p.sum()
 
 
-def make_frontend(ctx, *, n_tenants, pipeline_depth, max_inflight=64):
+def make_frontend(ctx, *, n_tenants, pipeline_depth, max_inflight=64,
+                  fault_eio=0.0, fault_policy="fail", fault_seed=0):
     """Disk-tier engine + adaptive cache behind the async front end."""
     path = index_path()
     if not os.path.exists(path):
         ctx["engine"].save(path)
+    faults = None
+    if fault_eio > 0.0:
+        faults = FaultPlan(seed=fault_seed, p_eio=fault_eio)
     engine = GateANNEngine.load(
         path, store_tier="disk", cache_budget_bytes=512 * RECORD,
-        cache_policy="adaptive", refresh_every=4,
+        cache_policy="adaptive", refresh_every=4, faults=faults,
     )
     rag = RAGServer(
         engine=engine, cfg=None, params=None, layout=None,
@@ -96,7 +113,8 @@ def make_frontend(ctx, *, n_tenants, pipeline_depth, max_inflight=64):
         TenantSpec(f"t{i}", "label", np.int32(i), max_inflight=max_inflight)
         for i in range(n_tenants)
     ]
-    srv = ServeFrontend(rag, tenants, max_batch=32, batch_window_s=0.002)
+    srv = ServeFrontend(rag, tenants, max_batch=32, batch_window_s=0.002,
+                        fault_policy=fault_policy)
     return engine, rag, srv
 
 
@@ -165,6 +183,66 @@ def run_open(srv, queries, schedule, *, qps, seed):
     return np.asarray(lats), served, len(lats) / max(wall, 1e-9), rejected
 
 
+def run_soak(srv, queries, schedule, *, qps, minutes, seed):
+    """Fixed-rate open loop for ``minutes`` of wall time: arrival i is
+    scheduled at exactly ``i / qps`` seconds, latency counts from that
+    scheduled instant, and completions are bucketed by arrival minute
+    so tail drift over the run is visible as a series, not an average."""
+    del seed  # arrivals are deterministic; the schedule carries the mix
+    handles, served, rejected = [], [], 0
+    horizon = minutes * 60.0
+    t_start = time.perf_counter()
+    i = 0
+    while True:
+        t_arr = i / qps
+        if t_arr >= horizon:
+            break
+        tenant, qi = schedule[i % len(schedule)]
+        now = time.perf_counter() - t_start
+        if t_arr > now:
+            time.sleep(t_arr - now)
+        t_sched = t_start + t_arr
+        try:
+            h = srv.submit(tenant, queries[qi], timeout=5.0)
+        except AdmissionError:
+            rejected += 1
+            i += 1
+            continue
+        lag = time.perf_counter() - t_sched
+        handles.append((tenant, qi, h, lag, int(t_arr // 60)))
+        i += 1
+    lats, minutes_of = [], []
+    for tenant, qi, h, lag, minute in handles:
+        ids = h.result(timeout=120.0)
+        served.append((tenant, qi, ids))
+        lats.append(lag + h.trace.total)
+        minutes_of.append(minute)
+    wall = time.perf_counter() - t_start
+    return (np.asarray(lats), np.asarray(minutes_of), served,
+            len(lats) / max(wall, 1e-9), rejected)
+
+
+def soak_rows(lats_s, minutes_of, qps_achieved, offered):
+    rows = pctl_rows("soak", lats_s, qps_achieved)
+    rows.append(dict(name="serve_soak_offered_qps", lat1_us=0.0,
+                     derived=offered))
+    p99s = []
+    for m in range(int(minutes_of.max()) + 1 if minutes_of.size else 0):
+        sel = lats_s[minutes_of == m]
+        if sel.size == 0:
+            continue
+        p99 = float(np.percentile(sel * 1e3, 99))
+        p99s.append(p99)
+        rows.append(dict(name=f"serve_soak_p99_m{m}_ms", lat1_us=p99 * 1e3,
+                         derived=p99))
+    # drift: last-minute p99 relative to the first — flat is ~1.0; a
+    # leak (queue growth, cache thrash, fd exhaustion) trends upward
+    drift = p99s[-1] / max(p99s[0], 1e-9) if len(p99s) >= 2 else 1.0
+    rows.append(dict(name="serve_soak_p99_drift", lat1_us=0.0,
+                     derived=drift))
+    return rows
+
+
 def check_parity(engine, rag, queries, served) -> float:
     """Served ids vs direct ``engine.search`` for every (tenant, query)."""
     by_tenant: dict = {}
@@ -215,6 +293,17 @@ def main() -> None:
     ap.add_argument("--alpha", type=float, default=1.1,
                     help="Zipf skew across tenants")
     ap.add_argument("--pipeline-depth", type=int, default=2)
+    ap.add_argument("--soak", type=float, metavar="MINUTES", default=0.0,
+                    help="run a fixed-rate soak for this many minutes "
+                         "INSTEAD of the closed/open pair")
+    ap.add_argument("--soak-qps", type=float, default=25.0,
+                    help="the soak loop's fixed arrival rate")
+    ap.add_argument("--fault-eio", type=float, default=0.0,
+                    help="per-read-call EIO probability injected into the "
+                         "disk tier (chaos lane)")
+    ap.add_argument("--fault-policy", default="fail",
+                    choices=("fail", "degrade", "retry_then_degrade"),
+                    help="front-end resilience mode when faults fire")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     n_requests = 120 if args.quick else args.requests
@@ -225,7 +314,9 @@ def main() -> None:
     ctx = common.standard_setup()
     queries = ctx["queries"]
     engine, rag, srv = make_frontend(
-        ctx, n_tenants=args.tenants, pipeline_depth=args.pipeline_depth
+        ctx, n_tenants=args.tenants, pipeline_depth=args.pipeline_depth,
+        fault_eio=args.fault_eio, fault_policy=args.fault_policy,
+        fault_seed=args.seed,
     )
     rng = np.random.default_rng(args.seed)
     probs = zipf_probs(args.tenants, args.alpha)
@@ -246,23 +337,41 @@ def main() -> None:
                 h.result(timeout=300.0)
         print("# warmup done", file=sys.stderr)
 
-        lats_c, served_c, qps_c, rej_c = run_closed(
-            srv, queries, make_schedule(n_requests), n_clients=args.clients
-        )
-        print(f"# closed: {len(lats_c)} reqs, {qps_c:.1f} qps", file=sys.stderr)
-        rows += pctl_rows("closed", lats_c, qps_c)
+        if args.soak > 0.0:
+            n_sched = max(int(args.soak_qps * args.soak * 60) + 1, 1)
+            lats_s, minutes_of, served_all, qps_s, rej_total = run_soak(
+                srv, queries, make_schedule(n_sched), qps=args.soak_qps,
+                minutes=args.soak, seed=args.seed + 1,
+            )
+            print(f"# soak: {len(lats_s)} reqs over {args.soak:.2f} min, "
+                  f"offered {args.soak_qps:.1f} achieved {qps_s:.1f} qps",
+                  file=sys.stderr)
+            rows += soak_rows(lats_s, minutes_of, qps_s, args.soak_qps)
+        else:
+            lats_c, served_c, qps_c, rej_c = run_closed(
+                srv, queries, make_schedule(n_requests),
+                n_clients=args.clients
+            )
+            print(f"# closed: {len(lats_c)} reqs, {qps_c:.1f} qps",
+                  file=sys.stderr)
+            rows += pctl_rows("closed", lats_c, qps_c)
 
-        lats_o, served_o, qps_o, rej_o = run_open(
-            srv, queries, make_schedule(n_requests), qps=args.qps,
-            seed=args.seed + 1,
-        )
-        print(f"# open: {len(lats_o)} reqs, offered {args.qps:.1f} "
-              f"achieved {qps_o:.1f} qps", file=sys.stderr)
-        rows += pctl_rows("open", lats_o, qps_o)
-        rows.append(dict(name="serve_open_offered_qps", lat1_us=0.0,
-                         derived=args.qps))
+            lats_o, served_o, qps_o, rej_o = run_open(
+                srv, queries, make_schedule(n_requests), qps=args.qps,
+                seed=args.seed + 1,
+            )
+            print(f"# open: {len(lats_o)} reqs, offered {args.qps:.1f} "
+                  f"achieved {qps_o:.1f} qps", file=sys.stderr)
+            rows += pctl_rows("open", lats_o, qps_o)
+            rows.append(dict(name="serve_open_offered_qps", lat1_us=0.0,
+                             derived=args.qps))
+            served_all = served_c + served_o
+            rej_total = rej_c + rej_o
 
-        parity = check_parity(engine, rag, queries, served_c + served_o)
+        # parity vs direct search only holds fault-free: with faults
+        # injected, the direct rerun draws its own (different) faults
+        parity = (check_parity(engine, rag, queries, served_all)
+                  if args.fault_eio == 0.0 else None)
         rep = srv.io_report()
         if args.obs_json:
             payload = obs.export.write_obs_json(
@@ -284,13 +393,24 @@ def main() -> None:
     for span, mean_s in rep["spans_mean_s"].items():
         rows.append(dict(name=f"serve_span_{span}_ms", lat1_us=mean_s * 1e6,
                          derived=mean_s * 1e3))
-    rows.append(dict(name="serve_recall_parity", lat1_us=0.0, derived=parity))
+    if parity is not None:
+        rows.append(dict(name="serve_recall_parity", lat1_us=0.0,
+                         derived=parity))
     rows.append(dict(name="serve_reconciled", lat1_us=0.0,
                      derived=float(rep.get("reconcile_drift", 0) == 0)))
     rows.append(dict(name="serve_abandoned", lat1_us=0.0,
                      derived=float(rep.get("abandoned_tokens", 0))))
     rows.append(dict(name="serve_rejected", lat1_us=0.0,
-                     derived=float(rej_c + rej_o)))
+                     derived=float(rej_total)))
+    if args.fault_eio > 0.0:
+        rows.append(dict(name="serve_fault_eio", lat1_us=0.0,
+                         derived=args.fault_eio))
+        rows.append(dict(name="serve_degraded", lat1_us=0.0,
+                         derived=float(rep.get("degraded", 0))))
+        rows.append(dict(name="serve_deadline_shed", lat1_us=0.0,
+                         derived=float(rep.get("deadline_shed", 0))))
+        rows.append(dict(name="serve_failed", lat1_us=0.0,
+                         derived=float(rep.get("failed", 0))))
     rows.append(dict(name="serve_mean_batch", lat1_us=0.0,
                      derived=rep["mean_batch_size"]))
     rows.append(dict(name="serve_cache_hit_rate", lat1_us=0.0,

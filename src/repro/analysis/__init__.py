@@ -11,6 +11,7 @@ Static rules (see ``core.RULES`` / ``scripts/gatelint.py --explain``):
   * ``trace-unseeded-rng``   — host RNG baked in at trace time
   * ``timing-wallclock``     — durations off time.time/monotonic
   * ``token-leak``           — submit() tokens that never drain
+  * ``silent-except``        — broad except handlers that swallow errors
 
 Runtime companion: :mod:`repro.analysis.lockdep`.
 """

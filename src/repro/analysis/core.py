@@ -141,6 +141,26 @@ RULES: dict[str, Rule] = {
             ),
         ),
         Rule(
+            id="silent-except",
+            family="error-hygiene",
+            summary="a broad `except` (bare / Exception / OSError family) "
+                    "whose body only passes",
+            rationale=(
+                "A bare `except:` — or one catching Exception/OSError and "
+                "then doing nothing — erases the only evidence that an I/O "
+                "path failed.  This repo's resilience contract is that "
+                "every swallowed error is *counted* (`warm_errors`, "
+                "`retry_exhausted`, `degraded_records`) or re-raised after "
+                "transient/fatal classification; a silent swallow is where "
+                "reconciliation drift and phantom recall loss hide, and it "
+                "only reproduces under the fault-injection harness.  Count "
+                "the error into an obs counter, re-raise the fatal subset, "
+                "or — for genuinely best-effort paths (teardown "
+                "destructors, stale-file sweeps) — suppress with a pragma "
+                "that records why swallowing is safe."
+            ),
+        ),
+        Rule(
             id="suppression-missing-reason",
             family="meta",
             summary="a `# gatelint: disable=` pragma without a justification "
@@ -215,9 +235,10 @@ def parse_suppressions(source: str) -> dict[int, tuple[set, str | None]]:
 def _checkers():
     # imported lazily so a single rule module failing to import doesn't
     # take the registry down with it at module-import time
-    from repro.analysis import locks, timing, tokens, trace
+    from repro.analysis import excepts, locks, timing, tokens, trace
 
-    return (locks.check, trace.check, timing.check, tokens.check)
+    return (locks.check, trace.check, timing.check, tokens.check,
+            excepts.check)
 
 
 def lint_source(source: str, path: str) -> list[Finding]:

@@ -1,0 +1,92 @@
+"""silent-except — broad exception handlers whose body discards the error.
+
+An ``except`` clause that catches everything (bare, ``Exception``,
+``BaseException``) or the whole I/O family (``OSError`` and its aliases
+``IOError``/``EnvironmentError``) and then does nothing — ``pass``,
+``continue``, or a bare string/ellipsis expression — erases the only
+evidence that an I/O path failed.  This repo's resilience contract is
+that every swallowed error is *counted* (``warm_errors``,
+``retry_exhausted``, ``degraded_records``) or re-raised after
+classification (:func:`repro.store.disk.is_transient`); a silent
+swallow is where reconciliation drift and phantom recall loss hide.
+
+The rule is narrow on purpose:
+
+  * Handlers that catch a *specific* non-I/O exception
+    (``KeyError``, ``queue.Empty``, ``StopIteration``...) are exempt —
+    narrow catches are a deliberate statement about expected control
+    flow, silent or not.
+  * A handler body with any real statement (a counter increment, a log
+    call, a ``raise``, an assignment) is exempt — the error was
+    handled, however minimally.
+  * Docstring-only / ``...``-only bodies count as silent: they are
+    ``pass`` with extra steps.
+
+Fix by counting the error into an obs counter, re-raising the fatal
+subset, or — when swallowing really is correct (interpreter-teardown
+destructors, best-effort cache cleanup) — suppressing with a pragma
+that records *why*.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding
+
+# Names that make a handler "broad": everything, or the whole OS-error
+# family (IOError/EnvironmentError are aliases of OSError since py3.3).
+_BROAD = {"Exception", "BaseException", "OSError", "IOError",
+          "EnvironmentError"}
+
+
+def _type_names(node: ast.expr | None) -> list[str] | None:
+    """Caught exception names, or None for a bare ``except:``."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Tuple):
+        out = []
+        for e in node.elts:
+            out.extend(_type_names(e) or [])
+        return out
+    if isinstance(node, ast.Name):
+        return [node.id]
+    if isinstance(node, ast.Attribute):
+        return [node.attr]  # e.g. builtins.OSError, socket.error
+    return []
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    names = _type_names(handler.type)
+    if names is None:  # bare except:
+        return True
+    return any(n in _BROAD for n in names)
+
+
+def _is_silent(body: list[ast.stmt]) -> bool:
+    """True when no statement in the body does anything observable."""
+    for stmt in body:
+        if isinstance(stmt, (ast.Pass, ast.Continue)):
+            continue
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Constant):
+            continue  # docstring / ellipsis / bare literal
+        return False
+    return True
+
+
+def check(tree: ast.AST, source: str, path: str) -> list[Finding]:
+    findings: list[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if not (_is_broad(node) and _is_silent(node.body)):
+            continue
+        names = _type_names(node.type)
+        caught = "bare except" if names is None else (
+            "except " + "/".join(names))
+        findings.append(Finding(
+            path, node.lineno, "silent-except",
+            f"{caught} swallows the error without counting, logging, or "
+            "re-raising — count it into an obs counter or justify with a "
+            "pragma",
+        ))
+    return findings

@@ -34,7 +34,7 @@ from repro.core.neighbor_store import NeighborStore
 from repro.store import format as idx_format
 from repro.store.adaptive import ADAPTIVE_POLICY, AdaptiveRecordCache, filter_bucket
 from repro.store.cache import CachedRecordStore, select_hot_set
-from repro.store.disk import DiskRecordStore
+from repro.store.disk import DiskRecordStore, RetryPolicy
 from repro.store.vector_store import HostOffloadRecordStore, InMemoryRecordStore
 
 
@@ -66,7 +66,37 @@ class EngineConfig:
     # explicit search_config keep full control; results are bit-identical
     # either way (unsupported shapes/backends fall back silently).
     use_fused_kernel: bool = False
+    # disk-tier resilience (store/disk.py): transient read errors (EIO /
+    # EAGAIN / EINTR / ETIMEDOUT) retry up to io_retries times with
+    # exponential backoff starting at io_retry_backoff_s; one fetch
+    # round's reads may spend at most io_round_deadline_s in I/O
+    # (0 = no deadline).  On exhaustion or a tripped deadline,
+    # io_on_error="fail" raises (the historical behavior) while
+    # "degrade" serves the failed slots as tunneled nodes — graph
+    # connectivity intact, the slots dropped from exact-ranked results
+    # and counted in SearchStats.n_degraded.
+    io_retries: int = 0
+    io_retry_backoff_s: float = 1e-3
+    io_round_deadline_s: float = 0.0
+    io_on_error: str = "fail"
     seed: int = 0
+
+
+def _open_disk_store(path: str, config: EngineConfig, faults=None) -> DiskRecordStore:
+    """Open the slow tier with the config's resilience knobs applied
+    (build and load share this so the two paths can't drift)."""
+    return DiskRecordStore.open(
+        path,
+        max_gap_sectors=config.max_gap_sectors,
+        retry=RetryPolicy(
+            max_retries=config.io_retries,
+            backoff_s=config.io_retry_backoff_s,
+            seed=config.seed,
+        ),
+        on_error=config.io_on_error,
+        round_deadline_s=config.io_round_deadline_s,
+        faults=faults,
+    )
 
 
 def _store_neighbors(store, expected_n: int | None = None) -> jax.Array:
@@ -222,9 +252,7 @@ class GateANNEngine:
                 neighbors=graph.neighbors, codec=codec, codes=codes,
                 medoid=int(graph.medoid), filters=filters,
             )
-            record_store = DiskRecordStore.open(
-                index_path, max_gap_sectors=config.max_gap_sectors
-            )
+            record_store = _open_disk_store(index_path, config)
         elif config.store_tier == "host":
             record_store = HostOffloadRecordStore.create(vecs, graph.neighbors)
         else:
@@ -279,6 +307,7 @@ class GateANNEngine:
         config_overrides: dict | None = None,
         *,
         warm_disk: bool = False,
+        faults=None,
         **overrides,
     ) -> "GateANNEngine":
         """Restore an engine from a saved index file — no graph build, no
@@ -295,6 +324,11 @@ class GateANNEngine:
         page cache is re-populated while the caller is still compiling
         its first search (no-op on non-disk tiers; see
         ``DiskRecordStore.warm``).
+
+        ``faults=`` attaches a ``store.FaultPlan`` to the disk tier's
+        read path (testing / chaos benchmarking only — runtime state,
+        never persisted, so it is an explicit keyword rather than a
+        config override).  Requires ``store_tier="disk"``.
         """
         idx = idx_format.read_index(path)
         h = idx.header
@@ -319,9 +353,7 @@ class GateANNEngine:
         )
         codes = jnp.asarray(idx.pq_codes(), jnp.int32)
         if config.store_tier == "disk":
-            record_store = DiskRecordStore.open(
-                path, max_gap_sectors=config.max_gap_sectors
-            )
+            record_store = _open_disk_store(path, config, faults=faults)
             if warm_disk:
                 record_store.warm(background=True)
             # the store's LAZY host memmap view — no device transfer, no
@@ -330,6 +362,11 @@ class GateANNEngine:
             # gathers only hot rows host-side (select_hot_set degrades
             # visit_freq to BFS rather than materialize the corpus)
             vectors = record_store.vectors
+        elif faults is not None:
+            raise ValueError(
+                "faults= wraps the disk tier's read path; this load "
+                f"resolves to store_tier={config.store_tier!r}"
+            )
         elif config.store_tier == "host":
             vectors = jnp.asarray(idx.vectors(), jnp.float32)
             record_store = HostOffloadRecordStore.create(vectors, neighbors)

@@ -95,6 +95,12 @@ class SearchStats(NamedTuple):
     n_exact: jax.Array  # (B,) exact distance computations
     n_hops: jax.Array  # (B,) dispatch rounds
     n_cache_hits: jax.Array  # (B,) record fetches served by the cache tier
+    # (B,) result-candidate slots whose slow-tier read failed and was
+    # served degraded (tunnel sentinel — see DiskRecordStore resilience):
+    # traversal kept the node, the exact-ranked results dropped it.
+    # Always zero unless the store runs with on_error="degrade" AND a
+    # read actually failed.
+    n_degraded: jax.Array
 
 
 class SearchOutput(NamedTuple):
@@ -219,6 +225,7 @@ def filtered_search(
         n_exact=jnp.zeros((b,), jnp.int32),
         n_hops=jnp.zeros((b,), jnp.int32),
         n_cache_hits=jnp.zeros((b,), jnp.int32),
+        n_degraded=jnp.zeros((b,), jnp.int32),
     )
     # Optional online frequency counting for the adaptive cache: the (N,)
     # counter array is loop-carried device state — each round scatter-adds
@@ -262,6 +269,7 @@ def filtered_search(
             n_exact=stats.n_exact + jnp.sum(exact_mask, axis=1).astype(jnp.int32),
             n_hops=stats.n_hops + 1,
             n_cache_hits=stats.n_cache_hits + jnp.sum(hit_mask, axis=1).astype(jnp.int32),
+            n_degraded=stats.n_degraded,  # advanced by retire, not stage A
         )
         return frontier, stats, vc, sel_ids, fetch_ids, tunnel_mask, result_mask
 
@@ -283,16 +291,31 @@ def filtered_search(
         new_d = _adc_ids(lut, codes, new, config.use_kernel)  # PQ priority signal
         return fr.insert(frontier, new, new_d), visited
 
-    def retire(results, sel_ids, result_mask, vecs, live):
+    def retire(results, stats, sel_ids, result_mask, vecs, live):
         """Stage B: score one round's fetched records and push them into
         the result heap.  ``live=False`` turns it into a heap no-op (all
-        ids INVALID / dists INF) for pipeline warmup/flush padding."""
+        ids INVALID / dists INF) for pipeline warmup/flush padding.
+
+        A slot whose slow-tier read failed under ``on_error="degrade"``
+        arrives with the +inf sentinel vector: it keeps its traversal
+        role (neighbors were already served from the adjacency sidecar)
+        but its exact-distance contribution is dropped — the INF
+        distance maps the slot to INVALID in ``results_insert`` — and
+        the loss is counted in ``stats.n_degraded``.  Real corpus
+        vectors are finite, so with zero injected faults the sentinel
+        never appears and this is bit-identical to the pre-resilience
+        loop."""
         exact_d = _exact_dist(queries, vecs, config.use_kernel)
-        ok = result_mask & live
+        deg = jnp.any(jnp.isinf(vecs), axis=-1) & result_mask & live
+        ok = result_mask & live & ~deg
         exact_d = jnp.where(ok, exact_d, fr.INF)
-        return fr.results_insert(
+        results = fr.results_insert(
             results, jnp.where(ok, sel_ids, fr.INVALID), exact_d
         )
+        stats = stats._replace(
+            n_degraded=stats.n_degraded + jnp.sum(deg, axis=1).astype(jnp.int32)
+        )
+        return results, stats
 
     def cond(state):
         frontier, _, _, stats = state[0], state[1], state[2], state[3]
@@ -364,6 +387,7 @@ def filtered_search(
                 n_hops=stats.n_hops + 1,
                 n_cache_hits=stats.n_cache_hits
                 + jnp.sum(hit_mask, axis=1).astype(jnp.int32),
+                n_degraded=stats.n_degraded,  # advanced by retire
             )
             return stats, vc
 
@@ -406,8 +430,9 @@ def filtered_search(
                 rnd, results, visited, stats, vc = state
                 stats, vc = fused_account(rnd, stats, vc)
                 vecs, disk_nbrs = fetch(rnd.fetch_ids)
-                results = retire(
-                    results, rnd.sel_ids, rnd.result_mask, vecs, jnp.bool_(True)
+                results, stats = retire(
+                    results, stats, rnd.sel_ids, rnd.result_mask, vecs,
+                    jnp.bool_(True),
                 )
                 new, new_codes, new_passes, visited = fused_new(
                     rnd.sel_ids, rnd.tunnel_mask, visited, disk_nbrs
@@ -459,7 +484,8 @@ def filtered_search(
             live = r >= depth - 1
             dp = jnp.mod(r - (depth - 1), depth)
             vecs = drain(p_tok[dp], p_fids[dp], live)
-            results = retire(results, p_ids[dp], p_rm[dp], vecs, live)
+            results, stats = retire(results, stats, p_ids[dp], p_rm[dp],
+                                    vecs, live)
             return (nrnd, results, visited, stats, vc,
                     p_ids, p_fids, p_rm, p_tok)
 
@@ -475,7 +501,8 @@ def filtered_search(
             live = rr >= 0
             dp = jnp.mod(rr, depth)
             vecs = drain(p_tok[dp], p_fids[dp], live)
-            results = retire(results, p_ids[dp], p_rm[dp], vecs, live)
+            results, stats = retire(results, stats, p_ids[dp], p_rm[dp],
+                                    vecs, live)
         return SearchOutput(
             ids=results.ids,
             dists=results.dists,
@@ -493,8 +520,8 @@ def filtered_search(
                 stage_a(frontier, visited, stats, vc)
             )
             vecs, disk_nbrs = fetch(fetch_ids)  # (B, W, D), (B, W, R)
-            results = retire(results, sel_ids, result_mask, vecs,
-                             jnp.bool_(True))
+            results, stats = retire(results, stats, sel_ids, result_mask,
+                                    vecs, jnp.bool_(True))
             frontier, visited = expand(
                 frontier, visited, sel_ids, tunnel_mask, disk_nbrs
             )
@@ -546,7 +573,8 @@ def filtered_search(
         live = r >= depth - 1
         dp = jnp.mod(r - (depth - 1), depth)
         vecs = drain(p_tok[dp], p_fids[dp], live)
-        results = retire(results, p_ids[dp], p_rm[dp], vecs, live)
+        results, stats = retire(results, stats, p_ids[dp], p_rm[dp],
+                                vecs, live)
         return (frontier, results, visited, stats, vc,
                 p_ids, p_fids, p_rm, p_tok)
 
@@ -561,7 +589,8 @@ def filtered_search(
         live = rr >= 0
         dp = jnp.mod(rr, depth)
         vecs = drain(p_tok[dp], p_fids[dp], live)
-        results = retire(results, p_ids[dp], p_rm[dp], vecs, live)
+        results, stats = retire(results, stats, p_ids[dp], p_rm[dp],
+                                vecs, live)
 
     return SearchOutput(
         ids=results.ids,

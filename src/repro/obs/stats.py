@@ -71,6 +71,11 @@ def record_search_stats(reg: regm.MetricsRegistry, stats, *,
     reg.counter("search.tunnels", **labels).inc(t["n_tunnels"])
     reg.counter("search.exact", **labels).inc(t["n_exact"])
     reg.counter("search.hops", **labels).inc(t["n_hops"])
+    if "n_degraded" in t:  # duck-typed stats may predate the field
+        reg.counter("search.degraded", **labels).inc(t["n_degraded"])
+        reg.counter("search.degraded_queries", **labels).inc(
+            int((np.asarray(stats.n_degraded) > 0).sum())
+        )
     h_ios = reg.histogram("search.ios_per_query", mode=mode)
     h_hops = reg.histogram("search.hops_per_query", mode=mode)
     for v in np.asarray(stats.n_ios).tolist():

@@ -2,7 +2,9 @@ from repro.serve.decode import make_serve_step, cache_pspecs
 from repro.serve.prefill import make_prefill_step
 from repro.serve.rag import RAGRequest, RAGServer
 from repro.serve.server import (
+    FAULT_POLICIES,
     AdmissionError,
+    DeadlineExceeded,
     RequestTrace,
     ServeFrontend,
     ServeHandle,
@@ -22,4 +24,6 @@ __all__ = [
     "RequestTrace",
     "AdmissionError",
     "ServerClosed",
+    "DeadlineExceeded",
+    "FAULT_POLICIES",
 ]

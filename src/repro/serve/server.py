@@ -43,6 +43,29 @@ Failure containment: if the engine raises mid-batch, the dispatcher
 abandons any pipelined disk rounds still in flight
 (``engine.abandon_pending_io()`` — no leaked reader slots), fails that
 batch's handles with the exception, and keeps serving later arrivals.
+
+**SLO enforcement** (deadlines + shedding + degraded reads): a
+``TenantSpec.deadline_s`` (or per-request ``submit(deadline_s=...)``)
+gives each request an absolute deadline from admission.  Batch
+formation sheds requests whose deadline already passed (resolved with
+:class:`DeadlineExceeded`, counted in ``serve.deadline_shed``) and
+orders the rest earliest-deadline-first instead of FIFO — serving a
+request its client has already written off burns a batch slot for
+nothing.  The ``fault_policy`` knob maps onto the disk tier's
+resilience (``DiskRecordStore.configure_resilience``):
+
+  * ``"fail"``              — historical behavior: one failed read
+                              fails the batch (contained, not retried)
+  * ``"degrade"``           — failed reads become tunneled nodes;
+                              queries complete with bounded recall loss
+  * ``"retry_then_degrade"``— bounded backoff retries first, degrade
+                              only on exhaustion (production default)
+
+Under non-``fail`` policies the dispatcher also propagates the batch's
+tightest remaining deadline into the store as its per-round read
+deadline, so one slow device round degrades instead of blowing the SLO.
+Per-request degraded-slot counts land in ``RequestTrace.n_degraded``
+and the ``serve.degraded`` counter family.
 """
 from __future__ import annotations
 
@@ -55,9 +78,16 @@ import numpy as np
 
 from repro import obs
 from repro.serve.rag import RAGRequest, RAGServer
+from repro.store.disk import RetryPolicy
 
 # the four per-request stages; each becomes a serve.<name> span family
 _SPANS = ("queue_wait", "batch_form", "search", "drain")
+
+FAULT_POLICIES = ("fail", "degrade", "retry_then_degrade")
+
+# shed requests get a deadline budget this small propagated as the
+# store's round deadline instead of 0 (0 would DISABLE the deadline)
+_MIN_ROUND_DEADLINE_S = 1e-3
 
 
 class AdmissionError(RuntimeError):
@@ -66,6 +96,10 @@ class AdmissionError(RuntimeError):
 
 class ServerClosed(RuntimeError):
     """The request cannot be served because the server is shut down."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline passed before it could be dispatched."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +111,9 @@ class TenantSpec:
     filter_kind: str | None = None
     filter_params: object = None
     max_inflight: int = 64  # queued + in-service requests, bounded
+    # per-request SLO deadline (seconds from admission; None = none).
+    # Overridable per request via submit(deadline_s=...).
+    deadline_s: float | None = None
 
 
 @dataclasses.dataclass
@@ -96,6 +133,7 @@ class RequestTrace:
     drain: float = 0.0
     n_ios: int = 0
     n_cache_hits: int = 0
+    n_degraded: int = 0  # result slots served degraded (failed disk reads)
 
     @property
     def total(self) -> float:
@@ -129,6 +167,7 @@ class _Pending:
     request: RAGRequest
     tenant: TenantSpec
     t_submit: float
+    deadline: float | None = None  # absolute perf_counter seconds (or None)
 
 
 class ServeFrontend:
@@ -148,10 +187,15 @@ class ServeFrontend:
         max_batch: int = 32,
         batch_window_s: float = 0.002,
         admission_timeout_s: float = 1.0,
+        fault_policy: str = "fail",
         registry: obs.MetricsRegistry | None = None,
     ):
         if not tenants:
             raise ValueError("a server needs at least one TenantSpec")
+        if fault_policy not in FAULT_POLICIES:
+            raise ValueError(
+                f"fault_policy={fault_policy!r} not in {FAULT_POLICIES}"
+            )
         names = [t.name for t in tenants]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tenant names: {names}")
@@ -160,6 +204,19 @@ class ServeFrontend:
         self.max_batch = int(max_batch)
         self.batch_window_s = float(batch_window_s)
         self.admission_timeout_s = float(admission_timeout_s)
+        # fault containment: map the policy onto the measured store's
+        # resilience knobs (no-op on modeled tiers, which cannot fail)
+        self.fault_policy = fault_policy
+        self._store = rag.engine.measured_store()
+        self._base_round_deadline_s = (
+            self._store.round_deadline_s if self._store is not None else 0.0
+        )
+        if self._store is not None and fault_policy != "fail":
+            retries = 3 if fault_policy == "retry_then_degrade" else 0
+            self._store.configure_resilience(
+                retry=RetryPolicy(max_retries=retries, backoff_s=5e-4),
+                on_error="degrade",
+            )
 
         self._lock = threading.Lock()
         self._slot_freed = threading.Condition(self._lock)
@@ -178,7 +235,8 @@ class ServeFrontend:
             key: {t.name: self.metrics.counter(f"serve.{key}", tenant=t.name)
                   for t in tenants}
             for key in ("admitted", "rejected", "completed", "failed",
-                        "queries", "ios", "cache_hits")
+                        "queries", "ios", "cache_hits",
+                        "deadline_shed", "degraded")
         }
         self._c_batches = self.metrics.counter("serve.batches")
         self._g_queue = self.metrics.gauge("serve.queue_depth")
@@ -217,12 +275,18 @@ class ServeFrontend:
         *,
         prompt_tokens: np.ndarray | None = None,
         timeout: float | None = None,
+        deadline_s: float | None = None,
     ) -> ServeHandle:
         """Admit one request into ``tenant``'s namespace.
 
         Blocks while the tenant is at ``max_inflight`` until a slot
         frees, up to ``timeout`` (default ``admission_timeout_s``), then
         raises :class:`AdmissionError`.  Thread-safe.
+
+        ``deadline_s`` (default: the tenant's ``deadline_s``) starts the
+        request's SLO clock at admission: a request still queued when it
+        expires is shed with :class:`DeadlineExceeded` instead of served
+        late, and queued requests dispatch earliest-deadline-first.
         """
         spec = self.tenants.get(tenant)
         if spec is None:
@@ -253,7 +317,12 @@ class ServeFrontend:
             )
             self._inflight[tenant] += 1
             self._counters["admitted"][tenant].inc()
-            self._queue.append(_Pending(handle, req, spec, time.perf_counter()))
+            now = time.perf_counter()
+            dl = deadline_s if deadline_s is not None else spec.deadline_s
+            self._queue.append(_Pending(
+                handle, req, spec, now,
+                deadline=None if dl is None else now + float(dl),
+            ))
             self._g_queue.set(len(self._queue))
             self._work.notify()
         return handle
@@ -265,8 +334,19 @@ class ServeFrontend:
     # -- dispatcher side ---------------------------------------------------
     def _take_batch(self) -> list[_Pending] | None:
         """Block for work; once some arrives, hold the batch open for
-        ``batch_window_s`` (or until full) and take FIFO order.  Returns
-        None when the server closes."""
+        ``batch_window_s`` (or until full), then form the batch with the
+        SLO in charge instead of arrival order:
+
+          1. **shed** requests whose deadline already passed — they are
+             resolved with :class:`DeadlineExceeded` (counted in
+             ``serve.deadline_shed``); serving them would spend a batch
+             slot on an answer the client has stopped waiting for;
+          2. take the rest **earliest-deadline-first** (undeadlined
+             requests sort last; FIFO breaks ties, so a deadline-free
+             workload keeps the historical order exactly).
+
+        Returns None when the server closes."""
+        shed: list[_Pending] = []
         with self._lock:
             while not self._queue and not self._closed:
                 self._work.wait()
@@ -274,13 +354,44 @@ class ServeFrontend:
                 return None
             if self.batch_window_s > 0 and len(self._queue) < self.max_batch:
                 self._work.wait(self.batch_window_s)
-            batch = [self._queue.popleft()
-                     for _ in range(min(len(self._queue), self.max_batch))]
+            now = time.perf_counter()
+            live = []
+            for p in self._queue:
+                if p.deadline is not None and now >= p.deadline:
+                    shed.append(p)
+                else:
+                    live.append(p)
+            order = sorted(
+                range(len(live)),
+                key=lambda i: (
+                    live[i].deadline if live[i].deadline is not None
+                    else float("inf"),
+                    i,
+                ),
+            )
+            taken = set(order[: self.max_batch])
+            batch = [live[i] for i in order[: self.max_batch]]
+            self._queue = deque(
+                live[i] for i in range(len(live)) if i not in taken
+            )
             self._g_queue.set(len(self._queue))
-            if not batch:
-                # close() drained the queue between wakeup and pop
-                return None if self._closed else []
-            return batch
+        for p in shed:  # resolve outside the lock (_resolve re-takes it)
+            self._counters["deadline_shed"][p.tenant.name].inc()
+            self._resolve(
+                p, None,
+                DeadlineExceeded(
+                    f"deadline passed before dispatch "
+                    f"(tenant {p.tenant.name!r})"
+                ),
+                time.perf_counter(),
+            )
+        if not batch:
+            # close() drained the queue between wakeup and pop, or every
+            # queued request was shed
+            with self._lock:
+                closed = self._closed
+            return None if closed else []
+        return batch
 
     def _resolve(self, p: _Pending, ids, err, t_searched: float) -> None:
         p.handle._ids = ids
@@ -314,6 +425,21 @@ class ServeFrontend:
             t_dispatch = time.perf_counter()
             for p in batch:
                 p.handle.trace.batch_form = t_dispatch - t_formed
+            # SLO propagation: under a degrading policy, give the store
+            # the batch's tightest remaining deadline as its per-round
+            # read budget — a slow device round then degrades the
+            # affected slots instead of stalling the whole batch past
+            # its deadline.  (Floored at _MIN_ROUND_DEADLINE_S: zero
+            # would disable the deadline entirely.)
+            budget_set = False
+            if self._store is not None and self.fault_policy != "fail":
+                dls = [p.deadline for p in batch if p.deadline is not None]
+                if dls:
+                    remaining = min(dls) - t_dispatch
+                    self._store.configure_resilience(
+                        round_deadline_s=max(remaining, _MIN_ROUND_DEADLINE_S)
+                    )
+                    budget_set = True
             try:
                 ids, stats = self.rag.retrieve(requests)
                 err = None
@@ -325,9 +451,15 @@ class ServeFrontend:
                 self.rag.engine.abandon_pending_io()
                 ids = stats = None
                 err = e
+            finally:
+                if budget_set:  # restore the store-level default
+                    self._store.configure_resilience(
+                        round_deadline_s=self._base_round_deadline_s
+                    )
             t_searched = time.perf_counter()
             n_ios = np.asarray(stats.n_ios) if err is None else None
             n_hits = np.asarray(stats.n_cache_hits) if err is None else None
+            n_deg = np.asarray(stats.n_degraded) if err is None else None
             for i, p in enumerate(batch):
                 p.handle.trace.search = t_searched - t_dispatch
                 name = p.tenant.name
@@ -335,8 +467,11 @@ class ServeFrontend:
                 if err is None:
                     p.handle.trace.n_ios = int(n_ios[i])
                     p.handle.trace.n_cache_hits = int(n_hits[i])
+                    p.handle.trace.n_degraded = int(n_deg[i])
                     self._counters["ios"][name].inc(int(n_ios[i]))
                     self._counters["cache_hits"][name].inc(int(n_hits[i]))
+                    if int(n_deg[i]):
+                        self._counters["degraded"][name].inc(int(n_deg[i]))
                     self._resolve(p, ids[i], None, t_searched)
                 else:
                     self._resolve(p, None, err, t_searched)
@@ -372,12 +507,19 @@ class ServeFrontend:
             queue_depth=self.queue_depth(),
             mean_batch_size=done / max(self.batches, 1),
             spans_mean_s=spans,
+            fault_policy=self.fault_policy,
+            deadline_shed=int(total("serve.deadline_shed")),
+            degraded=int(total("serve.degraded")),
             per_tenant={
                 name: {
                     "queries": int(total("serve.queries", tenant=name)),
                     "ios": int(total("serve.ios", tenant=name)),
                     "cache_hits": int(total("serve.cache_hits", tenant=name)),
                     "failed": int(total("serve.failed", tenant=name)),
+                    "deadline_shed": int(
+                        total("serve.deadline_shed", tenant=name)
+                    ),
+                    "degraded": int(total("serve.degraded", tenant=name)),
                 }
                 for name in self.tenants
             },

@@ -78,6 +78,22 @@ daemon thread to re-populate the OS page cache after a load (counted in
 ``warmed_bytes``); ``close()`` only signals it to stop — it never blocks
 on the warmer.
 
+**Resilience** (``RetryPolicy`` / ``on_error`` / ``round_deadline_s``):
+transient read errors (``TRANSIENT_ERRNOS``) retry with bounded
+exponential backoff + seeded jitter (``retried_ios``/``retry_exhausted``
+counters, ``disk.retry`` obs spans); a per-round deadline bounds how
+long one fetch round may spend in I/O (``deadline_trips``).  When
+retries exhaust or the deadline trips, ``on_error="degrade"`` marks the
+failed records instead of raising: their vectors come back as the +inf
+tunnel sentinel and their neighbor lists from the adjacency sidecar, so
+the search loop keeps full graph connectivity and simply drops the slots
+from the exact-ranked results — GateANN's own tunneling, repurposed as
+the degraded mode (``degraded_records``; ``SearchStats.n_degraded``
+carries the per-query view).  Logical counters keep counting every
+*requested* record under faults, so n_ios reconciliation is fault-proof.
+``store/faults.py`` injects deterministic faults underneath all of this
+for tests and the chaos-matrix nightly.
+
 Counter discipline: jax dispatch is asynchronous, so read the counters
 only after materializing the search outputs (``np.asarray(out.ids)`` or
 ``jax.block_until_ready``) — every fetch feeds the loop-carried state, so
@@ -87,8 +103,10 @@ round's read, so retired rounds have fully-counted I/O).
 from __future__ import annotations
 
 import dataclasses
+import errno
 import os
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Tuple
 
@@ -116,6 +134,60 @@ _GAP_CHUNK = 1 << 20  # discard-buffer granularity for bridged gaps
 
 IO_MODES = ("preadv", "pread", "gather")
 
+# error taxonomy: these errnos are worth retrying — the device/page-cache
+# path can transiently fail (EIO on a flaky link, EAGAIN under pressure,
+# EINTR on a signal, ETIMEDOUT from network-backed block devices) and
+# succeed on the reattempt.  Everything else (EBADF, ENOENT, EFAULT, a
+# short-read EOF, ...) means the request itself is wrong or the file is
+# gone: retrying cannot help, so those raise immediately whatever the
+# policy says.
+TRANSIENT_ERRNOS = frozenset(
+    {errno.EIO, errno.EAGAIN, errno.EINTR, errno.ETIMEDOUT}
+)
+
+ON_ERROR_POLICIES = ("fail", "degrade")
+
+
+def is_transient(exc: BaseException) -> bool:
+    """True for OSErrors a bounded retry may fix (see TRANSIENT_ERRNOS)."""
+    return isinstance(exc, OSError) and exc.errno in TRANSIENT_ERRNOS
+
+
+class ReadDeadlineError(OSError):
+    """The per-round read deadline tripped before this read completed.
+
+    Carries ``errno.ETIMEDOUT`` so the degrade path treats it like any
+    other exhausted transient error (the round's remaining slots degrade
+    instead of failing the query)."""
+
+    def __init__(self, msg: str):
+        super().__init__(errno.ETIMEDOUT, msg)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry with exponential backoff + deterministic jitter for
+    transient read errors.  ``max_retries=0`` (the default) preserves the
+    historical fail-fast behavior exactly."""
+
+    max_retries: int = 0
+    backoff_s: float = 1e-3  # first backoff; doubles (backoff_mult) after
+    backoff_mult: float = 2.0
+    jitter: float = 0.5  # +/- fraction of each backoff, seeded, not wall-clock
+    seed: int = 0
+
+    def backoff(self, attempt: int) -> float:
+        """Backoff before retry ``attempt`` (1-based), jitter applied.
+
+        Deterministic: the jitter draw is a pure function of
+        ``(seed, attempt)``, so a scripted fault test sleeps the same
+        amount every run."""
+        delay = self.backoff_s * self.backoff_mult ** (attempt - 1)
+        if self.jitter > 0.0:
+            u = float(np.random.default_rng((self.seed, attempt)).random())
+            delay *= 1.0 + self.jitter * (2.0 * u - 1.0)
+        return max(delay, 0.0)
+
 
 def default_io_mode() -> str:
     if _HAVE_PREADV:
@@ -136,16 +208,20 @@ def merge_ranges(sectors: np.ndarray) -> np.ndarray:
     return np.stack([sectors[starts], ends - starts + 1], axis=1)
 
 
-def _preadv_full(fd, views, offset) -> int:
+def _preadv_full(readv, views, offset) -> int:
     """Vectored read of ``views`` at ``offset``, resuming short reads and
-    chunking at IOV_MAX; returns the number of preadv calls issued."""
+    chunking at IOV_MAX; returns the number of preadv calls issued.
+
+    ``readv(batch, off) -> int`` is an ``os.preadv``-compatible callable
+    with the fd bound — the raw syscall, the fault injector's wrapper,
+    or the store's retrying wrapper."""
     calls = 0
     pending = list(views)
     off = int(offset)
     while pending:
         batch = pending[:_IOV_MAX]
         want = sum(len(v) for v in batch)
-        got = os.preadv(fd, batch, off)
+        got = readv(batch, off)
         calls += 1
         if got <= 0:
             raise IOError(f"preadv: unexpected EOF at offset {off}")
@@ -165,13 +241,16 @@ def _preadv_full(fd, views, offset) -> int:
     return calls
 
 
-def _pread_full(fd, view, offset) -> int:
-    """Plain positional read into ``view``; returns syscalls issued."""
+def _pread_full(read, view, offset) -> int:
+    """Plain positional read into ``view``; returns syscalls issued.
+
+    ``read(n, off) -> bytes`` is an ``os.pread``-compatible callable
+    with the fd bound."""
     calls = 0
     off = int(offset)
     mv = memoryview(view)
     while len(mv):
-        data = os.pread(fd, len(mv), off)
+        data = read(len(mv), off)
         calls += 1
         if not data:
             raise IOError(f"pread: unexpected EOF at offset {off}")
@@ -179,6 +258,11 @@ def _pread_full(fd, view, offset) -> int:
         mv = mv[len(data):]
         off += len(data)
     return calls
+
+
+def _passthrough_gather(fn):
+    """The uninjected gather entry point: just run the memmap gather."""
+    return fn()
 
 
 @dataclasses.dataclass
@@ -293,6 +377,10 @@ class DiskRecordStore:
         io_mode: str = "auto",
         max_gap_sectors: int | None = None,
         reader_threads: int = 4,
+        faults=None,  # FaultPlan (store/faults.py) — testing/chaos only
+        retry: RetryPolicy | None = None,
+        on_error: str = "fail",
+        round_deadline_s: float = 0.0,
     ):
         header = read_header(path)
         self.path = path
@@ -316,6 +404,27 @@ class DiskRecordStore:
             max_gap_sectors = None
         self.max_gap_sectors = max_gap_sectors
         self.reader_threads = max(int(reader_threads), 1)
+        # resilience policy: how transient read errors are retried and what
+        # happens when retries exhaust / the round deadline trips.  All
+        # three knobs may be retuned at runtime (configure_resilience).
+        if on_error not in ON_ERROR_POLICIES:
+            raise ValueError(f"on_error={on_error!r} not in {ON_ERROR_POLICIES}")
+        self.retry_policy = retry if retry is not None else RetryPolicy()
+        self.on_error = on_error
+        self.round_deadline_s = float(round_deadline_s)  # 0 = no deadline
+        # fault injection (store/faults.py): the injector wraps the three
+        # os-level read entry points; every io_mode and the async reader
+        # pool flow through them, nothing else changes.  With faults=None
+        # the raw os calls are bound directly — zero overhead.
+        self._injector = faults.injector() if faults is not None else None
+        if self._injector is not None:
+            self._io_preadv = self._injector.preadv
+            self._io_pread = self._injector.pread
+            self._io_gather = self._injector.gather
+        else:
+            self._io_preadv = os.preadv if _HAVE_PREADV else None
+            self._io_pread = os.pread if _HAVE_PREAD else None
+            self._io_gather = _passthrough_gather
         # measured, monotonic I/O counters (advanced by the host callback,
         # guarded by _lock — stores are shared across with_cache re-wraps
         # and may serve several engines/threads at once)
@@ -346,6 +455,11 @@ class DiskRecordStore:
             "abandoned_tokens": mk("disk.abandoned_tokens"),
             "abandon_events": mk("disk.abandon_events"),
             "warmed_bytes": mk("disk.warmed_bytes"),
+            "retried_ios": mk("disk.retried_ios"),
+            "retry_exhausted": mk("disk.retry_exhausted"),
+            "deadline_trips": mk("disk.deadline_trips"),
+            "degraded_records": mk("disk.degraded_records"),
+            "warm_errors": mk("disk.warm_errors"),
         }
         self._obs_inflight = self._obs.gauge(
             "disk.inflight_depth", store=self._obs_label
@@ -433,8 +547,8 @@ class DiskRecordStore:
             if not fut.cancel():
                 try:
                     fut.result()  # already running: let the read finish
-                except Exception:
-                    pass  # the abandoning caller is already unwinding
+                except Exception:  # gatelint: disable=silent-except — the abandoning caller is already unwinding with its own exception; this read's I/O is counted and its result unwanted
+                    pass
         if orphans:
             with self._lock:
                 self.abandoned_tokens += len(orphans)
@@ -447,7 +561,7 @@ class DiskRecordStore:
     def __del__(self):  # best-effort fd cleanup
         try:
             self.close()
-        except Exception:
+        except Exception:  # gatelint: disable=silent-except — interpreter-teardown destructor; attributes may already be collected and there is no caller to report to
             pass
 
     # -- the coalesced physical read ---------------------------------------
@@ -465,17 +579,74 @@ class DiskRecordStore:
             gap_bytes -= take
         return views
 
-    def _read_unique(self, uniq: np.ndarray) -> Tuple[np.ndarray, dict]:
+    def _with_retries(self, fn, *, deadline, tally):
+        """Run one raw read call with the resilience policy applied.
+
+        Transient OSErrors (see ``TRANSIENT_ERRNOS``) retry up to
+        ``retry_policy.max_retries`` times with exponential backoff +
+        seeded jitter; each reattempt is counted in the round tally's
+        ``retried_ios`` and timed under a ``disk.retry`` span.  Fatal
+        errors raise immediately.  A tripped ``deadline`` (absolute
+        ``perf_counter`` seconds, None = no deadline) raises
+        :class:`ReadDeadlineError` before issuing further I/O; backoffs
+        are clipped so a retry never sleeps past it."""
+        rp = self.retry_policy
+        attempt = 0
+        while True:
+            if deadline is not None and time.perf_counter() >= deadline:
+                raise ReadDeadlineError(
+                    f"round deadline ({self.round_deadline_s:.4f}s) tripped"
+                )
+            try:
+                return fn()
+            except OSError as e:
+                if not is_transient(e):
+                    raise
+                if attempt >= rp.max_retries:
+                    tally["retry_exhausted"] += 1
+                    raise
+                attempt += 1
+                tally["retried_ios"] += 1
+                delay = rp.backoff(attempt)
+                if deadline is not None:
+                    delay = min(delay, max(deadline - time.perf_counter(), 0.0))
+                with obs.trace.span("disk.retry", store=self._obs_label,
+                                    errno=str(e.errno)):
+                    time.sleep(delay)
+
+    def _fail_span(self, ok, tally, lo, hi, exc) -> None:
+        """One read group (a vectored call / merged range / segment
+        gather) failed after retries.  Under ``on_error="degrade"`` and a
+        transient cause, mark the group's wanted-record span failed — the
+        whole group, conservatively, since a mid-group error leaves the
+        buffer's valid prefix unknown — and keep reading the rest of the
+        round.  Fatal errors and the ``"fail"`` policy re-raise."""
+        if isinstance(exc, ReadDeadlineError):
+            tally["deadline_trips"] = 1  # once per round, not per group
+        if self.on_error != "degrade" or not is_transient(exc):
+            raise exc
+        ok[lo:hi] = False
+
+    def _read_unique(self, uniq: np.ndarray, io: dict) -> Tuple[np.ndarray, np.ndarray]:
         """Read the (sorted, unique) record sectors ``uniq`` coalesced.
 
-        Returns the (U,) structured records plus the physical-I/O tally
-        for this round (syscalls / ranges / gap sectors).
+        ``io`` is the caller's physical-I/O tally for this round
+        (syscalls / ranges / gap sectors / retry counters) — advanced
+        in place so the evidence of completed calls and exhausted
+        retries survives even when a fatal/``"fail"``-policy error
+        unwinds this read.  Returns the (U,) structured records and a
+        (U,) bool mask of which records were actually read — all-True
+        unless ``on_error="degrade"`` absorbed a failed group (those
+        records' buffer contents are garbage and must not be served).
         """
         sector = self.sector_bytes
         u = int(uniq.size)
         buf = np.empty(u * sector, np.uint8)
         out_mv = memoryview(buf)
-        io = {"syscalls": 0, "ranges": 0, "gap_sectors": 0}
+        ok = np.ones(u, bool)
+        deadline = None
+        if self.round_deadline_s > 0.0:
+            deadline = time.perf_counter() + self.round_deadline_s
         seg_of = np.searchsorted(self._row_starts, uniq, side="right") - 1
         bounds = np.searchsorted(seg_of, np.arange(len(self._segments) + 1))
         pos = 0  # output cursor: sorted ids -> contiguous output slices
@@ -488,41 +659,60 @@ class DiskRecordStore:
             ranges = merge_ranges(local)
             io["ranges"] += int(ranges.shape[0])
             if self.io_mode == "gather":
-                mm = seg.records()
-                got = mm[local]
-                buf.view(self._segments[0].rec_dtype)[pos : pos + local.size] = got
+                try:
+                    got = self._with_retries(
+                        lambda: self._io_gather(lambda: seg.records()[local]),
+                        deadline=deadline, tally=io,
+                    )
+                    buf.view(self._segments[0].rec_dtype)[pos : pos + local.size] = got
+                except OSError as e:
+                    self._fail_span(ok, io, pos, pos + local.size, e)
                 pos += local.size
                 continue
             fd = seg.open_fd()
+            readv = lambda batch, off: self._with_retries(  # noqa: E731
+                lambda: self._io_preadv(fd, batch, off),
+                deadline=deadline, tally=io,
+            )
+            read1 = lambda n, off: self._with_retries(  # noqa: E731
+                lambda: self._io_pread(fd, n, off),
+                deadline=deadline, tally=io,
+            )
             if self.io_mode == "pread":
                 for start, count in ranges:
                     nb = int(count) * sector
-                    io["syscalls"] += _pread_full(
-                        fd, out_mv[pos * sector : pos * sector + nb],
-                        seg.data_offset + int(start) * sector,
-                    )
+                    try:
+                        io["syscalls"] += _pread_full(
+                            read1, out_mv[pos * sector : pos * sector + nb],
+                            seg.data_offset + int(start) * sector,
+                        )
+                    except OSError as e:
+                        self._fail_span(ok, io, pos, pos + int(count), e)
                     pos += int(count)
                 continue
             # preadv: one vectored call per round and segment — wanted
             # ranges scatter straight into the output, bridged gaps land
             # in the discard buffer.  A gap wider than max_gap_sectors is
             # never bridged: the round splits into another vectored call
-            # there instead, trading a syscall for the over-read.
+            # there instead, trading a syscall for the over-read.  Groups
+            # are collected first, then issued, so a failed group maps
+            # cleanly to its wanted-record span.
             max_gap = self.max_gap_sectors
+            groups = []  # (views, group_start_sector, pos_lo, pos_hi)
             views = []
             prev_end = None
             group_start = 0
+            gpos_lo = pos
             for start, count in ranges:
                 gap = 0 if prev_end is None else int(start - prev_end)
                 if views and max_gap is not None and gap > max_gap:
-                    io["syscalls"] += _preadv_full(
-                        fd, views, seg.data_offset + group_start * sector
-                    )
+                    groups.append((views, group_start, gpos_lo, pos))
                     views = []
                     prev_end = None
                     gap = 0
                 if prev_end is None:
                     group_start = int(start)
+                    gpos_lo = pos
                 elif gap:
                     io["gap_sectors"] += gap
                     views.extend(self._gap_views(gap * sector))
@@ -530,10 +720,15 @@ class DiskRecordStore:
                 views.append(out_mv[pos * sector : pos * sector + nb])
                 pos += int(count)
                 prev_end = int(start + count)
-            io["syscalls"] += _preadv_full(
-                fd, views, seg.data_offset + group_start * sector
-            )
-        return buf.view(self._segments[0].rec_dtype), io
+            groups.append((views, group_start, gpos_lo, pos))
+            for g_views, g_start, g_lo, g_hi in groups:
+                try:
+                    io["syscalls"] += _preadv_full(
+                        readv, g_views, seg.data_offset + g_start * sector
+                    )
+                except OSError as e:
+                    self._fail_span(ok, io, g_lo, g_hi, e)
+        return buf.view(self._segments[0].rec_dtype), ok
 
     # -- the measured host read --------------------------------------------
     def _host_fetch(self, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -545,18 +740,64 @@ class DiskRecordStore:
         vecs = np.zeros(ids.shape + (self.dim,), np.float32)
         nbrs = np.full(ids.shape + (self.degree,), -1, np.int32)
         m = int(vmask.sum())
-        io = {"syscalls": 0, "ranges": 0, "gap_sectors": 0}
+        io = {"syscalls": 0, "ranges": 0, "gap_sectors": 0,
+              "retried_ios": 0, "retry_exhausted": 0, "deadline_trips": 0}
         u = 0
+        n_degraded = 0
         if m:
             uniq, inv = np.unique(flat[vmask], return_inverse=True)
             u = int(uniq.size)
-            with obs.trace.span("disk.preadv", store=self._obs_label,
-                                io_mode=self.io_mode):
-                recs, io = self._read_unique(uniq)
+            try:
+                with obs.trace.span("disk.preadv", store=self._obs_label,
+                                    io_mode=self.io_mode):
+                    recs, ok_u = self._read_unique(uniq, io)
+            except OSError:
+                # the raise unwinds this fetch, but completed syscalls and
+                # exhausted retries already happened — fold the physical
+                # evidence before propagating so a "fail"-policy error
+                # never hides its retry history from the counters (no
+                # records served, so the logical counters stay untouched)
+                with self._lock:
+                    self.ranges_read += io["ranges"]
+                    self.syscalls += io["syscalls"]
+                    self.gap_sectors_read += io["gap_sectors"]
+                    self.retried_ios += io["retried_ios"]
+                    self.retry_exhausted += io["retry_exhausted"]
+                    self.deadline_trips += io["deadline_trips"]
+                    self.fetch_rounds += 1
+                    self.read_rounds += 1
+                if self._obs.enabled:
+                    c = self._obs_counters
+                    c["ranges_read"].inc(io["ranges"])
+                    c["syscalls"].inc(io["syscalls"])
+                    c["gap_sectors_read"].inc(io["gap_sectors"])
+                    c["retried_ios"].inc(io["retried_ios"])
+                    c["retry_exhausted"].inc(io["retry_exhausted"])
+                    c["deadline_trips"].inc(io["deadline_trips"])
+                    c["fetch_rounds"].inc()
+                    c["read_rounds"].inc()
+                raise
             got = recs[inv]  # scatter back to beam order (dups included)
-            vecs.reshape(-1, self.dim)[vmask] = got["vec"]
-            nbrs.reshape(-1, self.degree)[vmask] = got["nbrs"]
+            gvec = got["vec"]
+            gnbr = got["nbrs"]
+            if not ok_u.all():
+                # degraded slots: the buffer bytes for a failed group are
+                # garbage.  Replace the vector with the +inf sentinel (the
+                # search loop drops the exact-distance contribution — the
+                # GateANN tunnel semantics) and serve the neighbor list
+                # from the adjacency sidecar, so traversal/connectivity is
+                # IDENTICAL to a successful fetch.  fancy-indexing ``recs``
+                # already copied, so in-place writes are safe.
+                bad = ~ok_u[inv]
+                n_degraded = int(bad.sum())
+                gvec[bad] = np.inf
+                gnbr[bad] = self._adjacency_host()[flat[vmask][bad]]
+            vecs.reshape(-1, self.dim)[vmask] = gvec
+            nbrs.reshape(-1, self.degree)[vmask] = gnbr
         with self._lock:
+            # logical counters keep counting every REQUESTED record —
+            # degraded reads included — so n_ios reconciliation holds
+            # under faults; degraded_records carries the failure tally
             self.records_read += m
             self.pages_read += m * self.pages_per_record
             self.bytes_read += m * self.sector_bytes
@@ -566,6 +807,10 @@ class DiskRecordStore:
             self.gap_sectors_read += io["gap_sectors"]
             self.fetch_rounds += 1
             self.read_rounds += int(u > 0)
+            self.retried_ios += io["retried_ios"]
+            self.retry_exhausted += io["retry_exhausted"]
+            self.deadline_trips += io["deadline_trips"]
+            self.degraded_records += n_degraded
         if self._obs.enabled:
             c = self._obs_counters
             # records BEFORE unique: a registry snapshot taken between the
@@ -580,6 +825,14 @@ class DiskRecordStore:
             c["gap_sectors_read"].inc(io["gap_sectors"])
             c["fetch_rounds"].inc()
             c["read_rounds"].inc(int(u > 0))
+            if io["retried_ios"]:
+                c["retried_ios"].inc(io["retried_ios"])
+            if io["retry_exhausted"]:
+                c["retry_exhausted"].inc(io["retry_exhausted"])
+            if io["deadline_trips"]:
+                c["deadline_trips"].inc(io["deadline_trips"])
+            if n_degraded:
+                c["degraded_records"].inc(n_degraded)
         return vecs, nbrs
 
     def _traced_fetch(self, ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -730,7 +983,14 @@ class DiskRecordStore:
             try:
                 fd = os.open(seg.path, os.O_RDONLY)
             except OSError:
-                continue  # re-saved/swept segment — nothing to warm
+                # re-saved/swept segment — nothing to warm, but a vanished
+                # file is still evidence (a sweep race, a bad mount):
+                # count it instead of discarding it
+                with self._lock:
+                    self.warm_errors += 1
+                if self._obs.enabled:
+                    self._obs_counters["warm_errors"].inc()
+                continue
             try:
                 size = os.fstat(fd).st_size
                 off = 0
@@ -764,6 +1024,12 @@ class DiskRecordStore:
             try:
                 fd = os.open(p, os.O_RDONLY)
             except OSError:
+                # a cold-cache benchmark that silently fails to drop the
+                # cache reports warm numbers as cold — count the miss
+                with self._lock:
+                    self.warm_errors += 1
+                if self._obs.enabled:
+                    self._obs_counters["warm_errors"].inc()
                 continue
             try:
                 os.posix_fadvise(fd, 0, 0, os.POSIX_FADV_DONTNEED)
@@ -792,6 +1058,16 @@ class DiskRecordStore:
         self.abandoned_tokens = 0
         # background warmer
         self.warmed_bytes = 0
+        # resilience: transient-error retries, exhaustions after bounded
+        # retry, per-round deadline trips, and record slots served
+        # degraded (tunnel sentinel) instead of failing the query
+        self.retried_ios = 0
+        self.retry_exhausted = 0
+        self.deadline_trips = 0
+        self.degraded_records = 0
+        # warm/drop-page-cache paths that hit an OSError (previously a
+        # silent swallow — see the silent-except gatelint rule)
+        self.warm_errors = 0
 
     def io_counters(self) -> dict:
         with self._lock:
@@ -809,7 +1085,37 @@ class DiskRecordStore:
                 "overlapped_rounds": self.overlapped_rounds,
                 "abandoned_tokens": self.abandoned_tokens,
                 "warmed_bytes": self.warmed_bytes,
+                "retried_ios": self.retried_ios,
+                "retry_exhausted": self.retry_exhausted,
+                "deadline_trips": self.deadline_trips,
+                "degraded_records": self.degraded_records,
+                "warm_errors": self.warm_errors,
             }
+
+    def configure_resilience(
+        self,
+        *,
+        retry: RetryPolicy | None = None,
+        on_error: str | None = None,
+        round_deadline_s: float | None = None,
+    ) -> None:
+        """Retune the resilience policy at runtime (the serve layer's
+        ``FaultPolicy`` knob and per-batch deadline budgets map here).
+        Takes effect on the next read round; safe to call between
+        batches while reads are quiescent."""
+        if on_error is not None and on_error not in ON_ERROR_POLICIES:
+            raise ValueError(f"on_error={on_error!r} not in {ON_ERROR_POLICIES}")
+        with self._lock:
+            if retry is not None:
+                self.retry_policy = retry
+            if on_error is not None:
+                self.on_error = on_error
+            if round_deadline_s is not None:
+                self.round_deadline_s = float(round_deadline_s)
+
+    def fault_counters(self) -> dict:
+        """The fault injector's tally ({} when no FaultPlan is attached)."""
+        return self._injector.counters() if self._injector is not None else {}
 
     def reset_io_counters(self) -> None:
         """Zero the store-local counters.  The mirrored ``disk.*``

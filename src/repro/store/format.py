@@ -330,7 +330,7 @@ def _sweep_stale_segments(path: str, manifest: dict | None) -> None:
         if os.path.basename(seg) not in live:
             try:
                 os.remove(seg)
-            except OSError:
+            except OSError:  # gatelint: disable=silent-except — best-effort sweep after the atomic commit already succeeded; a still-open fd or permission quirk pins the stale inode and the next save retries the removal
                 pass
 
 

@@ -367,6 +367,66 @@ def pipelined(store, rounds, ids):
     assert live(good, "token-leak") == []
 
 
+# -------------------------------------------------------- silent-except --
+def test_silent_except_fires_on_broad_swallows():
+    src = """
+import os
+
+def sweep(paths):
+    for p in paths:
+        try:
+            os.remove(p)
+        except OSError:
+            pass
+
+def drain(q):
+    while True:
+        try:
+            q.get_nowait()
+        except Exception:
+            continue
+
+def teardown(self):
+    try:
+        self.close()
+    except:
+        ...
+"""
+    findings = live(src, "silent-except")
+    assert len(findings) == 3
+    assert {f.line for f in findings} == {8, 15, 21}
+    assert any("bare except" in f.message for f in findings)
+
+
+def test_silent_except_negative():
+    # narrow catches, handled errors, and re-raises are all fine
+    src = """
+import errno, os
+
+def read(fd):
+    try:
+        return os.pread(fd, 10, 0)
+    except OSError as e:
+        if e.errno != errno.EIO:
+            raise
+        self.warm_errors += 1
+        return b""
+
+def lookup(d, k):
+    try:
+        return d[k]
+    except KeyError:
+        pass  # narrow catch: expected control flow
+
+def logged(fn):
+    try:
+        fn()
+    except Exception as e:
+        print("failed:", e)
+"""
+    assert live(src, "silent-except") == []
+
+
 # --------------------------------------- suppressions, baseline, meta --
 def test_suppression_with_reason_silences_and_records():
     src = """

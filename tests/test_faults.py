@@ -1,0 +1,486 @@
+"""Fault injection + the resilient I/O path: retries, deadlines, degrade.
+
+Contract under test (store/faults.py + the resilience layer threaded
+through store/disk.py, core/search.py, serve/server.py):
+
+  * The fault wrapper is *transparent* when inactive: a store opened
+    with an all-zeros ``FaultPlan`` is bit-identical to an unwrapped
+    store at every io_mode and pipeline depth — the injector routes
+    every call but alters none.
+  * Injected short reads are REAL truncated syscalls, so
+    ``_preadv_full``/``_pread_full`` resume against genuine partial
+    data: reassembly stays byte-exact and ``syscalls`` counts every
+    completed call, including resumes and ``_IOV_MAX`` splits.
+  * Transient errors (EIO/EAGAIN) retry under ``RetryPolicy`` with
+    counted reattempts; exhausted retries either raise (``on_error=
+    "fail"``) or degrade the failed read group to *tunneled* records —
+    +inf vector sentinel, neighbors served from the adjacency sidecar —
+    so traversal continues and only exact reranking skips the slot.
+  * Degradation is fully accounted: ``degraded_records`` at the store,
+    ``n_degraded`` per query in SearchStats, no token leaks
+    (``abandoned_tokens == 0``) at any pipeline depth, and the logical
+    counters keep counting *requested* records so the
+    records_read == sum(n_ios) reconciliation survives faults.
+  * The serve layer sheds expired requests (EDF order, counted
+    ``deadline_shed``) and under ``fault_policy="retry_then_degrade"``
+    no request fails while faults are injected.
+
+Everything here runs scripted schedules (exact call indices), never
+probabilities — tier-1 stays deterministic; probabilistic sweeps live
+in benchmarks/chaos_matrix.py.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import GateANNEngine, SearchConfig
+from repro.store import DiskRecordStore, FaultPlan, RetryPolicy, is_transient
+from repro.store import disk as diskm
+from repro.store.disk import ReadDeadlineError
+
+
+@pytest.fixture(scope="module")
+def index_path(tiny_engine, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("faults") / "tiny.gann")
+    tiny_engine.save(path)
+    return path
+
+
+@pytest.fixture(scope="module")
+def clean_store(index_path):
+    return DiskRecordStore.open(index_path, io_mode="preadv")
+
+
+def _cfg(depth=1, mode="gate"):
+    return SearchConfig(mode=mode, search_l=32, beam_width=4,
+                        pipeline_depth=depth)
+
+
+def _label_params(nq, label=0):
+    return np.full(nq, label, np.int32)
+
+
+@pytest.fixture(scope="module")
+def clean_search(index_path, tiny_corpus):
+    """(ids, dists) of an unwrapped clean disk engine per pipeline depth —
+    the bit-identity / overlap baseline, computed once for the module."""
+    _, _, queries = tiny_corpus
+    eng = GateANNEngine.load(index_path, store_tier="disk")
+    fp = _label_params(len(queries))
+    out = {}
+    for depth in (1, 2):
+        o = eng.search(queries, filter_kind="label", filter_params=fp,
+                       search_config=_cfg(depth))
+        out[depth] = (np.asarray(o.ids), np.asarray(o.dists))
+    return out
+
+
+# ------------------------------------------------------------- the plan --
+def test_plan_validation():
+    with pytest.raises(ValueError, match="probabilities"):
+        FaultPlan(p_eio=0.8, p_short=0.5)
+    with pytest.raises(ValueError, match="short_frac"):
+        FaultPlan(short_frac=1.5)
+    with pytest.raises(ValueError, match="schedule"):
+        FaultPlan(schedule=((0, "nope"),))
+    with pytest.raises(ValueError, match="schedule"):
+        FaultPlan(schedule=((-1, "eio"),))
+    assert not FaultPlan().active
+    assert FaultPlan(p_eio=0.01).active
+    assert FaultPlan(schedule=((3, "eio"),)).active
+
+
+def test_plan_decisions_deterministic():
+    """The injection decision is a pure function of (seed, call index):
+    two injectors from the same plan agree call-for-call, a different
+    seed diverges, and max_faults caps the total."""
+    plan = FaultPlan(seed=42, p_eio=0.2, p_short=0.2)
+    inj_a, inj_b = plan.injector(), plan.injector()
+    a = [inj_a._decide() for _ in range(200)]
+    b = [inj_b._decide() for _ in range(200)]
+    assert a == b
+    assert any(k is not None for k in a)  # 40% over 200 calls must fire
+    inj_c = FaultPlan(seed=43, p_eio=0.2, p_short=0.2).injector()
+    assert [inj_c._decide() for _ in range(200)] != a
+    capped = FaultPlan(seed=42, p_eio=0.5, max_faults=3).injector()
+    got = [capped._decide() for _ in range(200)]
+    assert sum(k is not None for k in got) == 3
+
+
+def test_schedule_fires_at_exact_indices():
+    inj = FaultPlan(schedule=((2, "eio"), (5, "short"))).injector()
+    got = [inj._decide() for _ in range(7)]
+    assert got == [None, None, "eio", None, None, "short", None]
+    c = inj.counters()
+    assert c["read_calls"] == 7 and c["faults_injected"] == 2
+    assert c["injected_eio"] == 1 and c["injected_short"] == 1
+
+
+# --------------------------------------------- transparency (zero fault) --
+@pytest.mark.parametrize("io_mode", ("preadv", "pread", "gather"))
+def test_inactive_wrapper_is_bit_identical(index_path, clean_store, io_mode):
+    """Wrapping the read path with an idle injector must change nothing:
+    same bytes, same physical counters, calls routed and counted."""
+    store = DiskRecordStore.open(index_path, io_mode=io_mode,
+                                 faults=FaultPlan(seed=5))
+    try:
+        rng = np.random.default_rng(3)
+        ids = rng.integers(-1, store.n, size=(6, 9)).astype(np.int32)
+        vecs, nbrs = store._host_fetch(ids)
+        want_v, want_n = clean_store._host_fetch(ids)
+        np.testing.assert_array_equal(vecs, want_v)
+        np.testing.assert_array_equal(nbrs, want_n)
+        fc = store.fault_counters()
+        assert fc["read_calls"] > 0 and fc["faults_injected"] == 0
+        d = store.io_counters()
+        assert d["degraded_records"] == 0 and d["retried_ios"] == 0
+    finally:
+        store.close()
+
+
+# ------------------------------------------------------- short reads ------
+@pytest.mark.parametrize("io_mode", ("preadv", "pread"))
+def test_short_read_resume_is_byte_exact(index_path, clean_store, io_mode):
+    """Scheduled short reads truncate the real syscall, so the resume
+    loops re-issue for the remainder: bytes stay exact and ``syscalls``
+    counts the extra completed calls."""
+    plan = FaultPlan(seed=1, schedule=((0, "short"), (1, "short")),
+                     short_frac=0.3)
+    store = DiskRecordStore.open(index_path, io_mode=io_mode, faults=plan)
+    try:
+        ids = np.asarray([[2, 3, 4, 5, 6, 7, 8, 9]], np.int32)
+        before = store.io_counters()
+        vecs, nbrs = store._host_fetch(ids)
+        d = {k: v - before[k] for k, v in store.io_counters().items()}
+        want_v, want_n = clean_store._host_fetch(ids)
+        np.testing.assert_array_equal(vecs, np.asarray(want_v))
+        np.testing.assert_array_equal(nbrs, np.asarray(want_n))
+        # one contiguous range = 1 clean call; two injected truncations
+        # force at least two resume calls on top
+        assert d["syscalls"] >= 3
+        assert d["degraded_records"] == 0 and d["retried_ios"] == 0
+        assert store.fault_counters()["injected_short"] == 2
+    finally:
+        store.close()
+
+
+def test_short_reads_across_iov_max_boundary(index_path, clean_store,
+                                             monkeypatch):
+    """With _IOV_MAX forced tiny, a wide gappy beam splits into many
+    vectored batches; shorts landing mid-batch must resume within the
+    rest+pending recombination without corrupting any record."""
+    monkeypatch.setattr(diskm, "_IOV_MAX", 3)
+    plan = FaultPlan(seed=2, short_frac=0.5,
+                     schedule=tuple((i, "short") for i in (0, 2, 5)))
+    store = DiskRecordStore.open(index_path, io_mode="preadv", faults=plan)
+    try:
+        # every other sector: each record is its own range, so iovecs
+        # (record + gap views) overflow the forced 3-entry batches
+        ids = np.arange(0, 80, 2, dtype=np.int32)[None, :]
+        before = store.io_counters()
+        vecs, nbrs = store._host_fetch(ids)
+        d = {k: v - before[k] for k, v in store.io_counters().items()}
+        want_v, want_n = clean_store._host_fetch(ids)
+        np.testing.assert_array_equal(vecs, np.asarray(want_v))
+        np.testing.assert_array_equal(nbrs, np.asarray(want_n))
+        assert store.fault_counters()["injected_short"] == 3
+        # 40 wanted + 39 gap iovecs can't move in fewer than 27
+        # 3-entry batches; the injected truncations add resume calls on
+        # top (exact count depends on where the rest+pending recombine
+        # lands relative to batch boundaries)
+        assert d["syscalls"] >= 27
+        assert d["degraded_records"] == 0
+    finally:
+        store.close()
+
+
+# ------------------------------------------------- retries and degrade ---
+def test_transient_taxonomy():
+    assert is_transient(OSError(5, "eio"))  # EIO
+    assert is_transient(OSError(11, "eagain"))
+    assert is_transient(ReadDeadlineError("tripped"))
+    assert not is_transient(OSError(2, "enoent"))
+    assert not is_transient(IOError("unexpected EOF"))  # errno None: fatal
+
+
+def test_eagain_absorbed_by_retry(index_path, clean_store):
+    plan = FaultPlan(seed=1, schedule=((0, "eagain"),))
+    store = DiskRecordStore.open(
+        index_path, io_mode="preadv", faults=plan,
+        retry=RetryPolicy(max_retries=2, backoff_s=1e-5),
+    )
+    try:
+        ids = np.asarray([[10, 11, 12]], np.int32)
+        vecs, nbrs = store._host_fetch(ids)
+        want_v, want_n = clean_store._host_fetch(ids)
+        np.testing.assert_array_equal(vecs, np.asarray(want_v))
+        np.testing.assert_array_equal(nbrs, np.asarray(want_n))
+        d = store.io_counters()
+        assert d["retried_ios"] == 1 and d["retry_exhausted"] == 0
+        assert d["degraded_records"] == 0
+    finally:
+        store.close()
+
+
+def test_eio_degrades_group_to_tunneled_records(index_path, clean_store):
+    """An exhausted EIO under on_error="degrade" fails the whole read
+    group: vectors come back +inf (the tunnel sentinel — NaN would pass
+    the INF comparison in results_insert), neighbors still come from the
+    adjacency sidecar, and the logical counters keep counting what was
+    REQUESTED so reconciliation survives."""
+    plan = FaultPlan(seed=1, schedule=((0, "eio"),))
+    store = DiskRecordStore.open(index_path, io_mode="preadv", faults=plan,
+                                 on_error="degrade")
+    try:
+        ids = np.asarray([[20, 21, 22]], np.int32)
+        before = store.io_counters()
+        vecs, nbrs = store._host_fetch(ids)
+        d = {k: v - before[k] for k, v in store.io_counters().items()}
+        assert np.isinf(vecs).all()  # one group -> all three degraded
+        want_v, want_n = clean_store._host_fetch(ids)
+        np.testing.assert_array_equal(nbrs, np.asarray(want_n))  # sidecar
+        assert d["records_read"] == 3  # logical counters: requested
+        assert d["degraded_records"] == 3
+        assert d["retry_exhausted"] == 1 and d["retried_ios"] == 0
+        # the injector exhausted its schedule: the next fetch is clean
+        vecs2, _ = store._host_fetch(ids)
+        np.testing.assert_array_equal(vecs2, np.asarray(want_v))
+    finally:
+        store.close()
+
+
+def test_fail_policy_raises_and_store_survives(index_path, clean_store):
+    plan = FaultPlan(seed=1, schedule=((0, "eio"),))
+    store = DiskRecordStore.open(index_path, io_mode="preadv", faults=plan)
+    try:
+        ids = np.asarray([[30, 31]], np.int32)
+        with pytest.raises(OSError):
+            store._host_fetch(ids)
+        assert store.io_counters()["retry_exhausted"] == 1
+        vecs, nbrs = store._host_fetch(ids)  # schedule spent: serves again
+        want_v, want_n = clean_store._host_fetch(ids)
+        np.testing.assert_array_equal(vecs, np.asarray(want_v))
+        np.testing.assert_array_equal(nbrs, np.asarray(want_n))
+    finally:
+        store.close()
+
+
+def test_round_deadline_degrades_remaining_groups(index_path):
+    """A delay fault longer than the round deadline: the delayed group
+    still lands, but the NEXT group's pre-issue deadline check trips and
+    degrades it (counted once per round)."""
+    plan = FaultPlan(seed=1, schedule=((0, "delay"),), delay_s=0.05)
+    store = DiskRecordStore.open(
+        index_path, io_mode="preadv", faults=plan, on_error="degrade",
+        round_deadline_s=0.01, max_gap_sectors=2,
+    )
+    try:
+        # sectors 0 and 1000: gap >> max_gap_sectors -> two preadv groups
+        ids = np.asarray([[0, 1000]], np.int32)
+        vecs, _ = store._host_fetch(ids)
+        d = store.io_counters()
+        assert d["deadline_trips"] == 1
+        assert d["degraded_records"] == 1
+        assert not np.isinf(vecs[0, 0]).any()  # first group landed
+        assert np.isinf(vecs[0, 1]).all()  # second group degraded
+    finally:
+        store.close()
+
+
+def test_configure_resilience_validation_and_effect(index_path):
+    store = DiskRecordStore.open(index_path)
+    try:
+        with pytest.raises(ValueError, match="on_error"):
+            store.configure_resilience(on_error="explode")
+        store.configure_resilience(retry=RetryPolicy(max_retries=4),
+                                   on_error="degrade", round_deadline_s=0.5)
+        assert store.retry_policy.max_retries == 4
+        assert store.on_error == "degrade"
+        assert store.round_deadline_s == 0.5
+    finally:
+        store.close()
+
+
+# ------------------------------------------------------ search-level -----
+def test_zero_fault_search_bit_identical(index_path, tiny_corpus,
+                                         clean_search):
+    """FaultPlan(seed, all-zero probabilities) wrapped around the disk
+    tier must leave search output bit-identical at every pipeline
+    depth — the acceptance gate for wrapper transparency."""
+    _, _, queries = tiny_corpus
+    wrapped = GateANNEngine.load(index_path, store_tier="disk",
+                                 faults=FaultPlan(seed=5))
+    fp = _label_params(len(queries))
+    for depth in (1, 2):
+        out_w = wrapped.search(queries, filter_kind="label",
+                               filter_params=fp, search_config=_cfg(depth))
+        want_ids, want_dists = clean_search[depth]
+        np.testing.assert_array_equal(want_ids, np.asarray(out_w.ids))
+        np.testing.assert_array_equal(want_dists, np.asarray(out_w.dists))
+        assert int(np.asarray(out_w.stats.n_degraded).sum()) == 0
+    assert wrapped.record_store.fault_counters()["read_calls"] > 0
+
+
+@pytest.mark.parametrize("depth", (1, 2))
+def test_degraded_search_completes_and_accounts(index_path, tiny_corpus,
+                                                clean_search, depth):
+    """Scheduled EIOs under degrade: the search completes, degraded
+    slots are counted per query, no pipelined token leaks, and the
+    requested-records reconciliation holds."""
+    _, _, queries = tiny_corpus
+    plan = FaultPlan(seed=7, schedule=tuple((i, "eio") for i in (1, 3, 6)))
+    eng = GateANNEngine.load(index_path, store_tier="disk",
+                             io_on_error="degrade", faults=plan)
+    store = eng.record_store
+    fp = _label_params(len(queries))
+    out = eng.search(queries, filter_kind="label", filter_params=fp,
+                     search_config=_cfg(depth))
+    stats = out.stats
+    # materialize BEFORE reading counters: the ordered io_callbacks only
+    # complete when the stats arrays do (same discipline as obs.stats)
+    n_deg = int(np.asarray(stats.n_degraded).sum())
+    d = store.io_counters()
+    assert n_deg > 0
+    assert d["degraded_records"] == n_deg
+    assert d["abandoned_tokens"] == 0
+    assert len(store._pending) == 0
+    assert d["records_read"] == int(np.asarray(stats.n_ios).sum())
+    # degraded slots were dropped from exact rerank, never served: every
+    # returned id is a real record or the -1 pad
+    ids = np.asarray(out.ids)
+    assert ((ids >= -1) & (ids < store.n)).all()
+    # graceful, not catastrophic: losing 3 of ~14 read rounds outright
+    # (whole-round degradation is the conservative worst case — the
+    # chaos benchmark sweeps the gentler probabilistic regimes) still
+    # leaves substantial top-10 agreement with the clean run
+    ref = clean_search[depth][0][:, :10]
+    got = ids[:, :10]
+    overlap = np.mean([
+        len(set(got[i].tolist()) & set(ref[i].tolist())) / 10.0
+        for i in range(len(ref))
+    ])
+    assert overlap >= 0.3
+
+
+def test_degraded_search_records_obs_counters(index_path, tiny_corpus):
+    from repro import obs
+
+    _, _, queries = tiny_corpus
+    plan = FaultPlan(seed=7, schedule=((2, "eio"),))
+    reg = obs.MetricsRegistry(enabled=True)
+    prev = obs.set_default_registry(reg)
+    try:
+        eng = GateANNEngine.load(index_path, store_tier="disk",
+                                 io_on_error="degrade", faults=plan)
+        eng.search(queries, filter_kind="label",
+                   filter_params=_label_params(len(queries)),
+                   search_config=_cfg(1))
+    finally:
+        obs.set_default_registry(prev)
+    snap = reg.snapshot()
+
+    def total(name):
+        return snap.get(name, {}).get("total", 0)
+
+    assert total("search.degraded") > 0
+    assert total("search.degraded_queries") > 0
+    assert total("disk.degraded_records") == total("search.degraded")
+    assert total("disk.retry_exhausted") > 0
+
+
+# ------------------------------------------------------------ serve ------
+def _serve_setup(index_path, queries, plan=None, **fe_kwargs):
+    from repro.serve import RAGServer, ServeFrontend, TenantSpec
+
+    eng = GateANNEngine.load(index_path, store_tier="disk", faults=plan)
+    rag = RAGServer(
+        engine=eng, cfg=None, params=None, layout=None,
+        passage_tokens=np.zeros((int(eng.vectors.shape[0]), 4), np.int32),
+        search_config=_cfg(1), bucket_sizes=(4,),
+    )
+    tenants = [TenantSpec(f"t{i}", "label", np.int32(i), max_inflight=32)
+               for i in range(2)]
+    return eng, ServeFrontend(rag, tenants, max_batch=4,
+                              batch_window_s=0.005, **fe_kwargs)
+
+
+def test_serve_rejects_unknown_fault_policy(index_path, tiny_corpus):
+    _, _, queries = tiny_corpus
+    with pytest.raises(ValueError, match="fault_policy"):
+        _serve_setup(index_path, queries, fault_policy="explode")
+
+
+def test_serve_deadline_shed(index_path, tiny_corpus):
+    """An already-expired deadline never reaches the engine: the batch
+    former sheds it with DeadlineExceeded and counts the shed."""
+    from repro.serve import DeadlineExceeded
+
+    _, _, queries = tiny_corpus
+    _, srv = _serve_setup(index_path, queries)
+    with srv:
+        h = srv.submit("t0", queries[0], deadline_s=0.0)
+        with pytest.raises(DeadlineExceeded):
+            h.result(timeout=30.0)
+        ok = srv.submit("t0", queries[1])  # no deadline: still served
+        assert ok.result(timeout=120.0) is not None
+        rep = srv.io_report()
+    assert rep["deadline_shed"] == 1
+    assert rep["per_tenant"]["t0"]["deadline_shed"] == 1
+    assert rep["completed"] == 1 and rep["failed"] == 1
+
+
+def test_serve_retry_then_degrade_no_request_fails(index_path, tiny_corpus):
+    """The headline chaos contract at tier-1 scale: scheduled EIO bursts
+    under fault_policy="retry_then_degrade" — every request succeeds,
+    degraded slots are attributed per tenant, nothing leaks."""
+    _, _, queries = tiny_corpus
+    plan = FaultPlan(seed=3, schedule=tuple((i, "eio") for i in (1, 2, 5)))
+    eng, srv = _serve_setup(index_path, queries, plan=plan,
+                            fault_policy="retry_then_degrade")
+    with srv:
+        handles = [srv.submit(f"t{i % 2}", queries[i]) for i in range(8)]
+        results = [h.result(timeout=120.0) for h in handles]
+        rep = srv.io_report()
+    assert all(r is not None for r in results)
+    assert rep["failed"] == 0 and rep["completed"] == 8
+    assert rep["fault_policy"] == "retry_then_degrade"
+    # retries absorbed back-to-back schedule entries (1,2): the retried
+    # call at idx 2 hits the next scheduled fault, then succeeds at 3 —
+    # whatever degraded got attributed, totals and traces agree
+    assert rep["degraded"] == sum(
+        t["degraded"] for t in rep["per_tenant"].values()
+    )
+    assert rep["degraded"] == sum(h.trace.n_degraded for h in handles)
+    d = eng.measured_store().io_counters()
+    assert d["abandoned_tokens"] == 0
+    assert d["retried_ios"] > 0
+
+
+# ----------------------------------------------------------- warm path ---
+def test_warm_errors_counted_not_swallowed(index_path, tmp_path):
+    """A vanished segment during warm is counted, not discarded — the
+    silent `except OSError: pass` this PR removed."""
+    import shutil
+
+    src_dir = os.path.dirname(index_path)
+    base = os.path.basename(index_path)
+    dst = str(tmp_path / base)
+    for name in os.listdir(src_dir):
+        if name.startswith(base):
+            shutil.copy(os.path.join(src_dir, name), str(tmp_path / name))
+    store = DiskRecordStore.open(dst)
+    try:
+        assert store.io_counters()["warm_errors"] == 0
+        # touch the read path first so segment fds/memmaps are open —
+        # unlinked inodes then stay readable through them
+        store._host_fetch(np.asarray([[0, 1]], np.int32))
+        for seg in store._segments:
+            os.unlink(seg.path)
+        store.warm(background=False)
+        assert store.io_counters()["warm_errors"] == len(store._segments)
+        # reads still work through the pinned inodes
+        vecs, _ = store._host_fetch(np.asarray([[0, 1]], np.int32))
+        assert np.isfinite(vecs).all()
+    finally:
+        store.close()
